@@ -1,0 +1,105 @@
+"""Paper Figs. 7/8/10 reproduction (quantified): FLQMI eta-sweep and GCMI
+retrieval behaviour on a clustered 2D ground set with a 2-cluster query set.
+
+Metrics:
+  query-relevance : mean max-similarity of each selected point to the query
+  query-coverage  : #queries whose nearest selected point is within eps
+  diversity       : mean pairwise distance among selected points
+
+Claims: FLQMI at eta=0 picks ~one point per query then saturates; higher eta
+increases query-relevance and *reduces* coverage/diversity; GCMI behaves as
+a pure retrieval function (top-similarity picks, lowest diversity).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import FLQMI, GCMI, create_kernel, naive_greedy
+
+ETAS = [0.0, 0.4, 1.0, 3.0, 10.0]
+
+
+def make_dataset(seed=0):
+    rng = np.random.default_rng(seed)
+    centers = np.array(
+        [[0, 0], [10, 0], [0, 10], [10, 10], [5, 5]], np.float32
+    )
+    ground = np.concatenate(
+        [
+            c + rng.normal(scale=0.8, size=(9, 2)).astype(np.float32)
+            for c in centers
+        ]
+    )
+    # queries near two of the clusters
+    queries = np.concatenate(
+        [
+            centers[1] + rng.normal(scale=0.5, size=(2, 2)).astype(np.float32),
+            centers[2] + rng.normal(scale=0.5, size=(2, 2)).astype(np.float32),
+        ]
+    )
+    return ground, queries
+
+
+def _metrics(ground, queries, sel):
+    pts = ground[sel]
+    dq = np.sqrt(((queries[:, None] - pts[None, :]) ** 2).sum(-1))
+    coverage = int((dq.min(axis=1) < 2.0).sum())
+    relevance = float((1.0 / (1.0 + dq.min(axis=0))).mean())
+    dp = np.sqrt(((pts[:, None] - pts[None, :]) ** 2).sum(-1))
+    diversity = float(dp[~np.eye(len(sel), dtype=bool)].mean()) if len(sel) > 1 else 0.0
+    return coverage, relevance, diversity
+
+
+def run(budget=8):
+    ground, queries = make_dataset()
+    S_qv = np.asarray(create_kernel(queries, ground, metric="euclidean"))
+    S_vq = np.asarray(create_kernel(ground, queries, metric="euclidean"))
+    rows = []
+    for eta in ETAS:
+        fn = FLQMI.build(S_qv, eta=eta)
+        res = naive_greedy(fn, budget, False, False)
+        sel = [i for i, _ in res.as_list()]
+        cov, rel, div = _metrics(ground, queries, sel)
+        gains = [g for _, g in res.as_list()]
+        rows.append(
+            {
+                "fn": f"FLQMI eta={eta}",
+                "coverage": cov,
+                "relevance": rel,
+                "diversity": div,
+                "gain_drop_after_nq": gains[len(queries)] / (gains[0] + 1e-9),
+            }
+        )
+    gc = naive_greedy(GCMI.build(S_vq, lam=0.5), budget, False, False)
+    sel = [i for i, _ in gc.as_list()]
+    cov, rel, div = _metrics(ground, queries, sel)
+    # pure-retrieval claim: GCMI's greedy == top-k by summed query similarity
+    topk = list(np.argsort(-S_vq.sum(axis=1))[:budget])
+    assert sel == [int(i) for i in topk], "GCMI must rank purely by query similarity"
+    rows.append(
+        {"fn": "GCMI", "coverage": cov, "relevance": rel, "diversity": div,
+         "gain_drop_after_nq": float("nan")}
+    )
+    return rows
+
+
+def main():
+    rows = run()
+    print("\n# Figs. 7/8/10 reproduction — FLQMI eta-sweep + GCMI retrieval")
+    print(f"{'function':16s} {'coverage':>9s} {'relevance':>10s} {'diversity':>10s} {'gain@|Q|/gain@0':>16s}")
+    for r in rows:
+        print(
+            f"{r['fn']:16s} {r['coverage']:9d} {r['relevance']:10.3f} "
+            f"{r['diversity']:10.3f} {r['gain_drop_after_nq']:16.3f}"
+        )
+    # claims
+    eta0 = rows[0]
+    assert eta0["gain_drop_after_nq"] < 0.3, "FLQMI eta=0 must saturate after |Q| picks"
+    assert rows[-2]["relevance"] >= rows[0]["relevance"] - 1e-6, "higher eta -> more query-relevant"
+    assert rows[-2]["diversity"] <= rows[0]["diversity"] + 1e-6, "higher eta -> less diverse"
+    print("claims: FLQMI saturation / eta trade-off / GCMI pure-retrieval — CONFIRMED")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Paper Table 2 reproduction: optimizer comparison on the 500-point /
+10-cluster synthetic dataset (std 4), budget 10, FacilityLocation.
+
+Reported:
+  - wall time per optimizer on THIS hardware (CPU here; the paper ran C++
+    on CPU — absolute numbers differ, the ordering is the claim)
+  - marginal-gain evaluation counts: the hardware-independent cost metric
+    (DESIGN §8.1) — naive >> stochastic > lazy-family, as in the paper
+  - achieved objective value (all four must be within a few % of greedy)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (
+    FacilityLocation,
+    create_kernel,
+    host_lazy_greedy,
+    lazier_than_lazy_greedy,
+    lazy_greedy,
+    naive_greedy,
+    stochastic_greedy,
+)
+
+
+def make_dataset(n=500, k=10, std=4.0, d=2, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(-40, 40, size=(k, d))
+    pts = centers[rng.integers(0, k, n)] + rng.normal(scale=std, size=(n, d))
+    return pts.astype(np.float32)
+
+
+def run(budget: int = 10):
+    pts = make_dataset()
+    S = np.asarray(create_kernel(pts, metric="euclidean"))
+    fn = FacilityLocation.from_kernel(S)
+    key = jax.random.PRNGKey(0)
+
+    runners = {
+        "NaiveGreedy": lambda: naive_greedy(fn, budget),
+        "StochasticGreedy": lambda: stochastic_greedy(fn, budget, key, 0.01),
+        "LazyGreedy": lambda: lazy_greedy(fn, budget),
+        "LazierThanLazyGreedy": lambda: lazier_than_lazy_greedy(
+            fn, budget, key, 0.01
+        ),
+    }
+    rows = []
+    for name, r in runners.items():
+        res = jax.block_until_ready(r())  # compile
+        t0 = time.perf_counter()
+        for _ in range(3):
+            res = jax.block_until_ready(r())
+        dt = (time.perf_counter() - t0) / 3
+        rows.append(
+            {
+                "optimizer": name,
+                "ms_per_run": dt * 1e3,
+                "gain_evals": int(res.n_evals),
+                "objective": float(res.value),
+            }
+        )
+    # the paper's faithful Minoux heap, host-side (evaluation-count reference)
+    t0 = time.perf_counter()
+    order, gains, n_evals = host_lazy_greedy(fn, budget)
+    rows.append(
+        {
+            "optimizer": "LazyGreedy(host-heap, paper-faithful)",
+            "ms_per_run": (time.perf_counter() - t0) * 1e3,
+            "gain_evals": n_evals,
+            "objective": float(sum(gains)),
+        }
+    )
+    return rows
+
+
+def main():
+    rows = run()
+    best = max(r["objective"] for r in rows)
+    print("\n# Table 2 reproduction — optimizer comparison (500 pts, 10 clusters)")
+    print(f"{'optimizer':38s} {'ms/run':>9s} {'gain evals':>11s} {'objective':>10s} {'vs best':>8s}")
+    for r in rows:
+        print(
+            f"{r['optimizer']:38s} {r['ms_per_run']:9.1f} {r['gain_evals']:11d} "
+            f"{r['objective']:10.2f} {r['objective'] / best:8.4f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

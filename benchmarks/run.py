@@ -1,0 +1,64 @@
+"""Benchmark driver — one benchmark per paper table/figure, plus the
+roofline table derived from the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Emits ``name,us_per_call,derived`` CSV lines at the end for machine
+consumption.
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    csv = []
+
+    from benchmarks import mi_bench, modeling_bench, optimizers_bench, timing_bench
+
+    t0 = time.perf_counter()
+    opt_rows = optimizers_bench.main()
+    csv.append(("optimizers_bench(table2)", (time.perf_counter() - t0) * 1e6,
+                f"best_obj={max(r['objective'] for r in opt_rows):.2f}"))
+    for r in opt_rows:
+        csv.append(
+            (f"opt/{r['optimizer'].split('(')[0]}", r["ms_per_run"] * 1e3,
+             f"evals={r['gain_evals']}")
+        )
+
+    t0 = time.perf_counter()
+    tim_rows = timing_bench.main()
+    csv.append(("timing_bench(table5)", (time.perf_counter() - t0) * 1e6,
+                f"n_max={tim_rows[-1]['n']}"))
+    for r in tim_rows:
+        csv.append((f"timing/n={r['n']}", r["total_s"] * 1e6,
+                    f"kernel_share={r['kernel_share']:.2f}"))
+
+    t0 = time.perf_counter()
+    modeling_bench.main()
+    csv.append(("modeling_bench(fig5)", (time.perf_counter() - t0) * 1e6, "claims_ok"))
+
+    t0 = time.perf_counter()
+    mi_bench.main()
+    csv.append(("mi_bench(fig7-8-10)", (time.perf_counter() - t0) * 1e6, "claims_ok"))
+
+    t0 = time.perf_counter()
+    from benchmarks import roofline
+
+    roof_rows = roofline.main()
+    csv.append(("roofline(dry-run)", (time.perf_counter() - t0) * 1e6,
+                f"cells={len(roof_rows)}"))
+    for r in roof_rows:
+        csv.append(
+            (f"roofline/{r['arch']}/{r['shape']}",
+             max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+             f"dominant={r['dominant']};roofline={r['roofline_fraction']:.3f}")
+        )
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

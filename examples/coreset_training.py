@@ -1,0 +1,87 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model for a few
+hundred steps with per-round submodular coreset selection (the paper's
+"efficient training" application), checkpointing included.
+
+Compares the final loss against a no-selection baseline on the same step
+budget: the coreset run sees a mode-balanced diet from the skewed stream.
+
+    PYTHONPATH=src python examples/coreset_training.py [--steps 200]
+"""
+import argparse
+import dataclasses
+import shutil
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import get_config  # noqa: E402
+from repro.launch.train import run  # noqa: E402
+
+
+def hundred_m_config():
+    # ~100M params: 12 layers, d_model 768, GQA 12/4 heads, tied embeddings
+    base = get_config("qwen3-0.6b")
+    return dataclasses.replace(
+        base,
+        name="qwen3-100m",
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=4,
+        head_dim=64,
+        d_ff=2048,
+        vocab=32768,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_coreset_ckpt")
+    a = ap.parse_args()
+
+    from repro.configs.base import register
+
+    register(hundred_m_config())
+    shutil.rmtree(a.ckpt_dir, ignore_errors=True)
+
+    print("== coreset run (FacilityLocation selection every 10 batches) ==")
+    sel_losses = run(
+        "qwen3-100m",
+        steps=a.steps,
+        batch=a.batch,
+        seq=a.seq,
+        select_every=10,
+        ckpt_dir=a.ckpt_dir,
+        ckpt_every=max(a.steps // 4, 1),
+        reduced=False,
+        log_every=20,
+    )
+
+    print("== baseline run (stream order, no selection) ==")
+    base_losses = run(
+        "qwen3-100m",
+        steps=a.steps,
+        batch=a.batch,
+        seq=a.seq,
+        select_every=0,
+        ckpt_dir=None,
+        reduced=False,
+        log_every=20,
+    )
+
+    k = max(a.steps // 10, 1)
+    sel_tail = sum(sel_losses[-k:]) / k
+    base_tail = sum(base_losses[-k:]) / k
+    print(f"\nfinal-loss (mean of last {k}): coreset {sel_tail:.4f}  "
+          f"baseline {base_tail:.4f}")
+    print("coreset training", "WINS" if sel_tail <= base_tail else "trails",
+          "on this stream")
+
+
+if __name__ == "__main__":
+    main()

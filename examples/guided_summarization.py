@@ -1,0 +1,85 @@
+"""Guided summarization (paper §1, §3): query-focused, privacy-preserving,
+and jointly-guided subset selection with the CG / CMI measures.
+
+A document collection (sentence embeddings, synthetic) is summarized three
+ways:
+  update summary      : FLCG — cover what's NOT in the already-seen set P
+  query-focused       : FLVMI — cover what matches the query set Q
+  joint (CMI)         : FLCMI — match Q while avoiding P
+
+    PYTHONPATH=src python examples/guided_summarization.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    FLCG,
+    FLCMI,
+    FLVMI,
+    create_kernel,
+    naive_greedy,
+)
+
+
+def make_collection(seed=0):
+    """5 topics x 12 'sentences' in embedding space."""
+    rng = np.random.default_rng(seed)
+    topics = rng.normal(scale=4.0, size=(5, 16)).astype(np.float32)
+    sents = np.concatenate(
+        [t + rng.normal(scale=0.5, size=(12, 16)).astype(np.float32) for t in topics]
+    )
+    labels = np.repeat(np.arange(5), 12)
+    return sents, labels, topics
+
+
+def topic_histogram(sel, labels):
+    h = np.bincount(labels[sel], minlength=5)
+    return " ".join(f"t{t}:{c}" for t, c in enumerate(h))
+
+
+def main():
+    sents, labels, topics = make_collection()
+    rng = np.random.default_rng(1)
+
+    # P = previously-shown summary: 4 sentences from topic 0 AND 4 from topic 1
+    p_rows = np.concatenate(
+        [np.flatnonzero(labels == 0)[:6], np.flatnonzero(labels == 1)[:6]]
+    )
+    p_emb = sents[p_rows] + rng.normal(scale=0.1, size=(12, 16)).astype(np.float32)
+    # Q = user query: topic 3
+    q_emb = (topics[3] + rng.normal(scale=0.3, size=(4, 16))).astype(np.float32)
+
+    S = np.asarray(create_kernel(sents, metric="euclidean"))
+    S_vq = np.asarray(create_kernel(sents, q_emb, metric="euclidean"))
+    S_vp = np.asarray(create_kernel(sents, p_emb, metric="euclidean"))
+    budget = 8
+
+    # CG/CMI summaries use the natural stopping rule (gain <= 0 means
+    # everything informative-given-the-guide is already covered)
+    sel_cg = [i for i, _ in naive_greedy(
+        FLCG.build(S, S_vp, nu=2.5), budget).as_list()]
+    sel_mi = [i for i, _ in naive_greedy(
+        FLVMI.build(S, S_vq, eta=1.0), budget, False, False).as_list()]
+    sel_cmi = [i for i, _ in naive_greedy(
+        FLCMI.build(S, S_vq, S_vp, eta=1.0, nu=2.5), budget
+    ).as_list()]
+
+    print("topic histogram of each guided summary (5 topics, 12 sents each):")
+    print(f"  update summary  (FLCG nu=2.5, avoid topics 0,1): {topic_histogram(sel_cg, labels)}")
+    print(f"  query-focused   (FLVMI, match Q=topic 3)   : {topic_histogram(sel_mi, labels)}")
+    print(f"  joint           (FLCMI, Q=3 minus P=0,1)   : {topic_histogram(sel_cmi, labels)}")
+
+    h_cg = np.bincount(labels[sel_cg], minlength=5)
+    h_mi = np.bincount(labels[sel_mi], minlength=5)
+    h_cmi = np.bincount(labels[sel_cmi], minlength=5)
+    assert h_cg[:2].sum() <= 1, "update summary must avoid the private topics"
+    assert h_mi[3] >= h_mi.max() - 1, "query-focused summary must favour topic 3"
+    assert h_cmi[3] >= 4 and h_cmi[:2].sum() == 0, "CMI: topic 3, never 0/1"
+    print("guided-summarization behaviour — CONFIRMED")
+
+
+if __name__ == "__main__":
+    main()

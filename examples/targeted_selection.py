@@ -1,0 +1,71 @@
+"""Targeted learning (paper §1, Figs. 7/10): augment training data with
+unlabeled-pool samples that match a *target* distribution using FLQMI —
+the query-only-kernel MI measure that needs just a (|Q| x |V|) kernel.
+
+Scenario: the model underperforms on two rare modes; we have a small query
+set from those modes and a large unlabeled pool. FLQMI picks pool items
+matching the target; we verify the precision of the retrieval and the
+eta trade-off.
+
+    PYTHONPATH=src python examples/targeted_selection.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.base import get_config  # noqa: E402
+from repro.data.pipeline import SyntheticTokens, embed_examples  # noqa: E402
+from repro.data.selection import SelectorConfig, SubmodularSelector  # noqa: E402
+from repro.models.model import init_params  # noqa: E402
+
+
+def main():
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    data = SyntheticTokens(cfg, seq_len=64, n_modes=8, seed=0)
+
+    # unlabeled pool: 128 examples across all 8 modes
+    pool_idx = list(range(128))
+    pool_emb = embed_examples(cfg, params, data.batch(pool_idx))
+
+    # target: rare modes 2 and 5 (say the model underperforms there);
+    # queries are held-out examples of those modes (disjoint index range)
+    rare = {2, 5}
+    q_idx = [i for i in range(1000, 1100) if data.mode_of(i) in rare][:6]
+    q_emb = embed_examples(cfg, params, data.batch(q_idx))
+
+    budget = 16
+    for eta in (0.0, 1.0, 4.0):
+        sel = SubmodularSelector(
+            cfg,
+            SelectorConfig(objective="targeted", budget=budget, eta=eta,
+                           use_pallas_kernel=False),
+        )
+        chosen = sel.select(pool_emb, query_emb=q_emb)
+        hits = sum(1 for i in chosen if data.mode_of(pool_idx[i]) in rare)
+        print(f"eta={eta:4.1f}: {hits}/{budget} selected items are target-mode "
+              f"(pool base rate {2 / 8:.0%})")
+
+    # distributed variant of the same selection on a (1,1) mesh — the exact
+    # program the multi-pod dry-run lowers at 512 devices
+    from repro.core import create_kernel, FLQMI
+    from repro.core.optimizers.distributed import distributed_flqmi_greedy
+    from repro.launch.mesh import make_test_mesh
+
+    S_qv = create_kernel(q_emb, pool_emb, metric="euclidean")
+    fn = FLQMI.build(S_qv, eta=1.0)
+    mesh = make_test_mesh((1, 1))
+    order, gains = distributed_flqmi_greedy(
+        S_qv, np.asarray(fn.modular), budget, mesh
+    )
+    hits = sum(1 for i in np.asarray(order) if data.mode_of(int(i)) in rare)
+    print(f"distributed FLQMI: {hits}/{budget} target-mode "
+          f"(matches serial: {list(np.asarray(order)[:5])}...)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Shared utilities: pytree dataclasses, tie-breaking argmax, concave fns."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def pytree_dataclass(cls=None, *, meta_fields: tuple[str, ...] = ()):
+    """Register a (frozen) dataclass as a JAX pytree.
+
+    ``meta_fields`` are static (hashed into the treedef); everything else is a
+    leaf/data field.
+    """
+
+    def wrap(c):
+        c = dataclasses.dataclass(frozen=True)(c)
+        data_fields = tuple(
+            f.name for f in dataclasses.fields(c) if f.name not in meta_fields
+        )
+        jax.tree_util.register_dataclass(
+            c, data_fields=data_fields, meta_fields=tuple(meta_fields)
+        )
+        return c
+
+    if cls is None:
+        return wrap
+    return wrap(cls)
+
+
+def first_argmax(x: jax.Array) -> jax.Array:
+    """Index of the first occurrence of the maximum (paper's tie rule)."""
+    return jnp.argmax(x)
+
+
+def masked_first_argmax(x: jax.Array, valid: jax.Array) -> jax.Array:
+    """First argmax over entries where ``valid`` is True."""
+    return jnp.argmax(jnp.where(valid, x, NEG_INF))
+
+
+CONCAVE_FNS: dict[str, Callable[[jax.Array], jax.Array]] = {
+    # g(0) = 0 and concave increasing on x >= 0 — paper supports log / sqrt / inverse.
+    "sqrt": lambda x: jnp.sqrt(jnp.maximum(x, 0.0)),
+    "log": lambda x: jnp.log1p(jnp.maximum(x, 0.0)),
+    "inverse": lambda x: x / (1.0 + jnp.maximum(x, 0.0)),
+}
+
+
+def get_concave(name: str) -> Callable[[jax.Array], jax.Array]:
+    if name not in CONCAVE_FNS:
+        raise ValueError(f"unknown concave fn {name!r}; choose from {sorted(CONCAVE_FNS)}")
+    return CONCAVE_FNS[name]
+
+
+def mask_from_indices(idxs: Any, n: int) -> jax.Array:
+    """(k,) int indices (possibly with -1 padding) -> (n,) bool mask."""
+    idxs = jnp.asarray(idxs, jnp.int32)
+    valid = idxs >= 0
+    return jnp.zeros((n,), bool).at[jnp.where(valid, idxs, 0)].set(valid, mode="drop")

@@ -1,0 +1,95 @@
+# The paper's primary contribution: submodular functions, submodular
+# information measures, and greedy maximizers — vectorized for TPU and
+# distributable over a multi-pod mesh (see DESIGN.md §2, §5).
+from repro.core.functions.base import SetFunction
+from repro.core.functions.clustered import clustered, cluster_mask
+from repro.core.functions.disparity import DisparityMin, DisparityMinSum, DisparitySum
+from repro.core.functions.facility_location import FacilityLocation
+from repro.core.functions.feature_based import FeatureBased
+from repro.core.functions.graph_cut import GraphCut
+from repro.core.functions.log_det import LogDet
+from repro.core.functions.set_cover import ProbabilisticSetCover, SetCover
+from repro.core.info.com import ConcaveOverModular
+from repro.core.info.combinators import (
+    ConditionedFunction,
+    DifferenceFunction,
+    generic_cg,
+    generic_cmi,
+    generic_mi,
+)
+from repro.core.info.fl import FLCG, FLCMI, FLQMI, FLVMI
+from repro.core.info.gc import GCMI, gccg, gccmi
+from repro.core.info.logdet import logdet_cg, logdet_cmi, logdet_mi
+from repro.core.info.sc import psc_cg, psc_cmi, psc_mi, sc_cg, sc_cmi, sc_mi
+from repro.core.optimizers.api import maximize
+from repro.core.optimizers.constrained import cover_greedy, knapsack_greedy
+from repro.core.optimizers.distributed import (
+    distributed_fl_greedy,
+    distributed_flqmi_greedy,
+)
+from repro.core.optimizers.greedy import (
+    GreedyResult,
+    lazier_than_lazy_greedy,
+    lazy_greedy,
+    naive_greedy,
+    stochastic_greedy,
+)
+from repro.core.optimizers.host_lazy import host_lazy_greedy
+from repro.core.similarity import (
+    build_extended_kernel,
+    create_kernel,
+    kmeans,
+    sparsify_topk,
+)
+
+__all__ = [
+    "SetFunction",
+    "FacilityLocation",
+    "GraphCut",
+    "LogDet",
+    "SetCover",
+    "ProbabilisticSetCover",
+    "FeatureBased",
+    "DisparitySum",
+    "DisparityMin",
+    "DisparityMinSum",
+    "ConcaveOverModular",
+    "clustered",
+    "cluster_mask",
+    "FLVMI",
+    "FLQMI",
+    "FLCG",
+    "FLCMI",
+    "GCMI",
+    "gccg",
+    "gccmi",
+    "logdet_mi",
+    "logdet_cg",
+    "logdet_cmi",
+    "sc_mi",
+    "sc_cg",
+    "sc_cmi",
+    "psc_mi",
+    "psc_cg",
+    "psc_cmi",
+    "generic_mi",
+    "generic_cg",
+    "generic_cmi",
+    "ConditionedFunction",
+    "DifferenceFunction",
+    "maximize",
+    "naive_greedy",
+    "lazy_greedy",
+    "stochastic_greedy",
+    "lazier_than_lazy_greedy",
+    "host_lazy_greedy",
+    "cover_greedy",
+    "knapsack_greedy",
+    "distributed_fl_greedy",
+    "distributed_flqmi_greedy",
+    "GreedyResult",
+    "create_kernel",
+    "build_extended_kernel",
+    "sparsify_topk",
+    "kmeans",
+]

@@ -1,0 +1,62 @@
+"""Set-function protocol.
+
+Every submodular (or near-submodular) function in the library is a pytree
+object exposing a *functional, memoized* interface, mirroring the paper's
+memoization design (Tables 3-4) but vectorized over the whole candidate set:
+
+  state  = fn.init_state()          # pre-computed statistics for A = {}
+  gains  = fn.gains(state)          # (n,) marginal gains f(j | A) for ALL j
+  state  = fn.update(state, j)      # A <- A + {j}, O(stat) incremental
+  value  = fn.evaluate(mask)        # f(A) from scratch (oracle, for tests)
+  value  = fn.evaluate_state(state) # f(A) from the memoized statistics
+
+Instances are pytrees so they pass through jit/shard_map; ``n`` and other
+shape-determining attributes are static meta fields.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class SetFunction:
+    """Duck-typed base; concrete functions are frozen pytree dataclasses."""
+
+    n: int  # ground-set size
+
+    # -- interface -----------------------------------------------------------
+    def init_state(self):
+        raise NotImplementedError
+
+    def gains(self, state) -> jax.Array:
+        """Marginal gains f(j|A) for every ground element j, shape (n,)."""
+        raise NotImplementedError
+
+    def gains_at(self, state, idxs: jax.Array) -> jax.Array:
+        """Gains for a subset of candidates (default: gather from full sweep).
+
+        Functions with gather-friendly statistics override this with an
+        O(k * stat) implementation used by the stochastic/lazy optimizers.
+        """
+        return self.gains(state)[idxs]
+
+    def update(self, state, j: jax.Array):
+        raise NotImplementedError
+
+    def evaluate(self, mask: jax.Array) -> jax.Array:
+        """f(A) from scratch. ``mask`` is an (n,) bool membership vector."""
+        raise NotImplementedError
+
+    def evaluate_state(self, state) -> jax.Array:
+        raise NotImplementedError
+
+    # -- helpers -------------------------------------------------------------
+    def evaluate_indices(self, idxs) -> jax.Array:
+        from repro.common import mask_from_indices
+
+        return self.evaluate(mask_from_indices(idxs, self.n))
+
+    def marginal_gain(self, mask: jax.Array, j) -> jax.Array:
+        """Oracle marginal gain f(A + j) - f(A); used by property tests."""
+        mask = jnp.asarray(mask, bool)
+        return self.evaluate(mask.at[j].set(True)) - self.evaluate(mask)

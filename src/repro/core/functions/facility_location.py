@@ -1,0 +1,67 @@
+"""Facility Location:  f(A) = sum_{i in U} max_{j in A} S_ij   (paper §2.1.1).
+
+U is the *represented* set (rows of S) which may differ from the ground set V
+(columns of S).  Memoized statistic (paper Table 3): ``curmax_i = max_{j in A}
+S_ij`` for every i in U; with it a gain query is one fused relu-reduction,
+which we evaluate for ALL candidates at once (TPU adaptation, see DESIGN §2).
+
+The per-step full-candidate gain sweep is the compute hotspot and is backed by
+the Pallas kernel in ``repro.kernels.fl_gains`` when the matrix is large.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import pytree_dataclass
+from repro.core.functions.base import SetFunction
+
+
+@pytree_dataclass(meta_fields=("n_rows",))
+class FLState:
+    curmax: jax.Array  # (n_rows,) max similarity of each represented point to A
+    n_rows: int
+
+
+@pytree_dataclass(meta_fields=("n", "use_kernel"))
+class FacilityLocation(SetFunction):
+    sim: jax.Array  # (|U|, n) similarity, rows = represented set, cols = ground set
+    n: int
+    use_kernel: bool = False  # route the gain sweep through the Pallas kernel
+
+    @staticmethod
+    def from_kernel(sim: jax.Array, use_kernel: bool = False) -> "FacilityLocation":
+        sim = jnp.asarray(sim)
+        return FacilityLocation(sim=sim, n=int(sim.shape[1]), use_kernel=use_kernel)
+
+    def init_state(self) -> FLState:
+        # f({}) = 0 with the standard convention max over empty set = 0
+        # (requires S >= 0 for monotonicity; similarity.py guarantees this).
+        return FLState(
+            curmax=jnp.zeros((self.sim.shape[0],), self.sim.dtype),
+            n_rows=int(self.sim.shape[0]),
+        )
+
+    def gains(self, state: FLState) -> jax.Array:
+        if self.use_kernel:
+            from repro.kernels import ops
+
+            return ops.fl_gains(self.sim, state.curmax)
+        return jnp.maximum(self.sim - state.curmax[:, None], 0.0).sum(axis=0)
+
+    def gains_at(self, state: FLState, idxs: jax.Array) -> jax.Array:
+        cols = self.sim[:, idxs]  # (|U|, k)
+        return jnp.maximum(cols - state.curmax[:, None], 0.0).sum(axis=0)
+
+    def update(self, state: FLState, j: jax.Array) -> FLState:
+        return FLState(
+            curmax=jnp.maximum(state.curmax, self.sim[:, j]), n_rows=state.n_rows
+        )
+
+    def evaluate(self, mask: jax.Array) -> jax.Array:
+        masked = jnp.where(mask[None, :], self.sim, 0.0)
+        best = jnp.max(masked, axis=1, initial=0.0)
+        return jnp.sum(best)
+
+    def evaluate_state(self, state: FLState) -> jax.Array:
+        return jnp.sum(state.curmax)

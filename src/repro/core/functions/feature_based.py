@@ -1,0 +1,62 @@
+"""Feature-Based function (paper §2.3.3):
+
+  f(A) = sum_{f in F} w_f * g(m_f(A)),   m_f(A) = sum_{x in A} m_f(x)
+
+with g concave in {sqrt, log, inverse}.  Memoized statistic (Table 3): the
+accumulated modular feature vector m_f(A).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import get_concave, pytree_dataclass
+from repro.core.functions.base import SetFunction
+
+
+@pytree_dataclass
+class FBState:
+    acc: jax.Array  # (F,) accumulated feature mass m_f(A)
+
+
+@pytree_dataclass(meta_fields=("n", "concave"))
+class FeatureBased(SetFunction):
+    feats: jax.Array  # (n, F) non-negative feature scores
+    w: jax.Array  # (F,)
+    n: int
+    concave: str = "sqrt"
+
+    @staticmethod
+    def from_features(
+        feats: jax.Array, w: jax.Array | None = None, concave: str = "sqrt"
+    ) -> "FeatureBased":
+        feats = jnp.maximum(jnp.asarray(feats, jnp.float32), 0.0)
+        F = feats.shape[1]
+        w = jnp.ones((F,), jnp.float32) if w is None else jnp.asarray(w, jnp.float32)
+        get_concave(concave)  # validate
+        return FeatureBased(feats=feats, w=w, n=int(feats.shape[0]), concave=concave)
+
+    def init_state(self) -> FBState:
+        return FBState(acc=jnp.zeros((self.feats.shape[1],), jnp.float32))
+
+    def gains(self, state: FBState) -> jax.Array:
+        g = get_concave(self.concave)
+        base = g(state.acc)  # (F,)
+        return (g(state.acc[None, :] + self.feats) - base[None, :]) @ self.w
+
+    def gains_at(self, state: FBState, idxs: jax.Array) -> jax.Array:
+        g = get_concave(self.concave)
+        base = g(state.acc)
+        return (g(state.acc[None, :] + self.feats[idxs]) - base[None, :]) @ self.w
+
+    def update(self, state: FBState, j: jax.Array) -> FBState:
+        return FBState(acc=state.acc + self.feats[j])
+
+    def evaluate(self, mask: jax.Array) -> jax.Array:
+        g = get_concave(self.concave)
+        acc = jnp.where(mask[:, None], self.feats, 0.0).sum(axis=0)
+        return jnp.dot(self.w, g(acc))
+
+    def evaluate_state(self, state: FBState) -> jax.Array:
+        g = get_concave(self.concave)
+        return jnp.dot(self.w, g(state.acc))

@@ -1,0 +1,89 @@
+"""Log Determinant (DPP MAP):  f(A) = log det(L_A)   (paper §2.2.2).
+
+Implementation follows the paper's note (§5.2.1): Fast Greedy MAP Inference
+[Chen et al., NeurIPS'18] via incremental Cholesky factors — but *vectorized
+over every candidate simultaneously* (TPU adaptation).  For each ground
+element i we maintain
+
+  c_i  in R^{b}    : row of the Cholesky factor of L_{A + i} restricted to A
+  d2_i in R        : squared Cholesky pivot = det(L_{A+i}) / det(L_A)
+
+so the marginal gain is  f(i|A) = log d2_i,  and adding j* updates every
+candidate with one rank-1 step:
+
+  e_i  = (L_{i,j*} - <c_i, c_{j*}>) / d_{j*}
+  c_i <- [c_i, e_i],     d2_i <- d2_i - e_i^2
+
+The candidate buffer C is pre-allocated at ``max_select`` (static), keeping
+the whole greedy loop jit-compatible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import NEG_INF, pytree_dataclass
+from repro.core.functions.base import SetFunction
+
+_EPS = 1e-12
+
+
+@pytree_dataclass
+class LogDetState:
+    C: jax.Array  # (n, max_select) candidate Cholesky rows (zero-padded)
+    d2: jax.Array  # (n,) pivot^2 for every candidate
+    count: jax.Array  # int32 number of selected items
+    value: jax.Array  # running log det
+
+
+@pytree_dataclass(meta_fields=("n", "max_select"))
+class LogDet(SetFunction):
+    L: jax.Array  # (n, n) PSD similarity kernel
+    n: int
+    max_select: int
+
+    @staticmethod
+    def from_kernel(L: jax.Array, max_select: int | None = None) -> "LogDet":
+        L = jnp.asarray(L)
+        n = int(L.shape[0])
+        return LogDet(L=L, n=n, max_select=int(max_select or n))
+
+    def init_state(self) -> LogDetState:
+        return LogDetState(
+            C=jnp.zeros((self.n, self.max_select), self.L.dtype),
+            d2=jnp.diagonal(self.L),
+            count=jnp.zeros((), jnp.int32),
+            value=jnp.zeros((), self.L.dtype),
+        )
+
+    def gains(self, state: LogDetState) -> jax.Array:
+        return jnp.where(state.d2 > _EPS, jnp.log(jnp.maximum(state.d2, _EPS)), NEG_INF)
+
+    def gains_at(self, state: LogDetState, idxs: jax.Array) -> jax.Array:
+        d2 = state.d2[idxs]
+        return jnp.where(d2 > _EPS, jnp.log(jnp.maximum(d2, _EPS)), NEG_INF)
+
+    def update(self, state: LogDetState, j: jax.Array) -> LogDetState:
+        cj = state.C[j]  # (max_select,)
+        dj = jnp.sqrt(jnp.maximum(state.d2[j], _EPS))
+        # e_i for every candidate i in one matvec:
+        e = (self.L[:, j] - state.C @ cj) / dj  # (n,)
+        C = state.C.at[:, state.count].set(e, mode="drop")
+        d2 = state.d2 - e * e
+        return LogDetState(
+            C=C,
+            d2=d2,
+            count=state.count + 1,
+            value=state.value + jnp.log(jnp.maximum(state.d2[j], _EPS)),
+        )
+
+    def evaluate(self, mask: jax.Array) -> jax.Array:
+        # log det of the masked submatrix: pad unselected rows/cols with the
+        # identity so the determinant is unchanged.
+        m = mask.astype(self.L.dtype)
+        Lm = self.L * m[:, None] * m[None, :] + jnp.diag(1.0 - m)
+        sign, logdet = jnp.linalg.slogdet(Lm)
+        return jnp.where(jnp.sum(m) > 0, logdet, 0.0)
+
+    def evaluate_state(self, state: LogDetState) -> jax.Array:
+        return state.value

@@ -1,0 +1,108 @@
+"""Set Cover and Probabilistic Set Cover (paper §2.3.1-2.3.2).
+
+SC:   f(A) = sum_u w_u * min(c_u(A), 1)     with cover matrix G (n, m) in {0,1}
+PSC:  f(A) = sum_u w_u * (1 - prod_{j in A} (1 - p_ju))
+
+Memoized statistics (Table 3): the covered-concept indicator for SC and the
+per-concept miss probability  Pbar_u = prod_{j in A}(1 - p_ju)  for PSC.
+
+The MI / CG / CMI instantiations of both (paper §5.2.2-5.2.4) are *weight /
+cover-set modifications* of the base function, so they are expressed here via
+``reweight`` constructors — exactly the implementation trick the paper uses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import pytree_dataclass
+from repro.core.functions.base import SetFunction
+
+
+@pytree_dataclass
+class SCState:
+    covered: jax.Array  # (m,) float indicator in [0, 1] of covered concepts
+
+
+@pytree_dataclass(meta_fields=("n",))
+class SetCover(SetFunction):
+    cover: jax.Array  # (n, m) binary: element i covers concept u
+    w: jax.Array  # (m,) concept weights
+    n: int
+
+    @staticmethod
+    def from_cover(cover: jax.Array, w: jax.Array | None = None) -> "SetCover":
+        cover = jnp.asarray(cover, jnp.float32)
+        m = cover.shape[1]
+        w = jnp.ones((m,), jnp.float32) if w is None else jnp.asarray(w, jnp.float32)
+        return SetCover(cover=cover, w=w, n=int(cover.shape[0]))
+
+    def init_state(self) -> SCState:
+        return SCState(covered=jnp.zeros((self.cover.shape[1],), self.cover.dtype))
+
+    def gains(self, state: SCState) -> jax.Array:
+        new = jnp.maximum(self.cover - state.covered[None, :], 0.0)  # (n, m)
+        return new @ self.w
+
+    def gains_at(self, state: SCState, idxs: jax.Array) -> jax.Array:
+        new = jnp.maximum(self.cover[idxs] - state.covered[None, :], 0.0)
+        return new @ self.w
+
+    def update(self, state: SCState, j: jax.Array) -> SCState:
+        return SCState(covered=jnp.maximum(state.covered, self.cover[j]))
+
+    def evaluate(self, mask: jax.Array) -> jax.Array:
+        cov = jnp.max(
+            jnp.where(mask[:, None], self.cover, 0.0), axis=0, initial=0.0
+        )
+        return jnp.dot(cov, self.w)
+
+    def evaluate_state(self, state: SCState) -> jax.Array:
+        return jnp.dot(state.covered, self.w)
+
+
+@pytree_dataclass
+class PSCState:
+    miss: jax.Array  # (m,) Pbar_u(A) = prod_{j in A} (1 - p_ju)
+
+
+@pytree_dataclass(meta_fields=("n",))
+class ProbabilisticSetCover(SetFunction):
+    log_miss: jax.Array  # (n, m) log(1 - p_ju), precomputed for stable products
+    w: jax.Array  # (m,)
+    n: int
+
+    @staticmethod
+    def from_probs(
+        probs: jax.Array, w: jax.Array | None = None
+    ) -> "ProbabilisticSetCover":
+        probs = jnp.clip(jnp.asarray(probs, jnp.float32), 0.0, 1.0 - 1e-7)
+        m = probs.shape[1]
+        w = jnp.ones((m,), jnp.float32) if w is None else jnp.asarray(w, jnp.float32)
+        return ProbabilisticSetCover(
+            log_miss=jnp.log1p(-probs), w=w, n=int(probs.shape[0])
+        )
+
+    @property
+    def probs(self) -> jax.Array:
+        return 1.0 - jnp.exp(self.log_miss)
+
+    def init_state(self) -> PSCState:
+        return PSCState(miss=jnp.ones((self.log_miss.shape[1],), jnp.float32))
+
+    def gains(self, state: PSCState) -> jax.Array:
+        # f(j|A) = sum_u w_u * Pbar_u(A) * p_ju
+        return self.probs @ (self.w * state.miss)
+
+    def gains_at(self, state: PSCState, idxs: jax.Array) -> jax.Array:
+        return self.probs[idxs] @ (self.w * state.miss)
+
+    def update(self, state: PSCState, j: jax.Array) -> PSCState:
+        return PSCState(miss=state.miss * jnp.exp(self.log_miss[j]))
+
+    def evaluate(self, mask: jax.Array) -> jax.Array:
+        logm = jnp.where(mask[:, None], self.log_miss, 0.0).sum(axis=0)
+        return jnp.dot(self.w, 1.0 - jnp.exp(logm))
+
+    def evaluate_state(self, state: PSCState) -> jax.Array:
+        return jnp.dot(self.w, 1.0 - state.miss)

@@ -1,0 +1,119 @@
+"""Generic MI / CG / CMI combinators (paper §3).
+
+Any submodular information measure decomposes into two primitives:
+
+  ConditionedFunction   g(A) = f(A ∪ C) - f(C)              (= CG with C = P)
+  DifferenceFunction    g(A) = f1(A) - f2(A)
+
+because  I_f(A;Q)   = f(A) - f(A|Q)                         (MI)
+         I_f(A;Q|P) = f(A|P) - f(A|Q ∪ P)                   (CMI)
+
+The base function must be built over the *extended* ground set V ∪ Q ∪ P
+(see ``similarity.build_extended_kernel``), with V at indices [0, n_v).
+These generic forms are the correctness oracles for the closed-form
+instantiations (fl.py, gc.py, logdet.py, sc.py) in the property tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import pytree_dataclass
+from repro.core.functions.base import SetFunction
+
+
+@pytree_dataclass(meta_fields=("n",))
+class ConditionedFunction(SetFunction):
+    base: SetFunction
+    cond_idx: jax.Array  # indices (in the base ground set) of C
+    n: int  # selectable prefix size n_v
+
+    @staticmethod
+    def build(base: SetFunction, cond_idx, n_select: int) -> "ConditionedFunction":
+        return ConditionedFunction(
+            base=base, cond_idx=jnp.asarray(cond_idx, jnp.int32), n=int(n_select)
+        )
+
+    def init_state(self):
+        state = self.base.init_state()
+        if self.cond_idx.shape[0]:
+
+            def body(i, s):
+                return self.base.update(s, self.cond_idx[i])
+
+            state = jax.lax.fori_loop(0, self.cond_idx.shape[0], body, state)
+        return state
+
+    def gains(self, state) -> jax.Array:
+        return self.base.gains(state)[: self.n]
+
+    def gains_at(self, state, idxs) -> jax.Array:
+        return self.base.gains_at(state, idxs)
+
+    def update(self, state, j):
+        return self.base.update(state, j)
+
+    def _cond_mask(self) -> jax.Array:
+        from repro.common import mask_from_indices
+
+        return mask_from_indices(self.cond_idx, self.base.n)
+
+    def evaluate(self, mask: jax.Array) -> jax.Array:
+        cmask = self._cond_mask()
+        full = jnp.pad(mask, (0, self.base.n - self.n)) | cmask
+        return self.base.evaluate(full) - self.base.evaluate(cmask)
+
+
+@pytree_dataclass(meta_fields=("n",))
+class DifferenceFunction(SetFunction):
+    f1: SetFunction
+    f2: SetFunction
+    n: int
+
+    @staticmethod
+    def build(f1: SetFunction, f2: SetFunction, n: int) -> "DifferenceFunction":
+        return DifferenceFunction(f1=f1, f2=f2, n=int(n))
+
+    def init_state(self):
+        return (self.f1.init_state(), self.f2.init_state())
+
+    def gains(self, state) -> jax.Array:
+        s1, s2 = state
+        return self.f1.gains(s1)[: self.n] - self.f2.gains(s2)[: self.n]
+
+    def gains_at(self, state, idxs) -> jax.Array:
+        s1, s2 = state
+        return self.f1.gains_at(s1, idxs) - self.f2.gains_at(s2, idxs)
+
+    def update(self, state, j):
+        s1, s2 = state
+        return (self.f1.update(s1, j), self.f2.update(s2, j))
+
+    def evaluate(self, mask: jax.Array) -> jax.Array:
+        m1 = jnp.pad(mask, (0, self.f1.n - self.n))
+        m2 = jnp.pad(mask, (0, self.f2.n - self.n))
+        return self.f1.evaluate(m1) - self.f2.evaluate(m2)
+
+
+def generic_mi(base: SetFunction, q_idx, n_select: int) -> DifferenceFunction:
+    """I_f(A;Q) = f(A) - f(A|Q), as a set function of A ⊆ V."""
+    return DifferenceFunction.build(
+        base, ConditionedFunction.build(base, q_idx, n_select), n_select
+    )
+
+
+def generic_cg(base: SetFunction, p_idx, n_select: int) -> ConditionedFunction:
+    """f(A|P)."""
+    return ConditionedFunction.build(base, p_idx, n_select)
+
+
+def generic_cmi(base: SetFunction, q_idx, p_idx, n_select: int) -> DifferenceFunction:
+    """I_f(A;Q|P) = f(A|P) - f(A|Q ∪ P)."""
+    qp = jnp.concatenate(
+        [jnp.asarray(q_idx, jnp.int32), jnp.asarray(p_idx, jnp.int32)]
+    )
+    return DifferenceFunction.build(
+        ConditionedFunction.build(base, p_idx, n_select),
+        ConditionedFunction.build(base, qp, n_select),
+        n_select,
+    )

@@ -1,0 +1,69 @@
+"""Set-Cover / Probabilistic-Set-Cover information measures (paper §5.2.2-4).
+
+Exactly the paper's implementation trick: each measure IS the base function
+with a modified cover set / reweighted concepts:
+
+  SCMI    = SC with concepts restricted to Γ(Q)
+  SCCG    = SC with concepts outside Γ(P)
+  SCCMI   = SC with concepts in Γ(Q) \\ Γ(P)
+  PSCMI   = PSC with weights w_u * (1 - P_u(Q))
+  PSCCG   = PSC with weights w_u * P_u(P)
+  PSCCMI  = PSC with weights w_u * (1 - P_u(Q)) * P_u(P)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.functions.set_cover import ProbabilisticSetCover, SetCover
+
+
+def _concepts_of(cover_rows: jnp.ndarray) -> jnp.ndarray:
+    """(k, m) cover rows -> (m,) indicator of concepts covered by the set."""
+    return jnp.max(jnp.asarray(cover_rows, jnp.float32), axis=0, initial=0.0)
+
+
+def sc_mi(cover: jnp.ndarray, w: jnp.ndarray, cover_q: jnp.ndarray) -> SetCover:
+    keep = _concepts_of(cover_q)
+    return SetCover.from_cover(cover, jnp.asarray(w) * keep)
+
+
+def sc_cg(cover: jnp.ndarray, w: jnp.ndarray, cover_p: jnp.ndarray) -> SetCover:
+    drop = _concepts_of(cover_p)
+    return SetCover.from_cover(cover, jnp.asarray(w) * (1.0 - drop))
+
+
+def sc_cmi(
+    cover: jnp.ndarray, w: jnp.ndarray, cover_q: jnp.ndarray, cover_p: jnp.ndarray
+) -> SetCover:
+    keep = _concepts_of(cover_q) * (1.0 - _concepts_of(cover_p))
+    return SetCover.from_cover(cover, jnp.asarray(w) * keep)
+
+
+def _miss(probs_rows: jnp.ndarray) -> jnp.ndarray:
+    """(k, m) membership probabilities -> (m,) P_u(set) = prod (1 - p)."""
+    return jnp.prod(1.0 - jnp.asarray(probs_rows, jnp.float32), axis=0)
+
+
+def psc_mi(
+    probs: jnp.ndarray, w: jnp.ndarray, probs_q: jnp.ndarray
+) -> ProbabilisticSetCover:
+    return ProbabilisticSetCover.from_probs(
+        probs, jnp.asarray(w) * (1.0 - _miss(probs_q))
+    )
+
+
+def psc_cg(
+    probs: jnp.ndarray, w: jnp.ndarray, probs_p: jnp.ndarray
+) -> ProbabilisticSetCover:
+    return ProbabilisticSetCover.from_probs(probs, jnp.asarray(w) * _miss(probs_p))
+
+
+def psc_cmi(
+    probs: jnp.ndarray,
+    w: jnp.ndarray,
+    probs_q: jnp.ndarray,
+    probs_p: jnp.ndarray,
+) -> ProbabilisticSetCover:
+    return ProbabilisticSetCover.from_probs(
+        probs, jnp.asarray(w) * (1.0 - _miss(probs_q)) * _miss(probs_p)
+    )

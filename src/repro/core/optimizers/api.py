@@ -1,0 +1,64 @@
+"""submodlib-style ``maximize`` entry point (paper §7).
+
+    greedy_list = maximize(fn, budget=10, optimizer="NaiveGreedy")
+
+returns [(index, gain), ...] exactly like submodlib's f.maximize().
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.optimizers.greedy import (
+    GreedyResult,
+    lazier_than_lazy_greedy,
+    lazy_greedy,
+    naive_greedy,
+    stochastic_greedy,
+)
+
+_OPTIMIZERS = {
+    "NaiveGreedy": lambda fn, b, kw: naive_greedy(
+        fn, b, kw.get("stopIfZeroGain", True), kw.get("stopIfNegativeGain", True)
+    ),
+    "LazyGreedy": lambda fn, b, kw: lazy_greedy(
+        fn,
+        b,
+        kw.get("screen_k", 8),
+        kw.get("stopIfZeroGain", True),
+        kw.get("stopIfNegativeGain", True),
+    ),
+    "StochasticGreedy": lambda fn, b, kw: stochastic_greedy(
+        fn,
+        b,
+        kw.get("key", jax.random.PRNGKey(kw.get("seed", 0))),
+        kw.get("epsilon", 0.01),
+        kw.get("sample_size", None),
+        kw.get("stopIfZeroGain", True),
+        kw.get("stopIfNegativeGain", True),
+    ),
+    "LazierThanLazyGreedy": lambda fn, b, kw: lazier_than_lazy_greedy(
+        fn,
+        b,
+        kw.get("key", jax.random.PRNGKey(kw.get("seed", 0))),
+        kw.get("epsilon", 0.01),
+        kw.get("sample_size", None),
+        kw.get("screen_k", 8),
+        kw.get("stopIfZeroGain", True),
+        kw.get("stopIfNegativeGain", True),
+    ),
+}
+
+
+def maximize(
+    fn,
+    budget: int,
+    optimizer: str = "NaiveGreedy",
+    return_result: bool = False,
+    **kwargs,
+) -> list | GreedyResult:
+    if optimizer not in _OPTIMIZERS:
+        raise ValueError(
+            f"unknown optimizer {optimizer!r}; choose from {sorted(_OPTIMIZERS)}"
+        )
+    result = _OPTIMIZERS[optimizer](fn, budget, kwargs)
+    return result if return_result else result.as_list()

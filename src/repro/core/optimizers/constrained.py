@@ -1,0 +1,96 @@
+"""Problem 2 (Submodular Cover) and knapsack-constrained greedy (paper §2).
+
+cover_greedy:    min |X| (or cost) s.t. f(X) >= c        [Wolsey '82]
+knapsack_greedy: max f(X) s.t. sum cost <= b             [Sviridenko '04,
+                 cost-ratio rule + best-feasible-singleton safeguard]
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import NEG_INF, pytree_dataclass
+from repro.core.optimizers.greedy import GreedyResult, _tree_where
+
+
+@partial(jax.jit, static_argnums=(2,))
+def cover_greedy(fn, coverage: jax.Array, max_steps: int, costs=None) -> GreedyResult:
+    """Greedily add the max gain-per-cost element until f(X) >= coverage."""
+    n = fn.n
+    costs_arr = jnp.ones((n,), jnp.float32) if costs is None else jnp.asarray(costs)
+    state = fn.init_state()
+
+    def body(i, carry):
+        state, selected, order, gains, value, done = carry
+        g = jnp.where(selected, NEG_INF, fn.gains(state))
+        ratio = g / costs_arr
+        j = jnp.argmax(ratio)
+        gj = g[j]
+        stop = done | (value >= coverage) | (gj <= 0.0)
+        take = ~stop
+        new_state = fn.update(state, j)
+        state = _tree_where(take, new_state, state)
+        selected = selected.at[j].set(selected[j] | take)
+        order = order.at[i].set(jnp.where(take, j, -1))
+        gains = gains.at[i].set(jnp.where(take, gj, 0.0))
+        value = value + jnp.where(take, gj, 0.0)
+        return state, selected, order, gains, value, stop
+
+    carry = (
+        state,
+        jnp.zeros((n,), bool),
+        jnp.full((max_steps,), -1, jnp.int32),
+        jnp.zeros((max_steps,), jnp.float32),
+        jnp.zeros(()),
+        jnp.zeros((), bool),
+    )
+    state, selected, order, gains, value, _ = jax.lax.fori_loop(
+        0, max_steps, body, carry
+    )
+    return GreedyResult(
+        order=order, gains=gains, n_evals=jnp.asarray(max_steps * n, jnp.int32),
+        value=value,
+    )
+
+
+@partial(jax.jit, static_argnums=(2,))
+def knapsack_greedy(fn, budget: jax.Array, max_steps: int, costs=None) -> GreedyResult:
+    """Cost-ratio greedy under a knapsack budget sum(cost) <= b."""
+    n = fn.n
+    costs_arr = jnp.ones((n,), jnp.float32) if costs is None else jnp.asarray(costs)
+    state = fn.init_state()
+
+    def body(i, carry):
+        state, selected, spent, order, gains, done = carry
+        g = fn.gains(state)
+        feasible = (~selected) & (spent + costs_arr <= budget)
+        ratio = jnp.where(feasible, g / costs_arr, NEG_INF)
+        j = jnp.argmax(ratio)
+        gj = g[j]
+        stop = done | (~feasible[j]) | (gj <= 0.0)
+        take = ~stop
+        new_state = fn.update(state, j)
+        state = _tree_where(take, new_state, state)
+        selected = selected.at[j].set(selected[j] | take)
+        spent = spent + jnp.where(take, costs_arr[j], 0.0)
+        order = order.at[i].set(jnp.where(take, j, -1))
+        gains = gains.at[i].set(jnp.where(take, gj, 0.0))
+        return state, selected, spent, order, gains, stop
+
+    carry = (
+        state,
+        jnp.zeros((n,), bool),
+        jnp.zeros(()),
+        jnp.full((max_steps,), -1, jnp.int32),
+        jnp.zeros((max_steps,), jnp.float32),
+        jnp.zeros((), bool),
+    )
+    state, selected, spent, order, gains, _ = jax.lax.fori_loop(
+        0, max_steps, body, carry
+    )
+    return GreedyResult(
+        order=order, gains=gains, n_evals=jnp.asarray(max_steps * n, jnp.int32),
+        value=gains.sum(),
+    )

@@ -1,0 +1,293 @@
+"""Greedy maximizers (paper §5.3), jit-compatible.
+
+All optimizers return a :class:`GreedyResult` with a fixed-size ``order``
+buffer (-1 padded once stopping criteria fire), the per-step gains, and the
+number of marginal-gain evaluations performed (the hardware-independent cost
+metric used to reproduce the paper's Table 2 ordering; see DESIGN §8.1).
+
+Tie-breaking matches the paper: the *first* best element is added.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import NEG_INF, pytree_dataclass
+
+
+@pytree_dataclass
+class GreedyResult:
+    order: jax.Array  # (budget,) int32 selected indices, -1 once stopped
+    gains: jax.Array  # (budget,) float marginal gains (0 once stopped)
+    n_evals: jax.Array  # int32 total marginal-gain evaluations
+    value: jax.Array  # f(A) of the returned set (telescoped gains)
+
+    def as_list(self):
+        """[(index, gain), ...] like submodlib's maximize() return value."""
+        order = jax.device_get(self.order)
+        gains = jax.device_get(self.gains)
+        return [(int(i), float(g)) for i, g in zip(order, gains) if i >= 0]
+
+
+def _tree_where(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def _should_stop(gj, stop_if_zero: bool, stop_if_negative: bool):
+    stop = jnp.zeros((), bool)
+    if stop_if_zero:
+        stop |= gj <= 0.0
+    if stop_if_negative:
+        stop |= gj < 0.0
+    return stop
+
+
+@partial(jax.jit, static_argnums=(1, 2, 3))
+def naive_greedy(
+    fn,
+    budget: int,
+    stop_if_zero: bool = True,
+    stop_if_negative: bool = True,
+) -> GreedyResult:
+    """Standard greedy [Nemhauser et al. '78]: full gain sweep per step.
+
+    On TPU the sweep is a single fused pass over the memoized statistics —
+    the vectorized adaptation of the paper's per-element loop (DESIGN §2).
+    """
+    n = fn.n
+    state = fn.init_state()
+
+    def body(i, carry):
+        state, selected, order, gains, evals, done = carry
+        g = jnp.where(selected, NEG_INF, fn.gains(state))
+        j = jnp.argmax(g)
+        gj = g[j]
+        stop = done | _should_stop(gj, stop_if_zero, stop_if_negative)
+        take = ~stop
+        new_state = fn.update(state, j)
+        state = _tree_where(take, new_state, state)
+        selected = selected.at[j].set(selected[j] | take)
+        order = order.at[i].set(jnp.where(take, j, -1))
+        gains = gains.at[i].set(jnp.where(take, gj, 0.0))
+        evals = evals + jnp.where(done, 0, n)
+        return state, selected, order, gains, evals, stop
+
+    carry = (
+        state,
+        jnp.zeros((n,), bool),
+        jnp.full((budget,), -1, jnp.int32),
+        jnp.zeros((budget,), jnp.float32),
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), bool),
+    )
+    state, selected, order, gains, evals, _ = jax.lax.fori_loop(0, budget, body, carry)
+    return GreedyResult(order=order, gains=gains, n_evals=evals, value=gains.sum())
+
+
+@partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def lazy_greedy(
+    fn,
+    budget: int,
+    screen_k: int = 8,
+    stop_if_zero: bool = True,
+    stop_if_negative: bool = True,
+) -> GreedyResult:
+    """Bound-screened greedy — the TPU adaptation of Minoux's accelerated
+    (lazy) greedy [paper §5.3.2; DESIGN §2].
+
+    A dense vector ``ub`` of stale upper bounds replaces the priority queue
+    (valid by submodularity: gains only shrink as A grows).  Each step
+    re-evaluates the true gain for only the ``screen_k`` candidates with the
+    largest stale bounds; the winner is accepted iff it beats every other
+    stale bound, otherwise the step falls back to a full sweep (which also
+    refreshes all bounds).  Identical output to naive_greedy, far fewer gain
+    evaluations on peaked gain distributions.
+    """
+    n = fn.n
+    k = min(screen_k, n)
+    state = fn.init_state()
+    ub0 = fn.gains(state)
+
+    def body(i, carry):
+        state, selected, ub, order, gains, evals, done = carry
+        ubm = jnp.where(selected, NEG_INF, ub)
+        top_vals, top_idx = jax.lax.top_k(ubm, k)
+        true_g = fn.gains_at(state, top_idx)
+        ub2 = ubm.at[top_idx].set(true_g)
+        best_i = jnp.argmax(true_g)
+        j_screen, g_screen = top_idx[best_i], true_g[best_i]
+        rest_max = jnp.max(ub2.at[top_idx].set(NEG_INF))
+        ok = g_screen >= rest_max - 1e-6
+
+        def full_sweep(_):
+            g_all = jnp.where(selected, NEG_INF, fn.gains(state))
+            j = jnp.argmax(g_all)
+            return j, g_all[j], g_all, jnp.int32(n)
+
+        def accept(_):
+            return j_screen, g_screen, ub2, jnp.int32(k)
+
+        j, gj, ub_new, cost = jax.lax.cond(ok, accept, full_sweep, None)
+        stop = done | _should_stop(gj, stop_if_zero, stop_if_negative)
+        take = ~stop
+        new_state = fn.update(state, j)
+        state = _tree_where(take, new_state, state)
+        selected = selected.at[j].set(selected[j] | take)
+        ub = jnp.where(selected, NEG_INF, ub_new)
+        order = order.at[i].set(jnp.where(take, j, -1))
+        gains = gains.at[i].set(jnp.where(take, gj, 0.0))
+        evals = evals + jnp.where(done, 0, cost)
+        return state, selected, ub, order, gains, evals, stop
+
+    carry = (
+        state,
+        jnp.zeros((n,), bool),
+        ub0,
+        jnp.full((budget,), -1, jnp.int32),
+        jnp.zeros((budget,), jnp.float32),
+        jnp.asarray(n, jnp.int32),  # the initial bound sweep
+        jnp.zeros((), bool),
+    )
+    out = jax.lax.fori_loop(0, budget, body, carry)
+    state, selected, ub, order, gains, evals, _ = out
+    return GreedyResult(order=order, gains=gains, n_evals=evals, value=gains.sum())
+
+
+def _sample_unselected(key, selected, size):
+    """Uniform random ``size``-subset of unselected indices (Gumbel top-k)."""
+    z = jax.random.uniform(key, selected.shape)
+    z = jnp.where(selected, -1.0, z)
+    return jax.lax.top_k(z, size)[1]
+
+
+@partial(jax.jit, static_argnums=(1, 3, 4, 5, 6))
+def stochastic_greedy(
+    fn,
+    budget: int,
+    key: jax.Array | None = None,
+    epsilon: float = 0.01,
+    sample_size: int | None = None,
+    stop_if_zero: bool = True,
+    stop_if_negative: bool = True,
+) -> GreedyResult:
+    """Stochastic greedy [Mirzasoleiman et al. '15] (paper §5.3.3): each step
+    evaluates gains on a random (n/b) log(1/eps) subsample of the remaining
+    ground set. Linear total running time independent of budget, 1-1/e-eps in
+    expectation."""
+    import math
+
+    n = fn.n
+    key = jax.random.PRNGKey(0) if key is None else key
+    s = sample_size or max(1, min(n, int(math.ceil(n / budget * math.log(1.0 / epsilon)))))
+    state = fn.init_state()
+
+    def body(i, carry):
+        state, selected, order, gains, evals, done = carry
+        subkey = jax.random.fold_in(key, i)
+        cand = _sample_unselected(subkey, selected, s)
+        g = fn.gains_at(state, cand)
+        # guard: sampled entries that are actually selected (when fewer than s
+        # unselected remain) are masked out
+        g = jnp.where(selected[cand], NEG_INF, g)
+        bi = jnp.argmax(g)
+        j, gj = cand[bi], g[bi]
+        stop = done | _should_stop(gj, stop_if_zero, stop_if_negative)
+        take = ~stop
+        new_state = fn.update(state, j)
+        state = _tree_where(take, new_state, state)
+        selected = selected.at[j].set(selected[j] | take)
+        order = order.at[i].set(jnp.where(take, j, -1))
+        gains = gains.at[i].set(jnp.where(take, gj, 0.0))
+        evals = evals + jnp.where(done, 0, s)
+        return state, selected, order, gains, evals, stop
+
+    carry = (
+        state,
+        jnp.zeros((n,), bool),
+        jnp.full((budget,), -1, jnp.int32),
+        jnp.zeros((budget,), jnp.float32),
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), bool),
+    )
+    state, selected, order, gains, evals, _ = jax.lax.fori_loop(0, budget, body, carry)
+    return GreedyResult(order=order, gains=gains, n_evals=evals, value=gains.sum())
+
+
+@partial(jax.jit, static_argnums=(1, 3, 4, 5, 6, 7))
+def lazier_than_lazy_greedy(
+    fn,
+    budget: int,
+    key: jax.Array | None = None,
+    epsilon: float = 0.01,
+    sample_size: int | None = None,
+    screen_k: int = 8,
+    stop_if_zero: bool = True,
+    stop_if_negative: bool = True,
+) -> GreedyResult:
+    """Random sampling + lazy evaluation [Mirzasoleiman et al. '15]
+    (paper §5.3.4): per step, draw the stochastic-greedy subsample, then apply
+    the stale-bound screen *within the sample* — evaluating true gains only on
+    the sample's top-``screen_k`` bounds, falling back to the whole sample on
+    a bound violation."""
+    import math
+
+    n = fn.n
+    key = jax.random.PRNGKey(0) if key is None else key
+    s = sample_size or max(1, min(n, int(math.ceil(n / budget * math.log(1.0 / epsilon)))))
+    k = min(screen_k, s)
+    state = fn.init_state()
+    ub0 = fn.gains(state)
+
+    def body(i, carry):
+        state, selected, ub, order, gains, evals, done = carry
+        subkey = jax.random.fold_in(key, i)
+        cand = _sample_unselected(subkey, selected, s)  # (s,)
+        ub_cand = jnp.where(selected[cand], NEG_INF, ub[cand])
+        top_vals, top_pos = jax.lax.top_k(ub_cand, k)
+        top_idx = cand[top_pos]
+        true_g = fn.gains_at(state, top_idx)
+        true_g = jnp.where(selected[top_idx], NEG_INF, true_g)
+        bi = jnp.argmax(true_g)
+        j_screen, g_screen = top_idx[bi], true_g[bi]
+        rest_max = jnp.max(ub_cand.at[top_pos].set(NEG_INF))
+        ok = g_screen >= rest_max - 1e-6
+
+        def sample_sweep(_):
+            g = fn.gains_at(state, cand)
+            g = jnp.where(selected[cand], NEG_INF, g)
+            b = jnp.argmax(g)
+            return cand[b], g[b], g, jnp.int32(s)
+
+        def accept(_):
+            # refresh bounds only for the screened entries; the rest keep
+            # their stale (still valid) bounds
+            g = ub_cand.at[top_pos].set(true_g)
+            return j_screen, g_screen, g, jnp.int32(k)
+
+        j, gj, upd_g, cost = jax.lax.cond(ok, accept, sample_sweep, None)
+        ub = ub.at[cand].set(upd_g)
+        stop = done | _should_stop(gj, stop_if_zero, stop_if_negative)
+        take = ~stop
+        new_state = fn.update(state, j)
+        state = _tree_where(take, new_state, state)
+        selected = selected.at[j].set(selected[j] | take)
+        order = order.at[i].set(jnp.where(take, j, -1))
+        gains = gains.at[i].set(jnp.where(take, gj, 0.0))
+        evals = evals + jnp.where(done, 0, cost)
+        return state, selected, ub, order, gains, evals, stop
+
+    carry = (
+        state,
+        jnp.zeros((n,), bool),
+        ub0,
+        jnp.full((budget,), -1, jnp.int32),
+        jnp.zeros((budget,), jnp.float32),
+        jnp.asarray(n, jnp.int32),
+        jnp.zeros((), bool),
+    )
+    out = jax.lax.fori_loop(0, budget, body, carry)
+    state, selected, ub, order, gains, evals, _ = out
+    return GreedyResult(order=order, gains=gains, n_evals=evals, value=gains.sum())

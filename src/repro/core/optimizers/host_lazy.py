@@ -1,0 +1,48 @@
+"""Faithful Minoux accelerated-greedy (paper §5.3.2) on the host.
+
+This is the literal priority-queue algorithm the paper's C++ engine runs —
+kept as the reference implementation for the evaluation-count comparison in
+``benchmarks/optimizers_bench.py`` (the hardware-independent reproduction of
+Table 2; see DESIGN §8.1).  The production path is the jit'd bound-screened
+variant in greedy.py.
+"""
+from __future__ import annotations
+
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def host_lazy_greedy(
+    fn,
+    budget: int,
+    stop_if_zero: bool = True,
+    stop_if_negative: bool = True,
+):
+    """Returns (order, gains, n_evals)."""
+    state = fn.init_state()
+    ub = np.asarray(jax.device_get(fn.gains(state)), np.float64)
+    n_evals = int(ub.shape[0])
+    # max-heap of (-upper_bound, index, fresh_at_size)
+    heap = [(-ub[i], i, 0) for i in range(ub.shape[0])]
+    heapq.heapify(heap)
+    order, gains = [], []
+    while len(order) < budget and heap:
+        neg_ub, j, fresh_at = heapq.heappop(heap)
+        if fresh_at == len(order):
+            g = -neg_ub  # bound is exact for the current set
+        else:
+            g = float(fn.gains_at(state, jnp.asarray([j]))[0])
+            n_evals += 1
+            # push back unless it still tops the heap
+            if heap and -heap[0][0] > g + 1e-12:
+                heapq.heappush(heap, (-g, j, len(order)))
+                continue
+        if (stop_if_zero and g <= 0.0) or (stop_if_negative and g < 0.0):
+            break
+        state = fn.update(state, jnp.asarray(j))
+        order.append(j)
+        gains.append(g)
+    return order, gains, n_evals

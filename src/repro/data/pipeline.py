@@ -1,0 +1,88 @@
+"""Data pipeline: synthetic deterministic token stream + the paper's
+technique as a first-class stage — submodular coreset / targeted selection
+over example embeddings (DESIGN §2 'what the framework adds')."""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+class SyntheticTokens:
+    """Deterministic clustered token stream.
+
+    Examples are drawn from ``n_modes`` latent modes (each mode = a Zipf-ish
+    distribution over a vocab slice) so that subset selection has real
+    structure to exploit: a representative coreset covers the modes."""
+
+    def __init__(self, cfg: ArchConfig, seq_len: int, n_modes: int = 16, seed: int = 0):
+        self.cfg = cfg
+        self.seq_len = seq_len
+        self.n_modes = n_modes
+        self.seed = seed
+
+    def example(self, idx: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed * 1_000_003 + idx)
+        mode = idx % self.n_modes
+        lo = (self.cfg.vocab * mode) // self.n_modes
+        hi = (self.cfg.vocab * (mode + 1)) // self.n_modes
+        # Zipf-ish: most mass on a few mode-anchor tokens, then the mode's
+        # vocab slice, then global noise — gives the selection objectives a
+        # strong mode signal in embedding space
+        anchor_rng = np.random.default_rng(self.seed * 7919 + mode)
+        anchors = anchor_rng.integers(lo, hi, 8)
+        tok_anchor = anchors[rng.integers(0, 8, self.seq_len)]
+        tok_local = rng.integers(lo, hi, self.seq_len)
+        tok_noise = rng.integers(0, self.cfg.vocab, self.seq_len)
+        u = rng.random(self.seq_len)
+        return np.where(
+            u < 0.7, tok_anchor, np.where(u < 0.9, tok_local, tok_noise)
+        ).astype(np.int32)
+
+    def mode_of(self, idx: int) -> int:
+        return idx % self.n_modes
+
+    def batch(self, indices) -> dict:
+        toks = np.stack([self.example(int(i)) for i in indices])
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.family == "audio":
+            rng = np.random.default_rng(self.seed + 7)
+            batch["frames"] = jnp.asarray(
+                rng.normal(size=(len(indices), self.cfg.enc_positions, self.cfg.d_model)),
+                jnp.float32,
+            )
+        if self.cfg.family == "vlm":
+            rng = np.random.default_rng(self.seed + 11)
+            batch["patches"] = jnp.asarray(
+                rng.normal(size=(len(indices), self.cfg.n_patches, self.cfg.d_model)),
+                jnp.float32,
+            )
+        return batch
+
+    def stream(self, batch_size: int, start: int = 0) -> Iterator[dict]:
+        i = start
+        while True:
+            yield self.batch(range(i, i + batch_size))
+            i += batch_size
+
+
+def embed_examples(cfg: ArchConfig, params, batch) -> jax.Array:
+    """Mean-pooled final hidden states — the selection feature space.
+
+    Architecture-agnostic: works for every assigned arch, which is why the
+    paper's technique applies to all 10 (DESIGN §4)."""
+    from repro.models.model import _backbone, _embed, _whisper_encode  # noqa
+
+    tokens = batch["tokens"]
+    B, L = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    if cfg.family == "audio":
+        enc = _whisper_encode(cfg, params, batch["frames"])
+        return enc.mean(axis=1).astype(jnp.float32)
+    x = _embed(cfg, params, tokens)
+    x = _backbone(cfg, params, x, positions)
+    return x.mean(axis=1).astype(jnp.float32)

@@ -1,0 +1,72 @@
+"""Activation-sharding hints.
+
+Model code calls ``constrain(x, role_spec)`` at layer boundaries; when a mesh
+context is active (set by launch/dryrun/train), roles resolve to mesh axes
+and become with_sharding_constraint; otherwise they are no-ops (CPU unit
+tests never see a mesh).
+
+Roles: "dp" -> the data axes ("pod","data"), "tp" -> "model", None -> leave.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_CTX: dict | None = None
+
+
+@contextlib.contextmanager
+def activation_sharding(
+    mesh: jax.sharding.Mesh, enable: bool = True, policy: str = "fsdp"
+):
+    global _CTX
+    from repro.distributed.sharding import data_axes
+
+    prev = _CTX
+    dp = data_axes(mesh)
+    all_axes = tuple(dp) + ("model",)
+    _CTX = (
+        {
+            # pure-DP policy: the batch carries every axis; no TP roles
+            "dp": all_axes
+            if policy == "dp"
+            else (dp if len(dp) > 1 else (dp[0] if dp else None)),
+            "tp": None if policy == "dp" else "model",
+            "dptp": all_axes,
+            "mesh": mesh,
+        }
+        if enable
+        else None
+    )
+    try:
+        yield
+    finally:
+        _CTX = prev
+
+
+def tp_size() -> int:
+    """Size of the model axis in the active context (1 when no mesh or when
+    the pure-DP policy disabled TP roles)."""
+    if _CTX is None or _CTX["tp"] is None:
+        return 1
+    return _CTX["mesh"].shape["model"]
+
+
+def constrain(x: jax.Array, roles: Sequence[str | None]) -> jax.Array:
+    """roles: one entry per dim of x, each "dp" | "tp" | None. Axes that do
+    not divide the dim are dropped (same padding rule as param shardings)."""
+    if _CTX is None:
+        return x
+    from repro.distributed.sharding import axis_size
+
+    mesh = _CTX["mesh"]
+    entries = []
+    for r, dim in zip(roles, x.shape):
+        entry = _CTX.get(r) if r else None
+        if entry is not None and dim % axis_size(mesh, entry) != 0:
+            entry = None
+        entries.append(entry)
+    return jax.lax.with_sharding_constraint(x, P(*entries))

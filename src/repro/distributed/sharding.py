@@ -1,0 +1,222 @@
+"""Per-architecture sharding rules (DESIGN §5).
+
+2-D sharding: weight input-dims shard over the data axes (FSDP / ZeRO-3
+storage) and output-dims over "model" (Megatron TP); experts shard over
+"model" (EP).  Rules are keyed on the leaf name in the param pytree; stacked
+layer dims (scan) get a leading None automatically.  GSPMD pads uneven
+dims (e.g. vocab 51865, kv-heads 8 on a 16-way axis) transparently — noted
+as a baseline inefficiency in EXPERIMENTS §Perf.
+
+``dp`` below is ("data",) on the single-pod mesh and ("pod", "data") on the
+multi-pod mesh: the pod axis simply widens FSDP/batch sharding, which keeps
+all cross-pod traffic in the gradient/weight all-reduce class.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+TP = "model"
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _param_rules(dp) -> dict[str, P]:
+    return {
+        # embeddings / heads
+        "embed": P(TP, dp),
+        "lm_head": P(dp, TP),
+        "patch_proj": P(dp, TP),
+        # attention (GQA)
+        "wq": P(dp, TP),
+        "wk": P(dp, TP),
+        "wv": P(dp, TP),
+        "wo": P(TP, dp),
+        "bq": P(TP),
+        "bk": P(TP),
+        "bv": P(TP),
+        "bo": P(None),
+        # attention (MLA)
+        "w_dkv": P(dp, None),
+        "w_krope": P(dp, None),
+        "w_dq": P(dp, None),
+        "w_uq": P(None, TP, None),
+        "w_uk": P(None, TP, None),
+        "w_uv": P(None, TP, None),
+        # ffn
+        "w_gate": P(dp, TP),
+        "w_up": P(dp, TP),
+        "w_down": P(TP, dp),
+        "w_in": P(dp, TP),
+        "w_out": P(TP, dp),
+        "b_in": P(TP),
+        "b_out": P(None),
+        # moe
+        "router": P(dp, None),
+        "shared_gate": P(dp, TP),
+        "shared_up": P(dp, TP),
+        "shared_down": P(TP, dp),
+        # mamba
+        "in_proj": P(dp, TP),
+        "conv_w": P(None, TP),
+        "out_proj": P(TP, dp),
+        "dt_bias": P(TP),
+        "A_log": P(TP),
+        "D": P(TP),
+        "norm": P(TP),
+    }
+
+
+_MOE_EXPERT_RULES = {
+    # experts: EP over model, FSDP over data on the d_model dim
+    "w_gate": lambda dp: P(TP, dp, None),
+    "w_up": lambda dp: P(TP, dp, None),
+    "w_down": lambda dp: P(TP, None, dp),
+}
+
+
+def axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def filter_divisible(spec: P, shape, mesh: Mesh) -> P:
+    """Explicit in_shardings require exact divisibility — drop axes that
+    don't divide the dim (recorded as a padding/replication inefficiency in
+    EXPERIMENTS §Perf)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is not None and shape[i] % axis_size(mesh, entry) != 0:
+            out.append(None)
+        else:
+            out.append(entry)
+    return P(*out)
+
+
+def _leaf_spec(path, leaf, dp, mesh) -> P:
+    names = [getattr(k, "key", str(k)) for k in path]
+    name = names[-1]
+    parent = names[-2] if len(names) > 1 else ""
+    rules = _param_rules(dp)
+    if parent == "moe" and name in _MOE_EXPERT_RULES:
+        spec = _MOE_EXPERT_RULES[name](dp)
+    elif name == "wo_mla":
+        spec = P(TP, None, dp)  # (H, hd, D)
+    elif name in rules:
+        spec = rules[name]
+    else:
+        spec = P()  # norms, biases, scalars -> replicate
+    # stacked layer/period dims: prepend None for the extra leading dims
+    extra = leaf.ndim - len(spec)
+    if extra > 0:
+        spec = P(*([None] * extra), *spec)
+    elif extra < 0:
+        spec = P(*spec[-leaf.ndim:]) if leaf.ndim else P()
+    return filter_divisible(spec, leaf.shape, mesh)
+
+
+# --- parallelization policy ------------------------------------------------
+# "fsdp": 2-D FSDP x TP weight sharding (default; required >= ~10B params)
+# "dp"  : pure data parallelism for small archs — weights REPLICATED for
+#         compute (no per-layer weight gathers), optimizer moments kept
+#         sharded (ZeRO-1), batch sharded over every mesh axis.
+#         §Perf-2 hillclimb: on a 242M-param arch this removed ~99.7% of the
+#         per-step collective bytes.
+
+DP_POLICY_MAX_BYTES = 2.5e9  # replicated bf16 weights must fit comfortably
+
+
+def auto_policy(params_total: int) -> str:
+    return "dp" if params_total * 2 <= DP_POLICY_MAX_BYTES else "fsdp"
+
+
+def _under_opt_state(path) -> bool:
+    names = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+    return any(n in ("m", "v", "residual") for n in names)
+
+
+def param_specs(params: Any, mesh: Mesh, policy: str = "fsdp"):
+    """PartitionSpec pytree for a param (or optimizer-state) pytree."""
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def leaf_spec(path, leaf):
+        if policy == "dp" and not _under_opt_state(path):
+            return P(*([None] * leaf.ndim))  # replicated compute weights
+        return _leaf_spec(path, leaf, dp, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def param_shardings(params: Any, mesh: Mesh, policy: str = "fsdp"):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), param_specs(params, mesh, policy)
+    )
+
+
+def batch_specs(batch: Any, mesh: Mesh, shard_batch: bool = True,
+                policy: str = "fsdp"):
+    """Inputs: batch dim over the data axes (pure-DP policy: over every axis
+    that divides), everything else replicated."""
+    dp = data_axes(mesh)
+    dp_s = dp if len(dp) > 1 else (dp[0] if dp else None)
+    all_axes = tuple(dp) + (TP,)
+
+    def spec(leaf):
+        if not shard_batch or leaf.ndim == 0:
+            return P()
+        tail = [None] * (leaf.ndim - 1)
+        if policy == "dp" and leaf.shape[0] % axis_size(mesh, all_axes) == 0:
+            return P(all_axes, *tail)
+        return filter_divisible(P(dp_s, *tail), leaf.shape, mesh)
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_specs(cache: Any, mesh: Mesh, batch_size: int, seq_len: int):
+    """KV/SSM cache sharding for serving.
+
+    batch > 1 : batch over data axes, cache length over "model" (TP decode)
+    batch == 1: (long-context) cache length over ALL axes — context-parallel
+                decode; SSM states shard heads over "model".
+    """
+    dp = data_axes(mesh)
+    dp_s = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def spec(path, leaf):
+        names = [getattr(k, "key", str(k)) for k in path]
+        name = names[-1]
+        nd = leaf.ndim
+        if name in ("k", "v", "c_kv", "k_rope"):  # (layers?, B, L, ...)
+            lead = nd - (4 if name in ("k", "v") else 3)
+            if batch_size == 1:
+                core = (None, tuple(dp) + (TP,)) if dp else (None, TP)
+            else:
+                core = (dp_s, TP)
+            tail = nd - len(core) - lead
+            return P(*([None] * lead), *core, *([None] * tail))
+        if name == "ssm":  # (layers?, B, H, P, N)
+            lead = nd - 4
+            return P(*([None] * lead), dp_s if batch_size > 1 else None, TP, None, None)
+        if name == "conv":  # (layers?, B, W-1, C)
+            lead = nd - 3
+            return P(*([None] * lead), dp_s if batch_size > 1 else None, None, TP)
+        if name == "enc_out":  # (B, T, D)
+            return P(dp_s if batch_size > 1 else None, None, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: filter_divisible(spec(path, leaf), leaf.shape, mesh),
+        cache,
+    )

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: fused facility-location marginal gains.
+
+Per greedy step the hotspot is  gains_j = sum_i max(S_ij - curmax_i, 0)
+over the whole candidate set (paper Table 3 memoization, vectorized — see
+DESIGN §2).  A naive XLA lowering materializes the (U, N) relu intermediate
+in HBM (3x traffic: read S, write relu, read relu for the reduce).  This
+kernel streams each S tile through VMEM exactly once and fuses
+subtract→relu→column-reduce in-register, so the op stays at the 1x-HBM-read
+roofline of S itself.
+
+grid = (N/BN, U/BU) with U innermost; the (1, BN) output block is revisited
+across U steps and used as the fp32 accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BU = 256  # represented-set rows per tile
+BN = 512  # candidates per tile
+
+_PAD_CM = 3.0e38  # pad value for curmax: relu(s - huge) == 0 contributes nothing
+
+
+def _fl_gains_kernel(s_ref, cm_ref, out_ref):
+    u = pl.program_id(1)
+
+    @pl.when(u == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    s = s_ref[...].astype(jnp.float32)  # (BU, BN)
+    cm = cm_ref[...].astype(jnp.float32)  # (BU, 1)
+    out_ref[...] += jnp.maximum(s - cm, 0.0).sum(axis=0)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bu", "bn"))
+def fl_gains_pallas(
+    sim: jax.Array,
+    curmax: jax.Array,
+    interpret: bool = False,
+    bu: int = BU,
+    bn: int = BN,
+) -> jax.Array:
+    """sim (u, n), curmax (u,) -> gains (n,) in fp32."""
+    u, n = sim.shape
+    pad_u = (-u) % bu
+    pad_n = (-n) % bn
+    sp = jnp.pad(sim, ((0, pad_u), (0, pad_n)))
+    cmp_ = jnp.pad(
+        curmax.astype(jnp.float32)[:, None], ((0, pad_u), (0, 0)),
+        constant_values=_PAD_CM,
+    )
+    up, npad = sp.shape
+    grid = (npad // bn, up // bu)
+    out = pl.pallas_call(
+        _fl_gains_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bu, bn), lambda j, i: (i, j)),
+            pl.BlockSpec((bu, 1), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, npad), jnp.float32),
+        interpret=interpret,
+    )(sp, cmp_)
+    return out[0, :n]

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: FUSED similarity + facility-location gain sweep.
+
+Beyond-paper (EXPERIMENTS §Perf-3/C3): the paper materializes the O(n^2)
+kernel, then sweeps it every greedy round. This kernel computes, for every
+candidate j,
+
+    gains_j = sum_i max( sim(x_i, y_j) - curmax_i, 0 )
+
+directly from the embeddings: each (BU x BN) similarity tile lives only in
+a VMEM scratch accumulator across the K strips and is reduced in-register.
+Per-sweep HBM traffic drops from O(u*n) kernel bytes to O((u+n)*d)
+embedding bytes — for u=16384, n=1M, d=256 that is 64 GB -> 1.3 GB, and the
+kernel matrix never exists at all (no 4 TB materialization for 1M x 1M).
+
+grid = (n/BN, u/BU, d/BK), K innermost; dot metric (callers pre-normalize
+for cosine).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BU = 256
+BN = 256
+BK = 256
+
+_PAD_CM = 3.0e38
+
+
+def _fused_kernel(x_ref, y_ref, cm_ref, out_ref, s_acc, *, nk):
+    k = pl.program_id(2)
+    u = pl.program_id(1)
+
+    @pl.when((u == 0) & (k == 0))
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(k == 0)
+    def _init_tile():
+        s_acc[...] = jnp.zeros_like(s_acc)
+
+    x = x_ref[...].astype(jnp.float32)  # (BU, BK)
+    y = y_ref[...].astype(jnp.float32)  # (BN, BK)
+    s_acc[...] += jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _reduce():
+        cm = cm_ref[...].astype(jnp.float32)  # (BU, 1)
+        out_ref[...] += jnp.maximum(s_acc[...] - cm, 0.0).sum(axis=0)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bu", "bn", "bk"))
+def fused_fl_sweep_pallas(
+    x: jax.Array,
+    y: jax.Array,
+    curmax: jax.Array,
+    interpret: bool = False,
+    bu: int = BU,
+    bn: int = BN,
+    bk: int = BK,
+) -> jax.Array:
+    """x (u, d) represented embeddings, y (n, d) candidates, curmax (u,)
+    -> gains (n,) fp32, dot-product similarity."""
+    u, d = x.shape
+    n = y.shape[0]
+
+    def pad(a, mult, axis, value=0.0):
+        p = (-a.shape[axis]) % mult
+        if p == 0:
+            return a
+        w = [(0, 0)] * a.ndim
+        w[axis] = (0, p)
+        return jnp.pad(a, w, constant_values=value)
+
+    xp = pad(pad(x, bu, 0), bk, 1)
+    yp = pad(pad(y, bn, 0), bk, 1)
+    cmp_ = pad(curmax.astype(jnp.float32)[:, None], bu, 0, value=_PAD_CM)
+    up, dp = xp.shape
+    npad = yp.shape[0]
+    nk = dp // bk
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, nk=nk),
+        grid=(npad // bn, up // bu, nk),
+        in_specs=[
+            pl.BlockSpec((bu, bk), lambda j, i, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda j, i, k: (j, k)),
+            pl.BlockSpec((bu, 1), lambda j, i, k: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda j, i, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, npad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bu, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, yp, cmp_)
+    return out[0, :n]
+
+
+def fused_fl_sweep_ref(x, y, curmax):
+    """Pure-jnp oracle."""
+    s = x.astype(jnp.float32) @ y.astype(jnp.float32).T
+    return jnp.maximum(s - curmax.astype(jnp.float32)[:, None], 0.0).sum(axis=0)

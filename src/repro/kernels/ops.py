@@ -1,0 +1,32 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On TPU the compiled kernels run natively; on CPU (this container) they run in
+``interpret=True`` mode, which executes the kernel body in Python and is what
+the allclose test-suite validates against the ``ref.py`` oracles.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.fl_gains import fl_gains_pallas
+from repro.kernels.similarity_kernel import similarity_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def similarity(x, y, metric: str = "dot", rbf_sigma: float | None = None):
+    return similarity_pallas(
+        x, y, metric=metric, rbf_sigma=rbf_sigma, interpret=_interpret()
+    )
+
+
+def fl_gains(sim, curmax):
+    return fl_gains_pallas(sim, curmax, interpret=_interpret())
+
+
+# re-export oracles for convenience
+similarity_ref = ref.similarity_ref
+fl_gains_ref = ref.fl_gains_ref

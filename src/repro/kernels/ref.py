@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def similarity_ref(
+    x: jax.Array, y: jax.Array, metric: str = "dot", rbf_sigma: float | None = None
+) -> jax.Array:
+    """Pairwise similarity, (n, d) x (m, d) -> (n, m), fp32 accumulation."""
+    x32 = x.astype(jnp.float32)
+    y32 = y.astype(jnp.float32)
+    if metric == "dot":
+        return x32 @ y32.T
+    if metric == "cosine":
+        xn = x32 / jnp.maximum(jnp.linalg.norm(x32, axis=1, keepdims=True), 1e-12)
+        yn = y32 / jnp.maximum(jnp.linalg.norm(y32, axis=1, keepdims=True), 1e-12)
+        return 0.5 * (1.0 + xn @ yn.T)
+    d2 = jnp.maximum(
+        (x32 * x32).sum(1)[:, None] + (y32 * y32).sum(1)[None, :] - 2.0 * x32 @ y32.T,
+        0.0,
+    )
+    if metric == "euclidean":
+        return 1.0 / (1.0 + jnp.sqrt(d2))
+    if metric == "rbf":
+        sigma = rbf_sigma if rbf_sigma is not None else float(x.shape[1]) ** 0.5
+        return jnp.exp(-d2 / (2.0 * sigma * sigma))
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def fl_gains_ref(sim: jax.Array, curmax: jax.Array) -> jax.Array:
+    """Facility-location marginal gains for all candidates.
+
+    gains_j = sum_i max(S_ij - curmax_i, 0);  sim (u, n), curmax (u,) -> (n,)
+    """
+    s32 = sim.astype(jnp.float32)
+    return jnp.maximum(s32 - curmax.astype(jnp.float32)[:, None], 0.0).sum(axis=0)
+
+
+def fl_gains_update_ref(
+    sim: jax.Array, curmax: jax.Array, winner: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Fused greedy step: gains, then the updated curmax for column ``winner``."""
+    g = fl_gains_ref(sim, curmax)
+    new_curmax = jnp.maximum(
+        curmax.astype(jnp.float32), sim[:, winner].astype(jnp.float32)
+    )
+    return g, new_curmax

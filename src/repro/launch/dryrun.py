@@ -1,0 +1,423 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+_DOC = """Multi-pod dry-run (assignment: MULTI-POD DRY-RUN).
+
+For every applicable (arch × shape) cell, on the single-pod 16x16 mesh and
+the 2x16x16 multi-pod mesh:
+
+    lowered  = jit(step, in_shardings=..., donate...).lower(*abstract_args)
+    compiled = lowered.compile()
+    memory_analysis / cost_analysis / collective-bytes from the SPMD HLO
+
+Results land in a json per cell (benchmarks/roofline.py turns them into the
+EXPERIMENTS.md tables).  Also dry-runs the paper's technique itself: the
+distributed FL selection step on the production mesh (--arch selection).
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
+        --mesh single --out results/dryrun
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.archs import ALL_ARCHS
+from repro.configs.base import get_config
+from repro.distributed.act_sharding import activation_sharding
+from repro.distributed.sharding import batch_specs, cache_specs, param_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import SHAPES, cell_applicable, input_specs
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_INSTR_RE = re.compile(
+    r"^%?[\w.\-]+ = ((?:\([^)]*\))|(?:[\w\[\],{}\s]*?)) ("
+    + "|".join(_COLLECTIVES)
+    + r")(-start|-done)?\("
+)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Per-device RESULT bytes of every collective in the SPMD module.
+
+    Operands print as %refs in this HLO dialect, so we count result shapes:
+    all-reduce result == payload; all-gather result == received bytes;
+    reduce-scatter result == kept shard (lower bound); -done ops skipped to
+    avoid double-counting async pairs."""
+    out = {c: 0 for c in _COLLECTIVES}
+    count = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("ROOT "):
+            s = s[5:]
+        m = _INSTR_RE.match(s)
+        if not m or m.group(3) == "-done":
+            continue
+        c = m.group(2)
+        bytes_ = sum(
+            _shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(m.group(1))
+        )
+        out[c] += bytes_
+        count[c] += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    out["counts"] = count
+    return out
+
+
+def _mem_analysis(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    keys = (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    )
+    return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+
+
+def _cost_analysis(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))}
+
+
+def build_step(cfg, cell, mesh, policy: str = "auto"):
+    """Returns (fn, abstract_args, in_shardings, donate) for the cell."""
+    from jax.sharding import NamedSharding
+
+    from repro.distributed.sharding import auto_policy
+    from repro.models.model import decode_step, init_cache, prefill, train_forward
+    from repro.train.train_step import init_train_state, make_train_step
+
+    if policy == "auto":
+        policy = auto_policy(cfg.param_count())
+    batch_abs = input_specs(cfg, cell)
+    ns = lambda spec_tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree
+    )
+
+    if cell.kind == "train":
+        state_abs = init_train_state(cfg, abstract=True)
+        step = make_train_step(cfg)
+        state_sh = ns(param_specs(state_abs, mesh, policy))
+        batch_sh = ns(batch_specs(batch_abs, mesh, policy=policy))
+        return step, (state_abs, batch_abs), (state_sh, batch_sh), (0,), policy
+
+    from repro.models.model import init_params
+
+    params_abs = init_params(cfg, abstract=True)
+    params_sh = ns(param_specs(params_abs, mesh, policy))
+
+    if cell.kind == "prefill":
+
+        def step(params, batch):
+            return prefill(cfg, params, batch, max_len=cell.seq_len)
+
+        batch_sh = ns(batch_specs(batch_abs, mesh, policy=policy))
+        return step, (params_abs, batch_abs), (params_sh, batch_sh), (), policy
+
+    # decode
+    cache_abs = init_cache(cfg, cell.global_batch, cell.seq_len, abstract=True)
+    if cfg.family == "audio":
+        # decode against a filled cross-attn encoder output too
+        pass
+    cache_sh = ns(cache_specs(cache_abs, mesh, cell.global_batch, cell.seq_len))
+    tok_abs = batch_abs["tokens"]
+    tok_sh = ns(batch_specs(tok_abs, mesh, shard_batch=cell.global_batch > 1))
+    len_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    len_sh = NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    def step(params, caches, tokens, cache_len):
+        return decode_step(cfg, params, caches, tokens, cache_len)
+
+    return (
+        step,
+        (params_abs, cache_abs, tok_abs, len_abs),
+        (params_sh, cache_sh, tok_sh, len_sh),
+        (1,),
+        policy,
+    )
+
+
+def build_selection_step(
+    mesh,
+    pool: int = 1 << 20,
+    dim: int = 1024,
+    budget: int = 512,
+    variant: str = "dense",
+):
+    """The paper's technique on the production mesh: distributed FL greedy
+    over a (rows x pool) kernel built from sharded embeddings.
+
+    variants (§Perf-3): dense fp32 baseline | stochastic sampling sweep |
+    bf16 kernel storage | stochastic+bf16."""
+    from repro.core.optimizers.distributed import (
+        distributed_fl_greedy,
+        distributed_stochastic_fl_greedy,
+    )
+    from repro.distributed.sharding import data_axes
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    rows = 1 << 14  # represented-set subsample (rows), cols = full pool
+    dtype = jnp.bfloat16 if "bf16" in variant else jnp.float32
+    sim_abs = jax.ShapeDtypeStruct((rows, pool), dtype)
+    dp = data_axes(mesh)
+
+    if "stochastic" in variant:
+        key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+        def step(sim, key):
+            return distributed_stochastic_fl_greedy(
+                sim, budget, mesh, key, sample_per_shard=1024,
+                row_axes=("model",), col_axes=dp,
+            )
+
+        return (
+            step,
+            (sim_abs, key_abs),
+            (NamedSharding(mesh, P("model", dp)), NamedSharding(mesh, P())),
+            (),
+        )
+
+    def step(sim):
+        return distributed_fl_greedy(
+            sim, budget, mesh, row_axes=("model",), col_axes=dp
+        )
+
+    sim_sh = NamedSharding(mesh, P("model", dp))
+    return step, (sim_abs,), (sim_sh,), ()
+
+
+def _compile_once(fn, args, shardings, donate, mesh, policy="fsdp"):
+    t0 = time.time()
+    with activation_sharding(mesh, policy=policy), jax.sharding.set_mesh(mesh):
+        jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return compiled, t_lower, t_compile
+
+
+def _depth_variants(cfg):
+    """Two reduced-DEPTH (full-width, full-shape) configs (L1, L2) such that
+    per-layer costs extrapolate affinely:  cost(L) = cost(L1) +
+    (L - L1)/(L2 - L1) * (cost(L2) - cost(L1)).   Layer structure repeats
+    with period p (hybrid: attn_every; moe: 1 after first_dense_layers), so
+    variants step by one period."""
+    import dataclasses
+
+    if cfg.family == "hybrid":
+        p = cfg.attn_every
+        return (
+            dataclasses.replace(cfg, n_layers=p),
+            dataclasses.replace(cfg, n_layers=2 * p),
+        )
+    if cfg.family == "audio":
+        return (
+            dataclasses.replace(cfg, n_layers=1, enc_layers=1),
+            dataclasses.replace(cfg, n_layers=2, enc_layers=2),
+        )
+    pre = cfg.first_dense_layers if cfg.n_experts else 0
+    return (
+        dataclasses.replace(cfg, n_layers=pre + 1),
+        dataclasses.replace(cfg, n_layers=pre + 2),
+    )
+
+
+def _extrapolate(v1: float, v2: float, l1: int, l2: int, l: int) -> float:
+    return v1 + (v2 - v1) * (l - l1) / (l2 - l1)
+
+
+def _measure_costs(cfg, cell, mesh) -> dict:
+    """Unrolled two-depth measurement -> per-device flops / bytes /
+    collective bytes extrapolated to the full depth."""
+    from repro.models.model import set_unroll
+
+    set_unroll(True)
+    try:
+        c1, c2 = _depth_variants(cfg)
+        out = []
+        for c in (c1, c2):
+            fn, args, shardings, donate, policy = build_step(c, cell, mesh)
+            compiled, _, _ = _compile_once(fn, args, shardings, donate, mesh, policy)
+            cost = _cost_analysis(compiled)
+            coll = collective_bytes_from_hlo(compiled.as_text())
+            out.append(
+                {
+                    "flops": cost.get("flops", 0.0),
+                    "bytes": cost.get("bytes accessed", 0.0),
+                    "coll": coll,
+                }
+            )
+            del compiled
+        l1, l2, L = c1.n_layers, c2.n_layers, cfg.n_layers
+        coll_full = {
+            k: _extrapolate(out[0]["coll"][k], out[1]["coll"][k], l1, l2, L)
+            for k in _COLLECTIVES
+        }
+        coll_full["total"] = sum(coll_full.values())
+        return {
+            "flops_per_device": _extrapolate(
+                out[0]["flops"], out[1]["flops"], l1, l2, L
+            ),
+            "bytes_per_device": _extrapolate(
+                out[0]["bytes"], out[1]["bytes"], l1, l2, L
+            ),
+            "collectives": coll_full,
+            "depth_probe": {"l1": l1, "l2": l2, "raw": out},
+        }
+    finally:
+        set_unroll(False)
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str | None,
+             skip_costs: bool = False):
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    if arch == "selection":
+        variant = {
+            "select_1m": "dense",
+            "select_1m_stoch": "stochastic",
+            "select_1m_bf16": "bf16",
+            "select_1m_stoch_bf16": "stochastic_bf16",
+        }.get(shape, "dense")
+        fn, args, shardings, donate = build_selection_step(mesh, variant=variant)
+        cfg = None
+        cell = None
+        policy = "fsdp"
+    else:
+        cfg = get_config(arch)
+        cell = SHAPES[shape]
+        fn, args, shardings, donate, policy = build_step(cfg, cell, mesh)
+
+    # phase 1 — the production (scanned) program: THE compile proof + memory
+    compiled, t_lower, t_compile = _compile_once(
+        fn, args, shardings, donate, mesh, policy
+    )
+    mem = _mem_analysis(compiled)
+    coll_scanned = collective_bytes_from_hlo(compiled.as_text())
+    del compiled
+
+    record = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "mesh_shape": list(mesh.devices.shape),
+        "n_devices": int(mesh.devices.size),
+        "policy": policy,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "collectives_scanned_hlo": coll_scanned,
+    }
+
+    # phase 2 — unrolled depth probes for truthful cost extrapolation
+    # (XLA cost_analysis ignores while bodies; see models/model.py)
+    if cfg is not None and not skip_costs:
+        record.update(_measure_costs(cfg, cell, mesh))
+        record["params_total"] = cfg.param_count()
+        record["params_active"] = cfg.active_param_count()
+
+    print(json.dumps({k: v for k, v in record.items() if k != "depth_probe"},
+                     indent=2))
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"{arch}__{shape}__{mesh_kind}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=2)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'selection'")
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--skip-costs", action="store_true",
+                    help="scanned compile proof only (multi-pod pass)")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in ALL_ARCHS:
+            for shape in SHAPES:
+                if cell_applicable(arch, shape):
+                    cells.append((arch, shape))
+        cells.append(("selection", "select_1m"))
+    else:
+        assert args.arch, "--arch or --all required"
+        archs = args.arch.split(",")
+        for arch in archs:
+            if arch == "selection":
+                cells.append(("selection", "select_1m"))
+            elif args.shape:
+                cells.append((arch, args.shape))
+            else:
+                cells.extend(
+                    (arch, s) for s in SHAPES if cell_applicable(arch, s)
+                )
+
+    failures = []
+    for arch, shape in cells:
+        for mk in meshes:
+            path = os.path.join(args.out, f"{arch}__{shape}__{mk}.json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"skip existing {path}")
+                continue
+            try:
+                run_cell(arch, shape, mk, args.out, skip_costs=args.skip_costs)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append((arch, shape, mk, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"dry-run OK: {len(cells) * len(meshes)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh construction (assignment: MULTI-POD DRY-RUN §1).
+
+A FUNCTION, not a module constant — importing this module never touches jax
+device state."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for mesh {shape}; have {len(devices)}. "
+            "Set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import (launch/dryrun.py does this)."
+        )
+    dev_array = np.asarray(devices[:ndev]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_test_mesh(shape=(1, 1), axes=("data", "model")):
+    """Single-device mesh for unit tests."""
+    import jax
+
+    dev_array = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)

@@ -1,0 +1,64 @@
+"""Input shape cells (assignment: ARCHITECTURES × SHAPES) and their
+ShapeDtypeStruct stand-ins — weak-type-correct, shardable, no allocation."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+# long_500k needs sub-quadratic attention: only the SSM/hybrid archs run it
+# (assignment rule; skips recorded in DESIGN §4 / EXPERIMENTS §Dry-run)
+LONG_CONTEXT_ARCHS = {"jamba-1.5-large-398b", "mamba2-370m"}
+
+
+def cell_applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in LONG_CONTEXT_ARCHS
+    return True
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    """Model-input ShapeDtypeStructs for a shape cell."""
+    B = cell.global_batch
+    tok_dt = jnp.int32
+
+    def _frontend(batch: dict, seq_like_b: int):
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (seq_like_b, cfg.enc_positions, cfg.d_model), jnp.float32
+            )
+        if cfg.family == "vlm":
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (seq_like_b, cfg.n_patches, cfg.d_model), jnp.float32
+            )
+        return batch
+
+    if cell.kind == "train":
+        return _frontend(
+            {"tokens": jax.ShapeDtypeStruct((B, cell.seq_len), tok_dt)}, B
+        )
+    if cell.kind == "prefill":
+        return _frontend(
+            {"tokens": jax.ShapeDtypeStruct((B, cell.seq_len), tok_dt)}, B
+        )
+    # decode: one new token against a seq_len cache (built separately)
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), tok_dt)}

@@ -1,0 +1,317 @@
+"""Attention: GQA (+qk_norm, bias, RoPE/M-RoPE), MLA (DeepSeek latent
+attention with compressed-cache decode absorption), blockwise (flash-style)
+attention in pure JAX for long sequences, cross-attention for enc-dec.
+
+Conventions: hidden x is (B, L, D); caches are dicts of arrays; ``pos`` is
+the number of tokens already in the cache (static python int or traced
+scalar) for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.act_sharding import constrain, tp_size
+from repro.models.layers import apply_mrope, apply_rope, rms_norm
+
+_NEG = -1e30
+FLASH_THRESHOLD = 8192  # switch to blockwise attention above this seq len
+Q_BLOCK = 2048
+KV_BLOCK = 2048
+
+
+def _rope_q_k(cfg: ArchConfig, q, k, positions):
+    if cfg.rope == "rope":
+        return apply_rope(q, positions, cfg.rope_theta), apply_rope(
+            k, positions, cfg.rope_theta
+        )
+    if cfg.rope == "mrope":
+        pos3 = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return (
+            apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta),
+            apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta),
+        )
+    return q, k
+
+
+def _gqa_scores_einsum(q, k):
+    """q (B, Lq, KV, G, hd), k (B, Lk, KV, hd) -> (B, KV, G, Lq, Lk).
+
+    KV heads are never materialized at full head count (GQA-native einsum)."""
+    return jnp.einsum("bqkgh,bskh->bkgqs", q, k)
+
+
+def _gqa_out_einsum(p, v):
+    """p (B, KV, G, Lq, Lk), v (B, Lk, KV, hd) -> (B, Lq, KV, G, hd)."""
+    return jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+
+
+def dense_attention(q, k, v, causal: bool, q_offset=0):
+    """Materializes the score matrix — used for short sequences / decode."""
+    B, Lq, KV, G, hd = q.shape
+    Lk = k.shape[1]
+    scores = _gqa_scores_einsum(q, k) * (hd**-0.5)
+    if causal:
+        qpos = jnp.arange(Lq) + q_offset
+        kpos = jnp.arange(Lk)
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None, None], scores, _NEG)
+    p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return _gqa_out_einsum(p, v)
+
+
+def blockwise_attention(q, k, v, causal: bool):
+    """Flash-style attention in pure JAX: outer scan over query blocks, inner
+    scan over KV blocks with online softmax. Never materializes more than a
+    (B, KV, G, Q_BLOCK, KV_BLOCK) score tile — this is what keeps the 32k
+    prefill inside HBM (DESIGN §3)."""
+    B, L, KV, G, hd = q.shape
+    Lk = k.shape[1]
+    qb = min(Q_BLOCK, L)
+    kb = min(KV_BLOCK, Lk)
+    n_q = L // qb
+    n_k = Lk // kb
+    assert L % qb == 0 and Lk % kb == 0, (L, Lk, qb, kb)
+    scale = hd**-0.5
+
+    q_r = q.reshape(B, n_q, qb, KV, G, hd)
+
+    def q_step(_, qi):
+        q_blk = q_r[:, qi]  # (B, qb, KV, G, hd)
+        q_start = qi * qb
+
+        def kv_step(carry, ki):
+            acc, m, denom = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * kb, kb, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * kb, kb, axis=1)
+            s = _gqa_scores_einsum(q_blk, k_blk).astype(jnp.float32) * scale
+            if causal:
+                qpos = q_start + jnp.arange(qb)
+                kpos = ki * kb + jnp.arange(kb)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            denom = denom * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + _gqa_out_einsum(
+                p.astype(q.dtype), v_blk
+            ).astype(jnp.float32).transpose(0, 2, 3, 1, 4)
+            return (acc, m_new, denom), None
+
+        acc0 = jnp.zeros((B, KV, G, qb, hd), jnp.float32)
+        m0 = jnp.full((B, KV, G, qb), _NEG, jnp.float32)
+        d0 = jnp.zeros((B, KV, G, qb), jnp.float32)
+        # NOTE: the baseline scans ALL kv blocks even for causal attention
+        # (2x flops above the triangle); causal block-skipping is a §Perf
+        # hillclimb item (needs a static q-block loop).
+        (acc, m, denom), _ = jax.lax.scan(kv_step, (acc0, m0, d0), jnp.arange(n_k))
+        out = acc / jnp.maximum(denom[..., None], 1e-30)
+        return None, out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(n_q))
+    # outs (n_q, B, qb, KV, G, hd) -> (B, L, KV, G, hd)
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, L, KV, G, hd)
+
+
+def _maybe_qk_norm(cfg: ArchConfig, params, q, k):
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    return q, k
+
+
+def gqa_attention(
+    cfg: ArchConfig,
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: dict | None = None,
+    cache_len=None,
+    causal: bool = True,
+):
+    """Returns (out (B, L, D), new_cache or None)."""
+    B, L, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    G = H // KV
+    dt = x.dtype
+
+    def proj(w, b, heads):
+        y = jnp.einsum("bld,do->blo", x, w.astype(dt))
+        if b is not None:
+            y = y + b.astype(dt)
+        return y.reshape(B, L, heads, hd)
+
+    q = proj(params["wq"], params.get("bq"), H)
+    k = proj(params["wk"], params.get("bk"), KV)
+    v = proj(params["wv"], params.get("bv"), KV)
+    q, k = _maybe_qk_norm(cfg, params, q, k)
+    q, k = _rope_q_k(cfg, q, k, positions)
+    q = q.reshape(B, L, KV, G, hd)
+    # TP placement for the attention activations, in preference order:
+    #   1. KV-head dim (classic head-TP; KV caches shard too)
+    #   2. query-group dim (GQA: Q heads shard, K/V replicate over TP)
+    #   3. sequence dim (SP fallback when head counts don't divide the axis:
+    #      scores shard over Lq, K/V replicate — bounds the score memory)
+    ts = tp_size()
+    from repro.distributed.act_sharding import constrain as _c
+
+    if KV % ts == 0:
+        q = _c(q, ("dp", None, "tp", None, None))
+        k = _c(k, ("dp", None, "tp", None))
+        v = _c(v, ("dp", None, "tp", None))
+    elif G % ts == 0:
+        q = _c(q, ("dp", None, None, "tp", None))
+        k = _c(k, ("dp", None, None, None))
+        v = _c(v, ("dp", None, None, None))
+    elif L % ts == 0 and L > 1:
+        q = _c(q, ("dp", "tp", None, None, None))
+        k = _c(k, ("dp", None, None, None))
+        v = _c(v, ("dp", None, None, None))
+
+    if cache is not None:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_len, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_len, 1)
+        new_cache = {"k": k_cache, "v": v_cache}
+        if L > 1:
+            # prefill-with-cache: attention over the freshly written prefix
+            # (requires cache_len == 0, which is how prefill() calls us)
+            if L > FLASH_THRESHOLD:
+                out = blockwise_attention(q, k, v, causal=True)
+            else:
+                out = dense_attention(q, k, v, causal=True)
+        else:
+            # decode: one query attends over the whole (masked) cache
+            Lk = k_cache.shape[1]
+            kpos = jnp.arange(Lk)
+            valid = kpos < (cache_len + L)
+            scores = _gqa_scores_einsum(q, k_cache) * (hd**-0.5)
+            scores = jnp.where(valid[None, None, None, None, :], scores, _NEG)
+            p = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(dt)
+            out = _gqa_out_einsum(p, v_cache)
+    else:
+        if L > FLASH_THRESHOLD:
+            out = blockwise_attention(q, k, v, causal)
+        else:
+            out = dense_attention(q, k, v, causal)
+        new_cache = None
+
+    out = out.reshape(B, L, H * hd)
+    y = jnp.einsum("blo,od->bld", out, params["wo"].astype(dt))
+    if params.get("bo") is not None:
+        y = y + params["bo"].astype(dt)
+    return y, new_cache
+
+
+def cross_attention(cfg: ArchConfig, params: dict, x, enc_kv: dict):
+    """Decoder cross-attention over precomputed encoder K/V (whisper)."""
+    B, L, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim_
+    dt = x.dtype
+    q = (
+        jnp.einsum("bld,do->blo", x, params["wq"].astype(dt))
+        + params.get("bq", jnp.zeros((), dt)).astype(dt)
+    ).reshape(B, L, H, hd)
+    k, v = enc_kv["k"], enc_kv["v"]  # (B, Lk, H, hd)
+    scores = jnp.einsum("blhd,bshd->bhls", q, k) * (hd**-0.5)
+    p = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(dt)
+    out = jnp.einsum("bhls,bshd->blhd", p, v).reshape(B, L, H * hd)
+    y = jnp.einsum("blo,od->bld", out, params["wo"].astype(dt))
+    if params.get("bo") is not None:
+        y = y + params["bo"].astype(dt)
+    return y
+
+
+def mla_attention(
+    cfg: ArchConfig,
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: dict | None = None,
+    cache_len=None,
+):
+    """DeepSeek-V2 Multi-head Latent Attention.
+
+    Prefill: uncompressed compute; the cache stores only the compressed
+    latent c_kv (kv_lora_rank) + the shared rope key (rope_head_dim) — the
+    536-dim-per-token cache that makes 32k serving cheap.
+    Decode: *absorbed* form — q_nope is folded through w_uk so scores are
+    taken directly against the latent cache; the attention output stays in
+    latent space and is expanded through w_uv only once.
+    """
+    B, L, D = x.shape
+    H, hd, r = cfg.n_heads, cfg.head_dim_, cfg.rope_head_dim
+    dt = x.dtype
+
+    # --- projections ---
+    c_kv = jnp.einsum("bld,dr->blr", x, params["w_dkv"].astype(dt))
+    c_kv = rms_norm(c_kv, params["kv_norm"], cfg.norm_eps)
+    k_rope = jnp.einsum("bld,dr->blr", x, params["w_krope"].astype(dt))
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    if cfg.q_lora_rank:
+        c_q = jnp.einsum("bld,dr->blr", x, params["w_dq"].astype(dt))
+        c_q = rms_norm(c_q, params["q_norm_lora"], cfg.norm_eps)
+    else:
+        c_q = x
+    q_full = jnp.einsum("blr,rho->blho", c_q, params["w_uq"].astype(dt))
+    q_full = constrain(q_full, ("dp", None, "tp", None))  # H carries TP
+    q_nope, q_rope = q_full[..., :hd], q_full[..., hd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    scale = (hd + r) ** -0.5
+
+    new_cache = None
+    if cache is not None:
+        ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv, cache_len, 1
+        )
+        krope_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope, cache_len, 1
+        )
+        new_cache = {"c_kv": ckv_cache, "k_rope": krope_cache}
+
+    if cache is None or L > 1:
+        # uncompressed prefill path (cache, if present, is written above)
+        k_nope = jnp.einsum("blr,rho->blho", c_kv, params["w_uk"].astype(dt))
+        v = jnp.einsum("blr,rho->blho", c_kv, params["w_uv"].astype(dt))
+        if L > FLASH_THRESHOLD:
+            # pack the shared rope key alongside the per-head nope key so the
+            # blockwise kernel sees one (hd + r) head dim; q/k layouts match.
+            q_pack = jnp.concatenate(
+                [q_nope, q_rope], axis=-1
+            ).reshape(B, L, H, 1, hd + r)
+            k_pack = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, L, H, r))],
+                axis=-1,
+            )
+            v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, r)))
+            out = blockwise_attention(q_pack, k_pack, v_pad, causal=True)
+            out = out.reshape(B, L, H, hd + r)[..., :hd]
+        else:
+            s = (
+                jnp.einsum("blho,bsho->bhls", q_nope, k_nope)
+                + jnp.einsum("blhr,bsr->bhls", q_rope, k_rope)
+            ) * scale
+            qpos = jnp.arange(L)
+            mask = qpos[:, None] >= qpos[None, :]
+            s = jnp.where(mask[None, None], s, _NEG)
+            p = jax.nn.softmax(s.astype(jnp.float32), -1).astype(dt)
+            out = jnp.einsum("bhls,bsho->blho", p, v)
+    else:
+        # absorbed decode: q_nope -> latent space through w_uk; attention and
+        # its output stay in the compressed 512-d latent space
+        Lk = new_cache["c_kv"].shape[1]
+        q_lat = jnp.einsum("blho,rho->blhr", q_nope, params["w_uk"].astype(dt))
+        s = (
+            jnp.einsum("blhr,bsr->bhls", q_lat, new_cache["c_kv"])
+            + jnp.einsum("blhr,bsr->bhls", q_rope, new_cache["k_rope"])
+        ) * scale
+        valid = jnp.arange(Lk) < (cache_len + L)
+        s = jnp.where(valid[None, None, None], s, _NEG)
+        p = jax.nn.softmax(s.astype(jnp.float32), -1).astype(dt)
+        out_lat = jnp.einsum("bhls,bsr->blhr", p, new_cache["c_kv"])
+        out = jnp.einsum("blhr,rho->blho", out_lat, params["w_uv"].astype(dt))
+
+    y = jnp.einsum("blho,hod->bld", out, params["wo_mla"].astype(dt))
+    return y, new_cache

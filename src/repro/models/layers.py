@@ -1,0 +1,97 @@
+"""Shared layer primitives: norms, rotary embeddings (RoPE / M-RoPE),
+sinusoidal positions, FFNs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * scale + bias
+
+
+def sinusoidal_positions(positions: jax.Array, dim: int, dtype=jnp.float32):
+    """(...,) int positions -> (..., dim) sinusoidal embeddings (whisper)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _rope_angles(positions: jax.Array, head_dim: int, theta: float):
+    """positions (..., L) -> cos/sin of shape (..., L, head_dim//2)."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x (B, L, H, hd), positions (B, L) -> rotated (interleaved-half layout)."""
+    hd = x.shape[-1]
+    cos, sin = _rope_angles(positions, hd, theta)  # (B, L, hd/2)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    sections: tuple[int, ...],
+    theta: float = 1e6,
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    positions (3, B, L) — temporal / height / width position streams; the
+    rotary half-dim is split into ``sections`` (sums to hd/2), each section
+    taking its angles from the corresponding stream.  For pure-text tokens
+    all three streams are equal, recovering standard RoPE.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    cos_parts, sin_parts = [], []
+    offset = 0
+    half = hd // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    for s, sec in zip(positions, sections):
+        ang = s.astype(jnp.float32)[..., None] * inv[offset : offset + sec]
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        offset += sec
+    cos = jnp.concatenate(cos_parts, -1)[:, :, None, :]  # (B, L, 1, hd/2)
+    sin = jnp.concatenate(sin_parts, -1)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU FFN used by every modern assigned arch."""
+    g = jax.nn.silu(jnp.einsum("bld,df->blf", x, w_gate.astype(x.dtype)))
+    u = jnp.einsum("bld,df->blf", x, w_up.astype(x.dtype))
+    return jnp.einsum("blf,fd->bld", g * u, w_down.astype(x.dtype))
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    """GELU MLP (whisper)."""
+    h = jax.nn.gelu(
+        jnp.einsum("bld,df->blf", x, w_in.astype(x.dtype)) + b_in.astype(x.dtype)
+    )
+    return jnp.einsum("blf,fd->bld", h, w_out.astype(x.dtype)) + b_out.astype(x.dtype)

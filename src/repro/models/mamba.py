@@ -1,0 +1,151 @@
+"""Mamba2 / SSD (state-space duality) block [arXiv:2405.21060], TPU-adapted.
+
+The chunked SSD algorithm maps the selective scan onto matmuls (MXU-friendly)
+instead of a length-L sequential scan:
+- intra-chunk: a (Q, Q) causal "attention-like" matmul per chunk
+- inter-chunk: a lax.scan over n_chunks carrying the (H, P, N) state
+
+Decode is the O(1) recurrent update  S <- dA * S + dt * (B ⊗ x),
+y = C · S + D*x — constant memory at any context length, which is why the
+SSM/hybrid archs are the only ones that run the long_500k cell (DESIGN §4).
+
+Single B/C group (n_groups=1), heads H = d_inner / ssm_head_dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.act_sharding import constrain
+from repro.models.layers import rms_norm
+
+
+def _split_proj(cfg: ArchConfig, z_x_b_c_dt: jax.Array):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z, x, B, C, dt = jnp.split(z_x_b_c_dt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], -1)
+    return z, x, B, C, dt  # dt: (B, L, H)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv, x (B, L, C), w (W, C). Returns (y, new_state)
+    where state is the last W-1 inputs for streaming decode."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, L+W-1, C)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(W))
+    new_state = xp[:, -(W - 1) :] if W > 1 else pad
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    x (B, L, H, P)   dt (B, L, H)  [post-softplus]
+    A (H,) negative  Bm, Cm (B, L, N)
+    Returns y (B, L, H, P) and the final state (B, H, P, N).
+    """
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    xr = x.reshape(Bsz, nc, Q, H, P)
+    dtr = dt.reshape(Bsz, nc, Q, H)
+    Br = Bm.reshape(Bsz, nc, Q, N)
+    Cr = Cm.reshape(Bsz, nc, Q, N)
+
+    dA = dtr * A  # (B, nc, Q, H), negative
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log-decay
+    total = cum[:, :, -1]  # (B, nc, H)
+
+    # intra-chunk (causal quadratic form): M[t,s] = C_t·B_s * exp(cum_t - cum_s) * dt_s
+    CB = jnp.einsum("bnqm,bnsm->bnqs", Cr, Br)  # (B, nc, Q, Q)
+    decay = jnp.exp(
+        cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    )  # (B, nc, Q, Q, H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    M = CB[..., None] * jnp.where(causal[None, None, :, :, None], decay, 0.0)
+    y_intra = jnp.einsum("bnqsh,bnsh,bnshp->bnqhp", M, dtr, xr)
+
+    # chunk summaries: S_n = sum_s exp(total - cum_s) dt_s B_s ⊗ x_s
+    w_state = jnp.exp(total[:, :, None, :] - cum) * dtr  # (B, nc, Q, H)
+    S_chunk = jnp.einsum("bnqh,bnqm,bnqhp->bnhpm", w_state, Br, xr)
+
+    # inter-chunk recurrence over chunk states
+    def step(S, inp):
+        S_c, tot = inp  # (B, H, P, N), (B, H)
+        S_new = S * jnp.exp(tot)[:, :, None, None] + S_c
+        return S_new, S
+
+    S0 = jnp.zeros((Bsz, H, P, N), x.dtype)
+    S_final, S_prevs = jax.lax.scan(
+        step,
+        S0,
+        (S_chunk.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)  # (B, nc, H, P, N)
+
+    # inter-chunk contribution: y_t += C_t · (exp(cum_t) * S_prev)
+    y_inter = jnp.einsum(
+        "bnqm,bnqh,bnhpm->bnqhp", Cr, jnp.exp(cum), S_prevs
+    )
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P)
+    return y, S_final
+
+
+def mamba_block(
+    cfg: ArchConfig,
+    params: dict,
+    x: jax.Array,
+    state: dict | None = None,
+):
+    """Full Mamba2 mixer. x (B, L, D). ``state`` enables streaming decode:
+    {"conv": (B, W-1, conv_ch), "ssm": (B, H, P, N)}."""
+    B, L, D = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    dt_ = x.dtype
+
+    zxbcdt = jnp.einsum("bld,do->blo", x, params["in_proj"].astype(dt_))
+    z, xs, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        conv_in, params["conv_w"], None if state is None else state["conv"]
+    )
+    xs, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,)
+    xh = xs.reshape(B, L, H, P)
+    xh = constrain(xh, ("dp", None, "tp", None))  # SSM heads carry TP
+
+    if state is None:
+        y, S_final = ssd_chunked(
+            xh.astype(jnp.float32),
+            dt,
+            A,
+            Bm.astype(jnp.float32),
+            Cm.astype(jnp.float32),
+            cfg.ssm_chunk,
+        )
+        new_state = {"conv": conv_state, "ssm": S_final}
+    else:
+        # recurrent decode (L == 1)
+        S = state["ssm"].astype(jnp.float32)  # (B, H, P, N)
+        dA = jnp.exp(dt[:, 0] * A)  # (B, H)
+        inc = jnp.einsum(
+            "bh,bm,bhp->bhpm", dt[:, 0], Bm[:, 0].astype(jnp.float32),
+            xh[:, 0].astype(jnp.float32),
+        )
+        S = S * dA[:, :, None, None] + inc
+        y = jnp.einsum("bm,bhpm->bhp", Cm[:, 0].astype(jnp.float32), S)[:, None]
+        new_state = {"conv": conv_state, "ssm": S}
+
+    y = y.astype(dt_) + xh * params["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B, L, di)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)  # gated norm
+    out = jnp.einsum("blo,od->bld", y, params["out_proj"].astype(dt_))
+    return out, new_state

@@ -1,0 +1,740 @@
+"""Model assembly for all assigned architecture families.
+
+Families: dense / moe / vlm (decoder-only transformer), hybrid (jamba
+period-scan), ssm (mamba2), audio (whisper enc-dec).
+
+All layer stacks are scanned (jax.lax.scan over stacked params) with
+jax.checkpoint around the layer body — this keeps HLO size O(1) in depth
+(fast compiles at 61-72 layers) and bounds activation memory.
+
+Public entry points:
+  init_params(cfg, key | abstract=True)
+  train_forward(cfg, params, batch) -> (loss, metrics)
+  prefill(cfg, params, batch)       -> (logits_last, cache)
+  decode_step(cfg, params, cache, tokens, cache_len) -> (logits, cache)
+  init_cache(cfg, batch_size, max_len, abstract=True)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.act_sharding import constrain
+from repro.models.attention import (
+    cross_attention,
+    gqa_attention,
+    mla_attention,
+)
+from repro.models.layers import (
+    gelu_mlp,
+    layer_norm,
+    rms_norm,
+    sinusoidal_positions,
+    swiglu,
+)
+from repro.models.mamba import mamba_block
+from repro.models.moe import moe_ffn
+
+# ---------------------------------------------------------------------------
+# scan-vs-unroll control
+#
+# XLA's cost_analysis does NOT account for while-loop (lax.scan) bodies, so
+# the dry-run sets unroll mode to get truthful FLOP/byte/collective counts
+# from the compiled artifact (launch/dryrun.py). Normal training/tests keep
+# scan for O(1) HLO size.
+# ---------------------------------------------------------------------------
+
+_UNROLL = False
+
+
+def set_unroll(value: bool):
+    global _UNROLL
+    _UNROLL = bool(value)
+
+
+def maybe_scan(body, carry, xs, length: int | None = None):
+    """lax.scan, or a python loop in dry-run unroll mode."""
+    if not _UNROLL:
+        return jax.lax.scan(body, carry, xs)
+    if length is None:
+        length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+class _Init:
+    """Tiny helper tracking a PRNG key chain."""
+
+    def __init__(self, key, dtype):
+        self.key = key
+        self.dtype = dtype
+
+    def mat(self, *shape, scale=0.02):
+        self.key, sub = jax.random.split(self.key)
+        return (jax.random.normal(sub, shape, jnp.float32) * scale).astype(self.dtype)
+
+    def zeros(self, *shape):
+        return jnp.zeros(shape, self.dtype)
+
+    def ones(self, *shape):
+        return jnp.ones(shape, self.dtype)
+
+
+def _attn_params(cfg: ArchConfig, ini: _Init) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    if cfg.mla:
+        r_kv, r_q, r_r = cfg.kv_lora_rank, cfg.q_lora_rank, cfg.rope_head_dim
+        p = {
+            "w_dkv": ini.mat(D, r_kv),
+            "kv_norm": ini.ones(r_kv),
+            "w_krope": ini.mat(D, r_r),
+            "w_uk": ini.mat(r_kv, H, hd),
+            "w_uv": ini.mat(r_kv, H, hd),
+            "wo_mla": ini.mat(H, hd, D),
+        }
+        if r_q:
+            p["w_dq"] = ini.mat(D, r_q)
+            p["q_norm_lora"] = ini.ones(r_q)
+            p["w_uq"] = ini.mat(r_q, H, hd + r_r)
+        else:
+            p["w_uq"] = ini.mat(D, H, hd + r_r)
+        return p
+    p = {
+        "wq": ini.mat(D, H * hd),
+        "wk": ini.mat(D, KV * hd),
+        "wv": ini.mat(D, KV * hd),
+        "wo": ini.mat(H * hd, D),
+    }
+    if cfg.use_bias:
+        p.update(bq=ini.zeros(H * hd), bk=ini.zeros(KV * hd), bv=ini.zeros(KV * hd))
+    if cfg.qk_norm:
+        p.update(q_norm=ini.ones(hd), k_norm=ini.ones(hd))
+    return p
+
+
+def _ffn_params(cfg: ArchConfig, ini: _Init, gelu: bool = False) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    if gelu:
+        return {
+            "w_in": ini.mat(D, F),
+            "b_in": ini.zeros(F),
+            "w_out": ini.mat(F, D),
+            "b_out": ini.zeros(D),
+        }
+    return {"w_gate": ini.mat(D, F), "w_up": ini.mat(D, F), "w_down": ini.mat(F, D)}
+
+
+def _moe_params(cfg: ArchConfig, ini: _Init) -> dict:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_expert_
+    p = {
+        "router": ini.mat(D, E),
+        "w_gate": ini.mat(E, D, F),
+        "w_up": ini.mat(E, D, F),
+        "w_down": ini.mat(E, F, D),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.n_shared_experts * F
+        p.update(
+            shared_gate=ini.mat(D, Fs),
+            shared_up=ini.mat(D, Fs),
+            shared_down=ini.mat(Fs, D),
+        )
+    return p
+
+
+def _mamba_params(cfg: ArchConfig, ini: _Init) -> dict:
+    D, di, N, H, W = (
+        cfg.d_model,
+        cfg.d_inner,
+        cfg.ssm_state,
+        cfg.n_ssm_heads,
+        cfg.ssm_conv_width,
+    )
+    return {
+        "in_proj": ini.mat(D, 2 * di + 2 * N + H),
+        "conv_w": ini.mat(W, di + 2 * N, scale=0.1),
+        "dt_bias": ini.zeros(H),
+        "A_log": ini.zeros(H),
+        "D": ini.ones(H),
+        "norm": ini.ones(di),
+        "out_proj": ini.mat(di, D),
+    }
+
+
+def _decoder_layer_params(cfg: ArchConfig, ini: _Init, moe: bool, mamba: bool) -> dict:
+    D = cfg.d_model
+    p: dict[str, Any] = {"ln1": ini.ones(D)}
+    if mamba:
+        p["mixer"] = _mamba_params(cfg, ini)
+    else:
+        p["attn"] = _attn_params(cfg, ini)
+    p["ln2"] = ini.ones(D)
+    if moe:
+        p["moe"] = _moe_params(cfg, ini)
+    else:
+        p["ffn"] = _ffn_params(cfg, ini, gelu=cfg.family == "audio")
+    return p
+
+
+def _whisper_dec_layer_params(cfg: ArchConfig, ini: _Init) -> dict:
+    D = cfg.d_model
+    return {
+        "ln1": ini.ones(D),
+        "b1": ini.zeros(D),
+        "attn": _attn_params(cfg, ini),
+        "ln_x": ini.ones(D),
+        "bx": ini.zeros(D),
+        "xattn": _attn_params(cfg, ini),
+        "ln2": ini.ones(D),
+        "b2": ini.zeros(D),
+        "ffn": _ffn_params(cfg, ini, gelu=True),
+    }
+
+
+def _stack(trees: list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _make_params(cfg: ArchConfig, key) -> dict:
+    ini = _Init(key, _dtype(cfg))
+    D, V = cfg.d_model, cfg.vocab
+    params: dict[str, Any] = {"embed": ini.mat(V, D)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = ini.mat(D, V)
+    params["final_norm"] = ini.ones(D)
+
+    if cfg.family == "audio":
+        # whisper: encoder self-attn stack + decoder (self + cross) stack
+        params["enc_layers"] = _stack(
+            [
+                {
+                    "ln1": ini.ones(D),
+                    "b1": ini.zeros(D),
+                    "attn": _attn_params(cfg, ini),
+                    "ln2": ini.ones(D),
+                    "b2": ini.zeros(D),
+                    "ffn": _ffn_params(cfg, ini, gelu=True),
+                }
+                for _ in range(cfg.enc_layers)
+            ]
+        )
+        params["enc_norm"] = ini.ones(D)
+        params["enc_norm_b"] = ini.zeros(D)
+        params["dec_layers"] = _stack(
+            [_whisper_dec_layer_params(cfg, ini) for _ in range(cfg.n_layers)]
+        )
+        params["final_norm_b"] = ini.zeros(D)
+        return params
+
+    if cfg.family == "hybrid":
+        period = cfg.attn_every
+        n_periods = cfg.n_layers // period
+        for pos in range(period):
+            layers = [
+                _decoder_layer_params(
+                    cfg,
+                    ini,
+                    moe=cfg.is_moe_layer(per * period + pos),
+                    mamba=not cfg.is_attn_layer(per * period + pos),
+                )
+                for per in range(n_periods)
+            ]
+            params[f"pos{pos}"] = _stack(layers)
+        return params
+
+    if cfg.family == "ssm":
+        params["layers"] = _stack(
+            [
+                _decoder_layer_params(cfg, ini, moe=False, mamba=True)
+                for _ in range(cfg.n_layers)
+            ]
+        )
+        return params
+
+    if cfg.family == "vlm":
+        params["patch_proj"] = ini.mat(D, D)
+
+    # dense / moe / vlm decoder-only stacks
+    n_pre = cfg.first_dense_layers if cfg.n_experts else 0
+    if n_pre:
+        params["layers_pre"] = _stack(
+            [
+                _decoder_layer_params(cfg, ini, moe=False, mamba=False)
+                for _ in range(n_pre)
+            ]
+        )
+    params["layers"] = _stack(
+        [
+            _decoder_layer_params(
+                cfg, ini, moe=cfg.is_moe_layer(l), mamba=False
+            )
+            for l in range(n_pre, cfg.n_layers)
+        ]
+    )
+    return params
+
+
+def init_params(cfg: ArchConfig, key=None, abstract: bool = False):
+    """Materialized (key given) or abstract ShapeDtypeStruct params."""
+    if abstract:
+        return jax.eval_shape(
+            functools.partial(_make_params, cfg), jax.random.PRNGKey(0)
+        )
+    assert key is not None
+    return _make_params(cfg, key)
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+
+def _apply_ffn(cfg: ArchConfig, lp: dict, h: jax.Array):
+    if "moe" in lp:
+        return moe_ffn(cfg, lp["moe"], h)
+    if cfg.family == "audio":
+        return gelu_mlp(h, lp["ffn"]["w_in"], lp["ffn"]["b_in"], lp["ffn"]["w_out"],
+                        lp["ffn"]["b_out"])
+    return swiglu(h, lp["ffn"]["w_gate"], lp["ffn"]["w_up"], lp["ffn"]["w_down"])
+
+
+def _norm(cfg: ArchConfig, x, scale, bias=None):
+    if cfg.family == "audio":
+        return layer_norm(x, scale, bias, cfg.norm_eps)
+    return rms_norm(x, scale, cfg.norm_eps)
+
+
+def _decoder_layer(
+    cfg: ArchConfig,
+    lp: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: dict | None,
+    cache_len,
+):
+    """Pre-norm block: mixer (attn | mamba | mla) + FFN/MoE. Returns
+    (x, new_cache)."""
+    # layer-boundary residual: batch over data axes AND sequence over the
+    # model axis (Megatron-SP): norms/FFN are token-pointwise so the L-shard
+    # flows through; attention gathers only the small GQA K/V heads
+    x = constrain(x, ("dp", "tp", None))
+    h = _norm(cfg, x, lp["ln1"], lp.get("b1"))
+    if "mixer" in lp:
+        out, new_cache = mamba_block(cfg, lp["mixer"], h, cache)
+    elif cfg.mla:
+        out, new_cache = mla_attention(cfg, lp["attn"], h, positions, cache, cache_len)
+    else:
+        out, new_cache = gqa_attention(
+            cfg, lp["attn"], h, positions, cache, cache_len
+        )
+    x = x + out
+    x = constrain(x, ("dp", "tp", None))
+    h = _norm(cfg, x, lp["ln2"], lp.get("b2"))
+    x = x + _apply_ffn(cfg, lp, h)
+    return x, new_cache
+
+
+def _scan_stack(cfg, stacked, x, positions, caches, cache_len, remat=True):
+    """Scan a uniform stacked layer group. caches: stacked pytree or None."""
+
+    layer = functools.partial(_decoder_layer, cfg)
+    if remat:
+        layer = jax.checkpoint(layer)
+
+    if caches is None:
+
+        def body(h, lp):
+            h, _ = layer(lp, h, positions, None, cache_len)
+            return h, None
+
+        x, _ = maybe_scan(body, x, stacked)
+        return x, None
+
+    def body(h, inp):
+        lp, c = inp
+        h, new_c = layer(lp, h, positions, c, cache_len)
+        return h, new_c
+
+    x, new_caches = maybe_scan(body, x, (stacked, caches))
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# embeddings and heads
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg: ArchConfig, params, tokens):
+    return params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+
+
+def _head_matrix(cfg: ArchConfig, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T  # (D, V)
+    return params["lm_head"]
+
+
+def chunked_xent(
+    cfg: ArchConfig, hidden: jax.Array, head: jax.Array, targets: jax.Array,
+    chunk: int | None = None,
+):
+    """Cross-entropy. Default: ONE remat'd computation over the (SP-sharded)
+    sequence — per-device logits are (B_loc, L/tp, V) transients only.
+
+    §Perf-1 iteration A2 finding: slicing the loss into dynamic chunks
+    defeated GSPMD's sequence sharding (the traced slice offset forced an
+    all-gather of the f32 residual/cotangent — 30 GB/device on kimi-k2);
+    the optional ``chunk`` path is kept for unsharded long-L edge cases."""
+    B, L, D = hidden.shape
+
+    @jax.checkpoint  # recompute logits in bwd — never store (B, L, V)
+    def piece(h, t):
+        logits = jnp.einsum("bld,dv->blv", h, head.astype(h.dtype)).astype(
+            jnp.float32
+        )
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        # label logit via a one-hot contraction: vocab stays sharded (a
+        # take_along_axis here would all-gather the full logits — §Perf)
+        onehot = jax.nn.one_hot(t, logits.shape[-1], dtype=logits.dtype)
+        ll = jnp.einsum("blv,blv->bl", logits, onehot)
+        return (lse - ll).sum()
+
+    if chunk is None or chunk >= L:
+        return piece(hidden, targets) / (B * L)
+
+    c = chunk
+    assert L % c == 0
+    n = L // c
+
+    def body(acc, i):
+        h = jax.lax.dynamic_slice_in_dim(hidden, i * c, c, axis=1)
+        t = jax.lax.dynamic_slice_in_dim(targets, i * c, c, axis=1)
+        return acc + piece(h, t), None
+
+    total, _ = maybe_scan(body, jnp.zeros((), jnp.float32), jnp.arange(n), length=n)
+    return total / (B * L)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _backbone(cfg: ArchConfig, params, x, positions):
+    """Token-embedded input -> final hidden states (no cache)."""
+    if cfg.family == "hybrid":
+        period = cfg.attn_every
+        stacked = tuple(params[f"pos{p}"] for p in range(period))
+
+        def period_body(h, per_params):
+            for p in range(period):
+                layer = jax.checkpoint(functools.partial(_decoder_layer, cfg))
+                h, _ = layer(per_params[p], h, positions, None, None)
+            return h, None
+
+        x, _ = maybe_scan(period_body, x, stacked)
+        return x
+    if "layers_pre" in params:
+        x, _ = _scan_stack(cfg, params["layers_pre"], x, positions, None, None)
+    x, _ = _scan_stack(cfg, params["layers"], x, positions, None, None)
+    return x
+
+
+def _whisper_encode(cfg: ArchConfig, params, frames):
+    """frames (B, T, D) stub embeddings -> encoder output."""
+    B, T, D = frames.shape
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + sinusoidal_positions(jnp.arange(T), D, x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def body(h, lp):
+        a = layer_norm(h, lp["ln1"], lp["b1"], cfg.norm_eps)
+        out, _ = gqa_attention(cfg, lp["attn"], a, positions, causal=False)
+        h = h + out
+        f = layer_norm(h, lp["ln2"], lp["b2"], cfg.norm_eps)
+        h = h + gelu_mlp(f, lp["ffn"]["w_in"], lp["ffn"]["b_in"],
+                         lp["ffn"]["w_out"], lp["ffn"]["b_out"])
+        return h, None
+
+    x, _ = maybe_scan(jax.checkpoint(body), x, params["enc_layers"])
+    return layer_norm(x, params["enc_norm"], params["enc_norm_b"], cfg.norm_eps)
+
+
+def _whisper_decoder(cfg, params, x, positions, enc_out, caches, cache_len):
+    """Decoder stack; cross-attn K/V recomputed from enc_out per layer."""
+    H, hd = cfg.n_heads, cfg.head_dim_
+    B = x.shape[0]
+
+    def body(h, inp):
+        lp, c = inp
+        a = layer_norm(h, lp["ln1"], lp["b1"], cfg.norm_eps)
+        out, new_c = gqa_attention(cfg, lp["attn"], a, positions, c, cache_len)
+        h = h + out
+        xa = layer_norm(h, lp["ln_x"], lp["bx"], cfg.norm_eps)
+        ek = jnp.einsum(
+            "btd,do->bto", enc_out, lp["xattn"]["wk"].astype(h.dtype)
+        ).reshape(B, -1, H, hd)
+        ev = (
+            jnp.einsum("btd,do->bto", enc_out, lp["xattn"]["wv"].astype(h.dtype))
+            + lp["xattn"]["bv"].astype(h.dtype)
+        ).reshape(B, -1, H, hd)
+        h = h + cross_attention(cfg, lp["xattn"], xa, {"k": ek, "v": ev})
+        f = layer_norm(h, lp["ln2"], lp["b2"], cfg.norm_eps)
+        h = h + gelu_mlp(f, lp["ffn"]["w_in"], lp["ffn"]["b_in"],
+                         lp["ffn"]["w_out"], lp["ffn"]["b_out"])
+        return h, new_c
+
+    if caches is None:
+        x, _ = maybe_scan(
+            jax.checkpoint(lambda h, lp: (body(h, (lp, None))[0], None)),
+            x,
+            params["dec_layers"],
+        )
+        return x, None
+    x, new_caches = maybe_scan(jax.checkpoint(body), x, (params["dec_layers"], caches))
+    return x, new_caches
+
+
+def train_forward(cfg: ArchConfig, params, batch) -> tuple[jax.Array, dict]:
+    """batch: tokens (B, L) [+ frames (B, T, D) for audio, patches
+    (B, Np, D) for vlm]. Returns (mean xent loss, metrics)."""
+    tokens = batch["tokens"]
+    B, L = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    targets = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], axis=1
+    )
+
+    if cfg.family == "audio":
+        enc_out = _whisper_encode(cfg, params, batch["frames"])
+        x = _embed(cfg, params, tokens)
+        x = x + sinusoidal_positions(positions, cfg.d_model, x.dtype)
+        x, _ = _whisper_decoder(cfg, params, x, positions, enc_out, None, None)
+        x = layer_norm(x, params["final_norm"], params["final_norm_b"], cfg.norm_eps)
+    else:
+        x = _embed(cfg, params, tokens)
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(x.dtype) @ params["patch_proj"].astype(
+                x.dtype
+            )
+            n_p = patches.shape[1]
+            x = jnp.concatenate([patches, x[:, n_p:]], axis=1)
+        x = _backbone(cfg, params, x, positions)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    loss = chunked_xent(cfg, x, _head_matrix(cfg, params), targets)
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_shape(cfg: ArchConfig, layer: int, B: int, max_len: int):
+    dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.family in ("ssm", "hybrid") and not cfg.is_attn_layer(layer):
+        di, N, H, P, W = (
+            cfg.d_inner,
+            cfg.ssm_state,
+            cfg.n_ssm_heads,
+            cfg.ssm_head_dim,
+            cfg.ssm_conv_width,
+        )
+        return {
+            "conv": jax.ShapeDtypeStruct((B, W - 1, di + 2 * N), dt),
+            "ssm": jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        }
+    if cfg.mla:
+        return {
+            "c_kv": jax.ShapeDtypeStruct((B, max_len, cfg.kv_lora_rank), dt),
+            "k_rope": jax.ShapeDtypeStruct((B, max_len, cfg.rope_head_dim), dt),
+        }
+    hd = cfg.head_dim_
+    return {
+        "k": jax.ShapeDtypeStruct((B, max_len, cfg.n_kv_heads, hd), dt),
+        "v": jax.ShapeDtypeStruct((B, max_len, cfg.n_kv_heads, hd), dt),
+    }
+
+
+def init_cache(cfg: ArchConfig, B: int, max_len: int, abstract: bool = False):
+    """Stacked caches matching the layer-stack structure."""
+
+    def mk(shapes):
+        return jax.tree.map(
+            lambda s: s if abstract else jnp.zeros(s.shape, s.dtype), shapes,
+            is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct),
+        )
+
+    def stack_abstract(shapes_list):
+        def s(*leaves):
+            l0 = leaves[0]
+            return jax.ShapeDtypeStruct((len(leaves),) + l0.shape, l0.dtype)
+
+        out = jax.tree.map(
+            s, *shapes_list, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+        )
+        return mk(out)
+
+    if cfg.family == "audio":
+        dec = stack_abstract(
+            [_layer_cache_shape(cfg, l, B, max_len) for l in range(cfg.n_layers)]
+        )
+        enc_dt = jnp.dtype(cfg.compute_dtype)
+        enc_shape = jax.ShapeDtypeStruct((B, cfg.enc_positions, cfg.d_model), enc_dt)
+        return {"dec": dec, "enc_out": mk(enc_shape)}
+    if cfg.family == "hybrid":
+        period = cfg.attn_every
+        n_per = cfg.n_layers // period
+        return {
+            f"pos{p}": stack_abstract(
+                [
+                    _layer_cache_shape(cfg, per * period + p, B, max_len)
+                    for per in range(n_per)
+                ]
+            )
+            for p in range(period)
+        }
+    caches = {}
+    n_pre = cfg.first_dense_layers if cfg.n_experts else 0
+    if n_pre:
+        caches["pre"] = stack_abstract(
+            [_layer_cache_shape(cfg, l, B, max_len) for l in range(n_pre)]
+        )
+    caches["layers"] = stack_abstract(
+        [_layer_cache_shape(cfg, l, B, max_len) for l in range(n_pre, cfg.n_layers)]
+    )
+    return caches
+
+
+def decode_step(cfg: ArchConfig, params, caches, tokens, cache_len):
+    """One decode step: tokens (B, 1) at position cache_len. Returns
+    (logits (B, 1, V), new_caches)."""
+    B = tokens.shape[0]
+    positions = jnp.full((B, 1), cache_len, jnp.int32)
+
+    if cfg.family == "audio":
+        x = _embed(cfg, params, tokens)
+        x = x + sinusoidal_positions(positions, cfg.d_model, x.dtype)
+        x, dec_caches = _whisper_decoder(
+            cfg, params, x, positions, caches["enc_out"], caches["dec"], cache_len
+        )
+        x = layer_norm(x, params["final_norm"], params["final_norm_b"], cfg.norm_eps)
+        new_caches = {"dec": dec_caches, "enc_out": caches["enc_out"]}
+    elif cfg.family == "hybrid":
+        x = _embed(cfg, params, tokens)
+        period = cfg.attn_every
+        stacked = tuple(params[f"pos{p}"] for p in range(period))
+        cache_tup = tuple(caches[f"pos{p}"] for p in range(period))
+
+        def period_body(h, inp):
+            per_params, per_caches = inp
+            new_cs = []
+            for p in range(period):
+                h, c = _decoder_layer(
+                    cfg, per_params[p], h, positions, per_caches[p], cache_len
+                )
+                new_cs.append(c)
+            return h, tuple(new_cs)
+
+        x, new_tup = maybe_scan(period_body, x, (stacked, cache_tup))
+        new_caches = {f"pos{p}": new_tup[p] for p in range(period)}
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    else:
+        x = _embed(cfg, params, tokens)
+        new_caches = {}
+        if "pre" in caches:
+            x, new_caches["pre"] = _scan_stack(
+                cfg, params["layers_pre"], x, positions, caches["pre"], cache_len
+            )
+        x, new_caches["layers"] = _scan_stack(
+            cfg, params["layers"], x, positions, caches["layers"], cache_len
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    logits = jnp.einsum(
+        "bld,dv->blv", x, _head_matrix(cfg, params).astype(x.dtype)
+    ).astype(jnp.float32)
+    return logits, new_caches
+
+
+def prefill(cfg: ArchConfig, params, batch, max_len: int | None = None):
+    """Processes batch['tokens'] (B, L), returns (last-token logits, caches
+    filled up to L)."""
+    tokens = batch["tokens"]
+    B, L = tokens.shape
+    max_len = max_len or L
+    caches = init_cache(cfg, B, max_len)
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+
+    if cfg.family == "audio":
+        enc_out = _whisper_encode(cfg, params, batch["frames"])
+        x = _embed(cfg, params, tokens)
+        x = x + sinusoidal_positions(positions, cfg.d_model, x.dtype)
+        x, dec_caches = _whisper_decoder(
+            cfg, params, x, positions, enc_out, caches["dec"], 0
+        )
+        x = layer_norm(x, params["final_norm"], params["final_norm_b"], cfg.norm_eps)
+        new_caches = {"dec": dec_caches, "enc_out": enc_out}
+    elif cfg.family == "hybrid":
+        x = _embed(cfg, params, tokens)
+        period = cfg.attn_every
+        stacked = tuple(params[f"pos{p}"] for p in range(period))
+        cache_tup = tuple(caches[f"pos{p}"] for p in range(period))
+
+        def period_body(h, inp):
+            per_params, per_caches = inp
+            new_cs = []
+            for p in range(period):
+                layer = jax.checkpoint(functools.partial(_decoder_layer, cfg))
+                h, c = layer(per_params[p], h, positions, per_caches[p], 0)
+                new_cs.append(c)
+            return h, tuple(new_cs)
+
+        x, new_tup = maybe_scan(period_body, x, (stacked, cache_tup))
+        new_caches = {f"pos{p}": new_tup[p] for p in range(period)}
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    else:
+        x = _embed(cfg, params, tokens)
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(x.dtype) @ params["patch_proj"].astype(
+                x.dtype
+            )
+            n_p = patches.shape[1]
+            x = jnp.concatenate([patches, x[:, n_p:]], axis=1)
+        new_caches = {}
+        if "pre" in caches:
+            x, new_caches["pre"] = _scan_stack(
+                cfg, params["layers_pre"], x, positions, caches["pre"], 0
+            )
+        x, new_caches["layers"] = _scan_stack(
+            cfg, params["layers"], x, positions, caches["layers"], 0
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    last = x[:, -1:]
+    logits = jnp.einsum(
+        "bld,dv->blv", last, _head_matrix(cfg, params).astype(x.dtype)
+    ).astype(jnp.float32)
+    return logits, new_caches

@@ -1,0 +1,96 @@
+"""Training step factory: fwd/bwd, optional microbatch gradient
+accumulation, gradient clipping, optional int8 error-feedback compression,
+AdamW.  Pure function of (params, opt_state, batch) — jit/pjit-ready."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.model import train_forward
+from repro.train.grad_compress import ErrorFeedbackState, apply_error_feedback, ef_init
+from repro.train.optim import (
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    ef: Any  # ErrorFeedbackState | None
+
+
+def init_train_state(
+    cfg: ArchConfig,
+    key=None,
+    abstract: bool = False,
+    moment_dtype=None,
+    compress: bool = False,
+) -> TrainState:
+    from repro.models.model import init_params
+
+    params = init_params(cfg, key, abstract=abstract)
+    if abstract:
+        opt = jax.eval_shape(functools.partial(adamw_init, moment_dtype=moment_dtype), params)
+        ef = jax.eval_shape(ef_init, params) if compress else None
+    else:
+        opt = adamw_init(params, moment_dtype=moment_dtype)
+        ef = ef_init(params) if compress else None
+    return TrainState(params=params, opt=opt, ef=ef)
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    lr_schedule: Callable | None = None,
+    grad_accum: int = 1,
+    max_grad_norm: float = 1.0,
+    compress_grads: bool = False,
+):
+    lr_schedule = lr_schedule or cosine_schedule(3e-4, 100, 10000)
+
+    def loss_fn(params, batch):
+        loss, _ = train_forward(cfg, params, batch)
+        return loss
+
+    def compute_grads(params, batch):
+        if grad_accum == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        # microbatch accumulation: batch (B, ...) -> (A, B/A, ...)
+        def reshape(leaf):
+            return leaf.reshape((grad_accum, leaf.shape[0] // grad_accum) + leaf.shape[1:])
+
+        micro = jax.tree.map(reshape, batch)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            return (
+                loss_acc + loss,
+                jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g),
+            ), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), g0), micro)
+        scale = 1.0 / grad_accum
+        return loss * scale, jax.tree.map(lambda g: g * scale, grads)
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        loss, grads = compute_grads(state.params, batch)
+        ef = state.ef
+        if compress_grads:
+            grads, ef = apply_error_feedback(grads, ef)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = lr_schedule(state.opt.step)
+        params, opt = adamw_update(grads, state.opt, state.params, lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return TrainState(params=params, opt=opt, ef=ef), metrics
+
+    return train_step

@@ -1,0 +1,17 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_points(rng, n, d=8):
+    return rng.normal(size=(n, d)).astype(np.float32)
+
+
+def make_dist(rng, n, d=8):
+    x = make_points(rng, n, d)
+    d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    return np.sqrt(np.maximum(d2, 0)).astype(np.float32)

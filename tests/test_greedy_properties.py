@@ -1,0 +1,105 @@
+"""Hypothesis property tests on system-level invariants of the greedy
+optimizers (beyond the per-function identities in test_functions.py):
+
+- greedy gain sequence is non-increasing for submodular functions
+- the greedy prefix property: each prefix of the greedy order is itself the
+  greedy solution for the smaller budget
+- stochastic greedy expectation quality over seeds
+- knapsack/cover feasibility under random costs
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.common import mask_from_indices
+from repro.core import (
+    FacilityLocation,
+    SetCover,
+    cover_greedy,
+    create_kernel,
+    knapsack_greedy,
+    naive_greedy,
+    stochastic_greedy,
+)
+
+
+def _fl(rng, n=24):
+    x = rng.normal(size=(n, 5)).astype(np.float32)
+    return FacilityLocation.from_kernel(
+        np.asarray(create_kernel(x, metric="euclidean"))
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), budget=st.integers(2, 10))
+def test_greedy_gains_nonincreasing(seed, budget):
+    rng = np.random.default_rng(seed)
+    fn = _fl(rng)
+    res = naive_greedy(fn, budget, False, False)
+    gains = np.asarray(res.gains)
+    assert (np.diff(gains) <= 1e-5).all(), gains
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_greedy_prefix_property(seed):
+    rng = np.random.default_rng(seed)
+    fn = _fl(rng)
+    full = [i for i, _ in naive_greedy(fn, 8, False, False).as_list()]
+    for b in (2, 4, 6):
+        pre = [i for i, _ in naive_greedy(fn, b, False, False).as_list()]
+        assert pre == full[:b]
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_stochastic_quality_over_seeds(seed):
+    rng = np.random.default_rng(0)
+    fn = _fl(rng, n=48)
+    ref = float(naive_greedy(fn, 8).value)
+    st_val = float(stochastic_greedy(fn, 8, jax.random.PRNGKey(seed), 0.05).value)
+    assert st_val >= 0.85 * ref  # per-seed floor (expectation is 1-1/e-eps)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), budget=st.floats(1.0, 6.0))
+def test_knapsack_feasibility(seed, budget):
+    rng = np.random.default_rng(seed)
+    fn = _fl(rng)
+    costs = rng.uniform(0.3, 2.0, fn.n).astype(np.float32)
+    res = knapsack_greedy(fn, budget=budget, max_steps=fn.n, costs=costs)
+    chosen = [i for i, _ in res.as_list()]
+    assert sum(costs[i] for i in chosen) <= budget + 1e-5
+    assert len(set(chosen)) == len(chosen)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), frac=st.floats(0.2, 0.9))
+def test_cover_reaches_requested_coverage(seed, frac):
+    rng = np.random.default_rng(seed)
+    cover = rng.integers(0, 2, size=(20, 14)).astype(np.float32)
+    # ensure every concept coverable
+    cover[0] = 1.0
+    fn = SetCover.from_cover(cover)
+    total = float(fn.evaluate(jnp.ones(20, bool)))
+    res = cover_greedy(fn, coverage=frac * total, max_steps=20)
+    assert float(res.value) >= frac * total - 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_selected_indices_unique_and_valid(seed):
+    rng = np.random.default_rng(seed)
+    fn = _fl(rng)
+    res = naive_greedy(fn, 12, False, False)
+    idx = [i for i, _ in res.as_list()]
+    assert len(set(idx)) == len(idx)
+    assert all(0 <= i < fn.n for i in idx)
+    # value telescoping == oracle
+    np.testing.assert_allclose(
+        float(res.value),
+        float(fn.evaluate(mask_from_indices(res.order, fn.n))),
+        rtol=1e-4,
+    )

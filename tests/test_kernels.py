@@ -1,0 +1,150 @@
+"""Pallas kernel validation: shape/dtype sweeps against the ref.py oracles,
+executed in interpret mode on CPU (TPU is the compile target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ref
+from repro.kernels.fl_gains import fl_gains_pallas
+from repro.kernels.similarity_kernel import similarity_pallas
+
+SHAPES = [
+    (8, 8, 8),  # far below one tile
+    (50, 70, 33),  # ragged, sub-tile
+    (128, 128, 512),  # exactly one tile
+    (130, 257, 600),  # ragged, multi-tile
+    (256, 384, 1024),  # multiple tiles each dim
+]
+METRICS = ["dot", "cosine", "euclidean", "rbf"]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("metric", METRICS)
+def test_similarity_matches_ref_fp32(shape, metric, rng):
+    n, m, d = shape
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = rng.normal(size=(m, d)).astype(np.float32)
+    got = np.asarray(similarity_pallas(x, y, metric=metric, interpret=True))
+    want = np.asarray(ref.similarity_ref(jnp.asarray(x), jnp.asarray(y), metric))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("metric", ["dot", "rbf"])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_similarity_dtypes(metric, dtype, rng):
+    x = jnp.asarray(rng.normal(size=(96, 200)).astype(np.float32), dtype)
+    y = jnp.asarray(rng.normal(size=(64, 200)).astype(np.float32), dtype)
+    got = np.asarray(similarity_pallas(x, y, metric=metric, interpret=True))
+    want = np.asarray(ref.similarity_ref(x, y, metric))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("block", [(64, 128), (256, 512), (128, 256)])
+def test_similarity_block_shapes(block, rng):
+    bn, bk = block
+    x = rng.normal(size=(100, 300)).astype(np.float32)
+    y = rng.normal(size=(90, 300)).astype(np.float32)
+    got = np.asarray(
+        similarity_pallas(x, y, metric="dot", interpret=True, bn=bn, bm=bn, bk=bk)
+    )
+    want = np.asarray(ref.similarity_ref(jnp.asarray(x), jnp.asarray(y), "dot"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+FL_SHAPES = [(8, 8), (40, 60), (256, 512), (300, 700), (513, 1025)]
+
+
+@pytest.mark.parametrize("shape", FL_SHAPES)
+def test_fl_gains_matches_ref(shape, rng):
+    u, n = shape
+    s = rng.uniform(0, 1, size=(u, n)).astype(np.float32)
+    cm = rng.uniform(0, 1, size=(u,)).astype(np.float32)
+    got = np.asarray(fl_gains_pallas(s, cm, interpret=True))
+    want = np.asarray(ref.fl_gains_ref(jnp.asarray(s), jnp.asarray(cm)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_fl_gains_dtypes(dtype, rng):
+    s = jnp.asarray(rng.uniform(0, 1, size=(300, 400)).astype(np.float32), dtype)
+    cm = jnp.asarray(rng.uniform(0, 1, size=(300,)).astype(np.float32), jnp.float32)
+    got = np.asarray(fl_gains_pallas(s, cm, interpret=True))
+    want = np.asarray(ref.fl_gains_ref(s, cm))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    u=st.integers(3, 200),
+    n=st.integers(3, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fl_gains_property(u, n, seed):
+    rng = np.random.default_rng(seed)
+    s = rng.uniform(0, 1, size=(u, n)).astype(np.float32)
+    cm = rng.uniform(0, 1, size=(u,)).astype(np.float32)
+    got = np.asarray(fl_gains_pallas(s, cm, interpret=True, bu=64, bn=128))
+    want = np.asarray(ref.fl_gains_ref(jnp.asarray(s), jnp.asarray(cm)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+    assert (got >= -1e-6).all()  # gains of a monotone function
+
+
+def test_fl_function_kernel_path_matches_plain(rng):
+    """FacilityLocation(use_kernel=True) routes gains through the Pallas op
+    and must select the identical greedy set."""
+    from repro.core import FacilityLocation, create_kernel, naive_greedy
+
+    x = rng.normal(size=(80, 16)).astype(np.float32)
+    S = np.asarray(create_kernel(x, metric="euclidean"))
+    plain = FacilityLocation.from_kernel(S, use_kernel=False)
+    fused = FacilityLocation.from_kernel(S, use_kernel=True)
+    r1 = naive_greedy(plain, 10)
+    r2 = naive_greedy(fused, 10)
+    assert list(np.asarray(r1.order)) == list(np.asarray(r2.order))
+    np.testing.assert_allclose(
+        np.asarray(r1.gains), np.asarray(r2.gains), rtol=1e-5, atol=1e-5
+    )
+
+
+FUSED_SHAPES = [(40, 60, 16), (300, 700, 128), (256, 512, 300), (513, 1025, 80)]
+
+
+@pytest.mark.parametrize("shape", FUSED_SHAPES)
+def test_fused_fl_sweep_matches_ref(shape, rng):
+    """Beyond-paper fused similarity+gain kernel (EXPERIMENTS §Perf-3/C3):
+    the O(n^2) kernel matrix never exists; gains come straight from the
+    embeddings through a VMEM tile accumulator."""
+    from repro.kernels.fused_fl_sweep import (
+        fused_fl_sweep_pallas,
+        fused_fl_sweep_ref,
+    )
+
+    u, n, d = shape
+    x = rng.normal(size=(u, d)).astype(np.float32)
+    y = rng.normal(size=(n, d)).astype(np.float32)
+    cm = rng.uniform(0, 3, size=(u,)).astype(np.float32)
+    got = np.asarray(
+        fused_fl_sweep_pallas(x, y, cm, interpret=True, bu=128, bn=128, bk=64)
+    )
+    want = np.asarray(
+        fused_fl_sweep_ref(jnp.asarray(x), jnp.asarray(y), jnp.asarray(cm))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_fused_fl_sweep_dtypes(dtype, rng):
+    from repro.kernels.fused_fl_sweep import (
+        fused_fl_sweep_pallas,
+        fused_fl_sweep_ref,
+    )
+
+    x = jnp.asarray(rng.normal(size=(100, 96)).astype(np.float32), dtype)
+    y = jnp.asarray(rng.normal(size=(90, 96)).astype(np.float32), dtype)
+    cm = jnp.asarray(rng.uniform(0, 2, size=(100,)).astype(np.float32))
+    got = np.asarray(fused_fl_sweep_pallas(x, y, cm, interpret=True))
+    want = np.asarray(fused_fl_sweep_ref(x, y, cm))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=5e-2)

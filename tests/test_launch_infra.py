@@ -1,0 +1,144 @@
+"""Launch/dry-run infrastructure units: HLO collective parser, sharding
+rules (divisibility filter, policy), roofline math, serve engine, and the
+distributed stochastic greedy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.distributed.sharding import (
+    auto_policy,
+    axis_size,
+    data_axes,
+    filter_divisible,
+    param_specs,
+)
+from repro.launch.dryrun import collective_bytes_from_hlo
+from repro.launch.mesh import make_test_mesh
+from repro.launch.specs import SHAPES, cell_applicable, input_specs
+
+
+def test_collective_parser_counts_result_bytes():
+    hlo = """
+  %x = f32[16,1024]{1,0} parameter(0)
+  %ag = f32[256,1024]{1,0} all-gather(%x), replica_groups={}
+  %ar.1 = bf16[512]{0} all-reduce(%y), to_apply=%sum
+  %start = f32[64]{0} all-reduce-start(%z)
+  %done = f32[64]{0} all-reduce-done(%start)
+  ROOT %t = (f32[8]{0}) tuple(%ag)
+"""
+    out = collective_bytes_from_hlo(hlo)
+    assert out["all-gather"] == 256 * 1024 * 4
+    # -done excluded, -start counted once
+    assert out["all-reduce"] == 512 * 2 + 64 * 4
+    assert out["counts"]["all-gather"] == 1
+    assert out["counts"]["all-reduce"] == 2
+
+
+def test_filter_divisible_drops_uneven_axes():
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    # model axis size 1 always divides; fake a larger mesh via axis_size math
+    spec = filter_divisible(P("model", "data"), (28, 64), mesh)
+    assert spec == P("model", "data")  # size-1 axes divide everything
+    assert axis_size(mesh, ("data", "model")) == 1
+
+
+def test_param_specs_policies():
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    params = {
+        "layers": {"attn": {"wq": jnp.zeros((2, 64, 64))}},
+        "m": {"layers": {"attn": {"wq": jnp.zeros((2, 64, 64))}}},
+    }
+    fsdp = param_specs(params, mesh, "fsdp")
+    dp = param_specs(params, mesh, "dp")
+    # dp policy: compute weights replicated, optimizer moments still sharded
+    assert dp["layers"]["attn"]["wq"] == P(None, None, None)
+    assert dp["m"]["layers"]["attn"]["wq"] == fsdp["m"]["layers"]["attn"]["wq"]
+
+
+def test_auto_policy_thresholds():
+    assert auto_policy(get_config("whisper-small").param_count()) == "dp"
+    assert auto_policy(get_config("qwen3-0.6b").param_count()) == "dp"
+    assert auto_policy(get_config("mamba2-370m").param_count()) == "dp"
+    assert auto_policy(get_config("kimi-k2-1t-a32b").param_count()) == "fsdp"
+    assert auto_policy(get_config("command-r-plus-104b").param_count()) == "fsdp"
+
+
+def test_cell_applicability_rules():
+    # long_500k only for sub-quadratic archs
+    assert cell_applicable("mamba2-370m", "long_500k")
+    assert cell_applicable("jamba-1.5-large-398b", "long_500k")
+    for arch in ("qwen3-0.6b", "kimi-k2-1t-a32b", "whisper-small"):
+        assert not cell_applicable(arch, "long_500k")
+        assert cell_applicable(arch, "train_4k")
+    # 32 applicable model cells total
+    from repro.configs.archs import ALL_ARCHS
+
+    n = sum(
+        1 for a in ALL_ARCHS for s in SHAPES if cell_applicable(a, s)
+    )
+    assert n == 32
+
+
+def test_input_specs_shapes():
+    cfg = get_config("whisper-small")
+    spec = input_specs(cfg, SHAPES["train_4k"])
+    assert spec["tokens"].shape == (256, 4096)
+    assert spec["frames"].shape == (256, 1500, 768)
+    spec = input_specs(get_config("qwen2-vl-7b"), SHAPES["prefill_32k"])
+    assert spec["patches"].shape == (32, 256, 3584)
+    spec = input_specs(get_config("qwen3-0.6b"), SHAPES["decode_32k"])
+    assert spec["tokens"].shape == (128, 1)
+
+
+def test_roofline_model_flops():
+    import json
+
+    from benchmarks.roofline import _model_flops
+
+    rec = {
+        "arch": "qwen3-0.6b",
+        "params_active": 596_000_000,
+        "n_devices": 256,
+    }
+    cell = {"kind": "train", "seq_len": 4096, "global_batch": 256}
+    mf = _model_flops(rec, cell)
+    expect = 6 * 596e6 * 4096 * 256 / 256
+    np.testing.assert_allclose(mf, expect, rtol=1e-3)
+
+
+def test_distributed_stochastic_greedy_quality(rng):
+    from repro.core import FacilityLocation, create_kernel, naive_greedy
+    from repro.core.optimizers.distributed import (
+        distributed_stochastic_fl_greedy,
+    )
+    from repro.common import mask_from_indices
+
+    cents = rng.normal(scale=4, size=(8, 6))
+    x = (cents[rng.integers(0, 8, 256)] + rng.normal(scale=0.5, size=(256, 6))).astype(
+        np.float32
+    )
+    S = np.asarray(create_kernel(x, metric="euclidean"))
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    ref = naive_greedy(FacilityLocation.from_kernel(S), 16)
+    order, _ = distributed_stochastic_fl_greedy(
+        S, 16, mesh, jax.random.PRNGKey(0), sample_per_shard=48
+    )
+    fn = FacilityLocation.from_kernel(S)
+    got = float(fn.evaluate(mask_from_indices(jnp.asarray(np.asarray(order)), 256)))
+    assert got >= 0.97 * float(ref.value)
+
+
+def test_serve_engine_generates(rng):
+    from repro.launch.serve import ServeEngine
+    from repro.models.model import init_params
+
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_len=48)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32)}
+    out = engine.generate(batch, gen_len=16)
+    assert out.shape == (2, 16)
+    assert np.asarray(out).min() >= 0 and np.asarray(out).max() < cfg.vocab

@@ -1,0 +1,139 @@
+"""Data pipeline + submodular selection integration tests.
+
+The headline behavioural test: FacilityLocation coreset selection over a
+multi-modal synthetic stream covers the latent modes far better than a
+random/streaming prefix of the same budget — the paper's 'efficient
+training' premise made measurable."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.data.pipeline import SyntheticTokens, embed_examples
+from repro.data.selection import SelectorConfig, SubmodularSelector
+from repro.models.model import init_params
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    data = SyntheticTokens(cfg, seq_len=64, n_modes=8, seed=0)
+    pool_idx = list(range(64))
+    emb = embed_examples(cfg, params, data.batch(pool_idx))
+    return cfg, params, data, pool_idx, emb
+
+
+def test_embeddings_cluster_by_mode(setup):
+    """Mode structure must be visible in embedding space (sanity for the
+    selection features)."""
+    cfg, params, data, pool_idx, emb = setup
+    emb = np.asarray(emb)
+    modes = np.asarray([data.mode_of(i) for i in pool_idx])
+    # within-mode distance < between-mode distance on average
+    d = ((emb[:, None] - emb[None, :]) ** 2).sum(-1) ** 0.5
+    same = modes[:, None] == modes[None, :]
+    off_diag = ~np.eye(len(pool_idx), dtype=bool)
+    within = d[same & off_diag].mean()
+    between = d[~same].mean()
+    assert within < 0.8 * between, (within, between)
+
+
+def test_coreset_covers_modes_better_than_prefix(setup):
+    cfg, params, data, pool_idx, emb = setup
+    sel = SubmodularSelector(
+        cfg, SelectorConfig(objective="representative", budget=8,
+                            use_pallas_kernel=False)
+    )
+    chosen = sel.select(emb)
+    modes_chosen = {data.mode_of(pool_idx[i]) for i in chosen}
+    modes_prefix = {data.mode_of(i) for i in pool_idx[:8]}
+    assert len(modes_chosen) >= len(modes_prefix)
+    assert len(modes_chosen) >= 7  # 8 picks should cover >= 7 of 8 modes
+
+
+def test_selector_objectives_run(setup):
+    cfg, params, data, pool_idx, emb = setup
+    q = emb[:4]
+    p = emb[4:8]
+    for objective, kwargs in [
+        ("representative", {}),
+        ("targeted", {"query_emb": q}),
+        ("diverse", {}),
+        ("privacy", {"private_emb": p}),
+    ]:
+        sel = SubmodularSelector(
+            cfg,
+            SelectorConfig(objective=objective, budget=6, use_pallas_kernel=False),
+        )
+        chosen = sel.select(emb, **kwargs)
+        assert len(chosen) == 6 and len(set(chosen.tolist())) == 6
+
+
+def test_targeted_selection_prefers_query_mode(setup):
+    """FLQMI with queries from one mode must pick pool items of that mode
+    (the paper's targeted-learning application)."""
+    cfg, params, data, pool_idx, emb = setup
+    target_mode = 3
+    q_idx = [i for i in pool_idx if data.mode_of(i) == target_mode][:4]
+    q_emb = np.asarray(emb)[q_idx]
+    sel = SubmodularSelector(
+        cfg, SelectorConfig(objective="targeted", budget=6, eta=1.0,
+                            use_pallas_kernel=False)
+    )
+    chosen = sel.select(emb, query_emb=jnp.asarray(q_emb))
+    hit = sum(1 for i in chosen if data.mode_of(pool_idx[i]) == target_mode)
+    assert hit >= 4, f"only {hit}/6 picks in the target mode"
+
+
+def test_synthetic_stream_deterministic():
+    cfg = get_config("qwen3-0.6b").reduced()
+    d1 = SyntheticTokens(cfg, 32, seed=5)
+    d2 = SyntheticTokens(cfg, 32, seed=5)
+    np.testing.assert_array_equal(d1.example(17), d2.example(17))
+    b = d1.batch([0, 1, 2])
+    assert b["tokens"].shape == (3, 32)
+
+
+_MULTIDEV_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    from repro.core import FacilityLocation, create_kernel, naive_greedy
+    from repro.core.optimizers.distributed import distributed_fl_greedy
+    from repro.launch.mesh import make_test_mesh
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(64, 8)).astype(np.float32)
+    S = np.asarray(create_kernel(x, metric="euclidean"))
+    mesh = make_test_mesh((4, 2), ("data", "model"))
+    order, gains = distributed_fl_greedy(
+        S, 10, mesh, row_axes=("model",), col_axes=("data",)
+    )
+    ref = naive_greedy(FacilityLocation.from_kernel(S), 10)
+    got = [int(i) for i in np.asarray(order)]
+    want = [i for i, _ in ref.as_list()]
+    assert got == want, (got, want)
+    print("MULTIDEV_OK")
+    """
+)
+
+
+def test_distributed_greedy_eight_devices():
+    """Real 8-device (4x2 mesh) run in a subprocess — proves the shard_map
+    greedy's collectives are correct, not just its single-device lowering."""
+    r = subprocess.run(
+        [sys.executable, "-c", _MULTIDEV_SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd="/root/repo",
+    )
+    assert "MULTIDEV_OK" in r.stdout, r.stdout + r.stderr
