@@ -1,0 +1,23 @@
+# Single entry point for tests and benchmarks (referenced from ROADMAP.md).
+#
+#   make test-fast   tier-1 suite (excludes @slow; the CI / pre-merge gate)
+#   make test-all    everything, including multi-device + heavy-arch tests
+#   make bench       benchmark driver (paper tables) + batched-engine bench
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test-fast test-all bench bench-batched
+
+test-fast:
+	$(PYTHON) -m pytest -x -q
+
+test-all:
+	$(PYTHON) -m pytest -q -m ""
+
+# benchmarks.run already includes batched_bench; bench-batched runs it alone
+bench:
+	$(PYTHON) -m benchmarks.run
+
+bench-batched:
+	$(PYTHON) -m benchmarks.batched_bench

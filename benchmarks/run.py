@@ -14,7 +14,13 @@ import time
 def main() -> None:
     csv = []
 
-    from benchmarks import mi_bench, modeling_bench, optimizers_bench, timing_bench
+    from benchmarks import (
+        batched_bench,
+        mi_bench,
+        modeling_bench,
+        optimizers_bench,
+        timing_bench,
+    )
 
     t0 = time.perf_counter()
     opt_rows = optimizers_bench.main()
@@ -24,6 +30,16 @@ def main() -> None:
         csv.append(
             (f"opt/{r['optimizer'].split('(')[0]}", r["ms_per_run"] * 1e3,
              f"evals={r['gain_evals']}")
+        )
+
+    t0 = time.perf_counter()
+    bat_rows = batched_bench.main()
+    csv.append(("batched_bench(engine)", (time.perf_counter() - t0) * 1e6,
+                f"best_speedup={max(r['engine_speedup'] for r in bat_rows):.2f}x"))
+    for r in bat_rows:
+        csv.append(
+            (f"batched/B={r['B']},n={r['n']}", r["engine_ms"] * 1e3,
+             f"qps={r['engine_qps']:.0f};speedup={r['engine_speedup']:.2f}x")
         )
 
     t0 = time.perf_counter()

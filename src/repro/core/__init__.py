@@ -22,6 +22,17 @@ from repro.core.info.gc import GCMI, gccg, gccmi
 from repro.core.info.logdet import logdet_cg, logdet_cmi, logdet_mi
 from repro.core.info.sc import psc_cg, psc_cmi, psc_mi, sc_cg, sc_cmi, sc_mi
 from repro.core.optimizers.api import maximize
+from repro.core.optimizers.backends import (
+    GainBackend,
+    full_sweep,
+    register_gain_backend,
+    resolve_backend,
+)
+from repro.core.optimizers.batched import (
+    BatchedEngine,
+    batched_maximize,
+    stack_functions,
+)
 from repro.core.optimizers.constrained import cover_greedy, knapsack_greedy
 from repro.core.optimizers.distributed import (
     distributed_fl_greedy,
@@ -78,6 +89,13 @@ __all__ = [
     "ConditionedFunction",
     "DifferenceFunction",
     "maximize",
+    "batched_maximize",
+    "BatchedEngine",
+    "stack_functions",
+    "GainBackend",
+    "register_gain_backend",
+    "resolve_backend",
+    "full_sweep",
     "naive_greedy",
     "lazy_greedy",
     "stochastic_greedy",

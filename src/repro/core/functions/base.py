@@ -40,6 +40,16 @@ class SetFunction:
         """
         return self.gains(state)[idxs]
 
+    def gain_backend(self):
+        """Advertise a fused full-sweep backend (see optimizers/backends.py).
+
+        Return an object with ``full_sweep(fn, state) -> (n,)`` — typically a
+        Pallas-kernel wrapper — or None to use the plain ``gains()`` XLA path.
+        Resolution happens at trace time, so the decision may only depend on
+        static meta fields.
+        """
+        return None
+
     def update(self, state, j: jax.Array):
         raise NotImplementedError
 

@@ -23,6 +23,17 @@ class FLState:
     n_rows: int
 
 
+class FLPallasSweep:
+    """GainBackend: fused relu-reduce sweep over the similarity matrix."""
+
+    name = "pallas-fl"
+
+    def full_sweep(self, fn: "FacilityLocation", state: FLState) -> jax.Array:
+        from repro.kernels import ops
+
+        return ops.fl_gains(fn.sim, state.curmax)
+
+
 @pytree_dataclass(meta_fields=("n", "use_kernel"))
 class FacilityLocation(SetFunction):
     sim: jax.Array  # (|U|, n) similarity, rows = represented set, cols = ground set
@@ -48,6 +59,9 @@ class FacilityLocation(SetFunction):
 
             return ops.fl_gains(self.sim, state.curmax)
         return jnp.maximum(self.sim - state.curmax[:, None], 0.0).sum(axis=0)
+
+    def gain_backend(self) -> FLPallasSweep | None:
+        return FLPallasSweep() if self.use_kernel else None
 
     def gains_at(self, state: FLState, idxs: jax.Array) -> jax.Array:
         cols = self.sim[:, idxs]  # (|U|, k)

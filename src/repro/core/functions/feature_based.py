@@ -19,22 +19,44 @@ class FBState:
     acc: jax.Array  # (F,) accumulated feature mass m_f(A)
 
 
-@pytree_dataclass(meta_fields=("n", "concave"))
+class FBPallasSweep:
+    """GainBackend: fused add -> concave -> weighted-reduce over the feature
+    matrix, streamed tile-wise (no (n, F) concave intermediate in HBM)."""
+
+    name = "pallas-fb"
+
+    def full_sweep(self, fn: "FeatureBased", state: FBState) -> jax.Array:
+        from repro.kernels import ops
+
+        return ops.fb_gains(fn.feats, state.acc, fn.w, fn.concave)
+
+
+@pytree_dataclass(meta_fields=("n", "concave", "use_kernel"))
 class FeatureBased(SetFunction):
     feats: jax.Array  # (n, F) non-negative feature scores
     w: jax.Array  # (F,)
     n: int
     concave: str = "sqrt"
+    use_kernel: bool = False  # route full sweeps through the Pallas kernel
 
     @staticmethod
     def from_features(
-        feats: jax.Array, w: jax.Array | None = None, concave: str = "sqrt"
+        feats: jax.Array,
+        w: jax.Array | None = None,
+        concave: str = "sqrt",
+        use_kernel: bool = False,
     ) -> "FeatureBased":
         feats = jnp.maximum(jnp.asarray(feats, jnp.float32), 0.0)
         F = feats.shape[1]
         w = jnp.ones((F,), jnp.float32) if w is None else jnp.asarray(w, jnp.float32)
         get_concave(concave)  # validate
-        return FeatureBased(feats=feats, w=w, n=int(feats.shape[0]), concave=concave)
+        return FeatureBased(
+            feats=feats,
+            w=w,
+            n=int(feats.shape[0]),
+            concave=concave,
+            use_kernel=use_kernel,
+        )
 
     def init_state(self) -> FBState:
         return FBState(acc=jnp.zeros((self.feats.shape[1],), jnp.float32))
@@ -51,6 +73,9 @@ class FeatureBased(SetFunction):
 
     def update(self, state: FBState, j: jax.Array) -> FBState:
         return FBState(acc=state.acc + self.feats[j])
+
+    def gain_backend(self) -> FBPallasSweep | None:
+        return FBPallasSweep() if self.use_kernel else None
 
     def evaluate(self, mask: jax.Array) -> jax.Array:
         g = get_concave(self.concave)

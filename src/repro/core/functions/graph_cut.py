@@ -20,18 +20,40 @@ from repro.core.functions.base import SetFunction
 class GCState:
     selsum: jax.Array  # (n,)  sum_{k in A} S_jk for every ground element j
     value: jax.Array  # running f(A), maintained by telescoping gains
+    selmask: jax.Array  # (n,) 0/1 selection indicator (feeds the fused sweep)
 
 
-@pytree_dataclass(meta_fields=("n",))
+class GCPallasSweep:
+    """GainBackend: one fused pass over S recomputing the sweep from the
+    selection mask (masked matvec + diag + combine in a single tile stream).
+
+    NOTE: this is the stateless O(n^2)-streamed sweep; the default memoized
+    ``gains()`` is O(n) per step and remains the faster choice inside long
+    greedy loops.  ``use_kernel=True`` targets one-shot / serving sweeps
+    where no memoized state is resident (see kernels/gc_gains.py)."""
+
+    name = "pallas-gc"
+
+    def full_sweep(self, fn: "GraphCut", state: GCState) -> jax.Array:
+        from repro.kernels import ops
+
+        return ops.gc_gains(fn.sim_ground, state.selmask, fn.total, fn.lam)
+
+
+@pytree_dataclass(meta_fields=("n", "use_kernel"))
 class GraphCut(SetFunction):
     sim_ground: jax.Array  # (n, n) kernel among ground-set elements
     total: jax.Array  # (n,) sum_{i in U} S_ij  (modular representation term)
     lam: jax.Array  # scalar trade-off
     n: int
+    use_kernel: bool = False  # route full sweeps through the Pallas kernel
 
     @staticmethod
     def from_kernel(
-        sim_ground: jax.Array, lam: float = 0.5, sim_rep: jax.Array | None = None
+        sim_ground: jax.Array,
+        lam: float = 0.5,
+        sim_rep: jax.Array | None = None,
+        use_kernel: bool = False,
     ) -> "GraphCut":
         """``sim_rep`` is the (|U|, n) represented-set kernel; defaults to the
         ground kernel itself (U == V), matching the paper's default."""
@@ -42,11 +64,16 @@ class GraphCut(SetFunction):
             total=total,
             lam=jnp.asarray(lam, sim_ground.dtype),
             n=int(sim_ground.shape[0]),
+            use_kernel=use_kernel,
         )
 
     def init_state(self) -> GCState:
         dt = self.sim_ground.dtype
-        return GCState(selsum=jnp.zeros((self.n,), dt), value=jnp.zeros((), dt))
+        return GCState(
+            selsum=jnp.zeros((self.n,), dt),
+            value=jnp.zeros((), dt),
+            selmask=jnp.zeros((self.n,), jnp.float32),
+        )
 
     def gains(self, state: GCState) -> jax.Array:
         diag = jnp.diagonal(self.sim_ground)
@@ -59,8 +86,13 @@ class GraphCut(SetFunction):
     def update(self, state: GCState, j: jax.Array) -> GCState:
         gain_j = self.gains_at(state, jnp.asarray(j)[None])[0]
         return GCState(
-            selsum=state.selsum + self.sim_ground[:, j], value=state.value + gain_j
+            selsum=state.selsum + self.sim_ground[:, j],
+            value=state.value + gain_j,
+            selmask=state.selmask.at[j].set(1.0),
         )
+
+    def gain_backend(self) -> GCPallasSweep | None:
+        return GCPallasSweep() if self.use_kernel else None
 
     def evaluate(self, mask: jax.Array) -> jax.Array:
         m = mask.astype(self.sim_ground.dtype)

@@ -1,0 +1,82 @@
+"""Pluggable gain-sweep backends for the greedy optimizers.
+
+The per-step full sweep — marginal gains for *every* candidate — is where
+greedy submodular maximization spends its time (paper §5, Table 3; apricot
+reports the same).  This module decouples *which implementation computes the
+sweep* from *which optimizer consumes it*:
+
+- :class:`GainBackend` is the protocol: ``full_sweep(fn, state) -> (n,)``.
+- Each :class:`~repro.core.functions.base.SetFunction` may advertise a fused
+  implementation by overriding ``gain_backend()`` (e.g. the Pallas kernels
+  behind FacilityLocation / GraphCut / FeatureBased).
+- :func:`register_gain_backend` lets callers plug in a backend for a function
+  class from the outside (profilers, alternative accelerators) without
+  touching the function's code; registry entries win over ``gain_backend()``.
+- Optimizers call :func:`full_sweep`, which resolves at trace time (backend
+  choice rides on static meta fields, so it is jit/vmap-transparent) and
+  falls back to the function's plain ``gains()`` XLA path.
+
+Partial sweeps (``gains_at``) stay on the function: they are gather-shaped,
+not kernel-shaped.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Protocol, runtime_checkable
+
+import jax
+
+
+@runtime_checkable
+class GainBackend(Protocol):
+    """A fused full-sweep implementation for one function family."""
+
+    name: str
+
+    def full_sweep(self, fn, state) -> jax.Array:
+        """Marginal gains f(j | A) for every ground element j, shape (n,)."""
+        ...
+
+
+class XlaSweep:
+    """Default backend: the function's own vectorized ``gains()``."""
+
+    name = "xla"
+
+    def full_sweep(self, fn, state) -> jax.Array:
+        return fn.gains(state)
+
+
+_XLA = XlaSweep()
+
+# class -> factory(fn) -> backend | None; external plug-in point
+_REGISTRY: dict[type, Callable[[object], Optional[GainBackend]]] = {}
+
+
+def register_gain_backend(
+    cls: type, factory: Callable[[object], Optional[GainBackend]]
+) -> None:
+    """Plug a backend factory in for ``cls`` (and subclasses).  The factory
+    receives the function instance and may return None to decline."""
+    _REGISTRY[cls] = factory
+
+
+def resolve_backend(fn) -> GainBackend:
+    """The backend serving ``fn``'s full sweeps: registry entry, else the
+    function's own ``gain_backend()``, else the XLA fallback."""
+    for klass in type(fn).__mro__:
+        factory = _REGISTRY.get(klass)
+        if factory is not None:
+            backend = factory(fn)
+            if backend is not None:
+                return backend
+    hook = getattr(fn, "gain_backend", None)
+    if callable(hook):
+        backend = hook()
+        if backend is not None:
+            return backend
+    return _XLA
+
+
+def full_sweep(fn, state) -> jax.Array:
+    """Marginal gains for all candidates, routed through the resolved backend."""
+    return resolve_backend(fn).full_sweep(fn, state)

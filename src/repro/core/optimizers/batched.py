@@ -1,0 +1,203 @@
+"""Batched multi-query greedy engine (serving-shaped maximization).
+
+``maximize`` answers one selection query per call; a deployment answering
+many users wants the B-query form: run B independent greedy problems — same
+function family, different kernels / queries / budgets — as ONE vmap-ed,
+jitted program, so every per-step full sweep becomes a single batched
+matmul-shaped op on the accelerator instead of B dispatches.
+
+Heterogeneity is expressed with padding masks rather than shape polymorphism:
+
+- different ground-set sizes: pad every instance's arrays to a common n and
+  pass ``valid`` (B, n) — padded candidates are masked to -inf and never
+  selected (``n_evals`` still counts the padded sweep width);
+- different budgets: pass a per-instance budget vector; the engine runs to
+  max(budgets) internally and freezes an instance once its budget is spent.
+
+The per-instance results are bit-identical to a Python loop of single
+``maximize`` calls (same sweep -> argmax -> update ordering, same stopping
+rule, same ``n_evals`` accounting); ``tests/test_batched.py`` pins this.
+Full sweeps route through the pluggable gain backend (backends.py), so a
+function family's fused Pallas sweep is used inside the batch too.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.optimizers.greedy import GreedyResult, _lazy_impl, _naive_impl
+
+
+def stack_functions(fns: Sequence) -> object:
+    """Stack B same-family SetFunction pytrees into one batched pytree.
+
+    All instances must share the treedef (same class, same static meta — n,
+    concave, use_kernel, ...) and per-leaf shapes; pad kernels/features to a
+    common n first and express the true sizes through ``valid`` masks.
+    """
+    fns = list(fns)
+    if not fns:
+        raise ValueError("stack_functions: need at least one function")
+    treedefs = {jax.tree.structure(f) for f in fns}
+    if len(treedefs) != 1:
+        raise ValueError(
+            "stack_functions: all instances must share one function family and "
+            f"static meta fields; got {len(treedefs)} distinct structures"
+        )
+    try:
+        return jax.tree.map(lambda *leaves: jnp.stack(leaves), *fns)
+    except (ValueError, TypeError) as e:
+        raise ValueError(
+            "stack_functions: leaf shapes differ across instances — pad every "
+            "kernel/feature matrix to a common ground-set size and pass a "
+            "`valid` mask to batched_maximize"
+        ) from e
+
+
+@partial(jax.jit, static_argnums=(1, 4, 5))
+def _batched_naive(fns, max_budget, budgets, valid, stop_if_zero, stop_if_negative):
+    # per-instance behaviour is greedy._naive_impl itself — the bit-identical
+    # contract with sequential naive_greedy holds by construction
+    return jax.vmap(
+        lambda fn, b, v: _naive_impl(
+            fn, max_budget, stop_if_zero, stop_if_negative, budget_i=b, valid=v
+        )
+    )(fns, budgets, valid)
+
+
+@partial(jax.jit, static_argnums=(1, 4, 5, 6))
+def _batched_lazy(
+    fns, max_budget, budgets, valid, screen_k, stop_if_zero, stop_if_negative
+):
+    return jax.vmap(
+        lambda fn, b, v: _lazy_impl(
+            fn,
+            max_budget,
+            screen_k,
+            stop_if_zero,
+            stop_if_negative,
+            budget_i=b,
+            valid=v,
+        )
+    )(fns, budgets, valid)
+
+
+class BatchedEngine:
+    """A reusable B-instance selection engine (the serving shape).
+
+    Stacking B kernel/feature matrices costs O(B * n * stat) HBM traffic, so
+    a server does it ONCE at ingest and then answers many selection calls
+    against the resident batch; each :meth:`maximize` is a single jitted
+    dispatch.  ``batched_maximize`` is the one-shot convenience wrapper.
+    """
+
+    def __init__(self, fns: Sequence, valid: jax.Array | None = None):
+        fns = list(fns)
+        if not fns:
+            raise ValueError("BatchedEngine: need at least one instance")
+        self.batch_size = len(fns)
+        self.n = fns[0].n
+        self.stacked = stack_functions(fns)
+        self.valid = (
+            jnp.ones((self.batch_size, self.n), bool)
+            if valid is None
+            else jnp.asarray(valid, bool)
+        )
+        if self.valid.shape != (self.batch_size, self.n):
+            raise ValueError(
+                f"valid mask must be ({self.batch_size}, {self.n}), "
+                f"got {self.valid.shape}"
+            )
+
+    def maximize(
+        self,
+        budget: int | Sequence[int],
+        optimizer: str = "NaiveGreedy",
+        return_result: bool = False,
+        **kwargs,
+    ) -> list:
+        B = self.batch_size
+        budgets = (
+            [int(budget)] * B
+            if isinstance(budget, (int, np.integer))
+            else [int(b) for b in budget]
+        )
+        if len(budgets) != B:
+            raise ValueError(
+                f"budget list has {len(budgets)} entries for {B} instances"
+            )
+        max_budget = max(budgets)
+        b_arr = jnp.asarray(budgets, jnp.int32)
+        stop_zero = kwargs.get("stopIfZeroGain", True)
+        stop_neg = kwargs.get("stopIfNegativeGain", True)
+        if optimizer == "NaiveGreedy":
+            res = _batched_naive(
+                self.stacked, max_budget, b_arr, self.valid, stop_zero, stop_neg
+            )
+        elif optimizer == "LazyGreedy":
+            res = _batched_lazy(
+                self.stacked,
+                max_budget,
+                b_arr,
+                self.valid,
+                kwargs.get("screen_k", 8),
+                stop_zero,
+                stop_neg,
+            )
+        else:
+            raise ValueError(
+                f"unknown optimizer {optimizer!r}; batched engine supports "
+                "'NaiveGreedy' and 'LazyGreedy'"
+            )
+        # one transfer for the whole batch, then host-side slicing — B tiny
+        # device slices would dominate small-query serving latency
+        order, gains, evals, value = jax.device_get(
+            (res.order, res.gains, res.n_evals, res.value)
+        )
+        results = [
+            GreedyResult(
+                order=order[i, :b],
+                gains=gains[i, :b],
+                n_evals=evals[i],
+                value=value[i],
+            )
+            for i, b in enumerate(budgets)
+        ]
+        return results if return_result else [r.as_list() for r in results]
+
+
+def batched_maximize(
+    fns: Sequence,
+    budget: int | Sequence[int],
+    optimizer: str = "NaiveGreedy",
+    valid: jax.Array | None = None,
+    return_result: bool = False,
+    **kwargs,
+) -> list:
+    """Solve B selection problems in one jitted program.
+
+    Args:
+      fns: B same-family SetFunction instances (identical static meta).
+      budget: shared int or per-instance sequence of ints.
+      optimizer: "NaiveGreedy" or "LazyGreedy".
+      valid: optional (B, n) bool — False marks padded candidates.
+      return_result: True -> list of per-instance :class:`GreedyResult`
+        (order/gains sliced to that instance's budget), False -> list of
+        submodlib-style [(index, gain), ...] lists.
+      kwargs: stopIfZeroGain / stopIfNegativeGain / screen_k, as `maximize`.
+
+    For repeated selections over the same instances, build a
+    :class:`BatchedEngine` once and call its ``maximize`` — that skips the
+    per-call restacking of the B kernels.
+    """
+    fns = list(fns)
+    if not fns:
+        return []
+    engine = BatchedEngine(fns, valid=valid)
+    return engine.maximize(
+        budget, optimizer=optimizer, return_result=return_result, **kwargs
+    )

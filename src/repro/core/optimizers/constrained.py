@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common import NEG_INF, pytree_dataclass
+from repro.core.optimizers.backends import full_sweep
 from repro.core.optimizers.greedy import GreedyResult, _tree_where
 
 
@@ -24,7 +25,7 @@ def cover_greedy(fn, coverage: jax.Array, max_steps: int, costs=None) -> GreedyR
 
     def body(i, carry):
         state, selected, order, gains, value, done = carry
-        g = jnp.where(selected, NEG_INF, fn.gains(state))
+        g = jnp.where(selected, NEG_INF, full_sweep(fn, state))
         ratio = g / costs_arr
         j = jnp.argmax(ratio)
         gj = g[j]
@@ -64,7 +65,7 @@ def knapsack_greedy(fn, budget: jax.Array, max_steps: int, costs=None) -> Greedy
 
     def body(i, carry):
         state, selected, spent, order, gains, done = carry
-        g = fn.gains(state)
+        g = full_sweep(fn, state)
         feasible = (~selected) & (spent + costs_arr <= budget)
         ratio = jnp.where(feasible, g / costs_arr, NEG_INF)
         j = jnp.argmax(ratio)

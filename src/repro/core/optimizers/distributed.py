@@ -31,18 +31,31 @@ from repro.common import NEG_INF
 _INT_MAX = jnp.int32(2**31 - 1)
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """jax.shard_map moved out of jax.experimental in newer releases and the
+    ``check_rep`` kwarg was renamed ``check_vma``; dispatch on what exists."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )
+
+
+def _axis_size(a: str):
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(a)
+    return jax.lax.psum(1, a)  # older jax: no lax.axis_size
+
+
 def _flat_axis_index(axes: Sequence[str]) -> jax.Array:
     idx = jnp.zeros((), jnp.int32)
     for a in axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * _axis_size(a) + jax.lax.axis_index(a)
     return idx
-
-
-def _flat_axis_size(axes: Sequence[str]) -> int:
-    s = 1
-    for a in axes:
-        s *= jax.lax.axis_size(a)
-    return s
 
 
 def distributed_fl_greedy(
@@ -64,7 +77,7 @@ def distributed_fl_greedy(
     in_spec = P(row_axes if row_axes else None, col_axes)
 
     @partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(in_spec,),
         out_specs=(P(), P()),
@@ -135,7 +148,7 @@ def distributed_stochastic_fl_greedy(
     in_spec = P(row_axes if row_axes else None, col_axes)
 
     @partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(in_spec, P()),
         out_specs=(P(), P()),
@@ -199,7 +212,7 @@ def distributed_flqmi_greedy(
     col_axes = tuple(col_axes)
 
     @partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(P(None, col_axes), P(col_axes)),
         out_specs=(P(), P()),

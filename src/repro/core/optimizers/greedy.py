@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common import NEG_INF, pytree_dataclass
+from repro.core.optimizers.backends import full_sweep
 
 
 @pytree_dataclass
@@ -45,6 +46,50 @@ def _should_stop(gj, stop_if_zero: bool, stop_if_negative: bool):
     return stop
 
 
+def _naive_impl(
+    fn,
+    budget: int,
+    stop_if_zero: bool,
+    stop_if_negative: bool,
+    budget_i=None,
+    valid=None,
+) -> GreedyResult:
+    """Single implementation behind :func:`naive_greedy` AND the batched
+    engine: ``budget_i`` (dynamic per-instance budget) and ``valid`` (padding
+    mask) are None for the plain single-query path — both are trace-time
+    decisions, so the None case lowers to exactly the unmasked program."""
+    n = fn.n
+    state = fn.init_state()
+
+    def body(i, carry):
+        state, selected, order, gains, evals, done = carry
+        blocked = selected if valid is None else selected | ~valid
+        g = jnp.where(blocked, NEG_INF, full_sweep(fn, state))
+        j = jnp.argmax(g)
+        gj = g[j]
+        past = jnp.zeros((), bool) if budget_i is None else i >= budget_i
+        stop = done | past | _should_stop(gj, stop_if_zero, stop_if_negative)
+        take = ~stop
+        new_state = fn.update(state, j)
+        state = _tree_where(take, new_state, state)
+        selected = selected.at[j].set(selected[j] | take)
+        order = order.at[i].set(jnp.where(take, j, -1))
+        gains = gains.at[i].set(jnp.where(take, gj, 0.0))
+        evals = evals + jnp.where(done | past, 0, n)
+        return state, selected, order, gains, evals, stop
+
+    carry = (
+        state,
+        jnp.zeros((n,), bool),
+        jnp.full((budget,), -1, jnp.int32),
+        jnp.zeros((budget,), jnp.float32),
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), bool),
+    )
+    state, selected, order, gains, evals, _ = jax.lax.fori_loop(0, budget, body, carry)
+    return GreedyResult(order=order, gains=gains, n_evals=evals, value=gains.sum())
+
+
 @partial(jax.jit, static_argnums=(1, 2, 3))
 def naive_greedy(
     fn,
@@ -57,33 +102,73 @@ def naive_greedy(
     On TPU the sweep is a single fused pass over the memoized statistics —
     the vectorized adaptation of the paper's per-element loop (DESIGN §2).
     """
+    return _naive_impl(fn, budget, stop_if_zero, stop_if_negative)
+
+
+def _lazy_impl(
+    fn,
+    budget: int,
+    screen_k: int,
+    stop_if_zero: bool,
+    stop_if_negative: bool,
+    budget_i=None,
+    valid=None,
+) -> GreedyResult:
+    """Single implementation behind :func:`lazy_greedy` AND the batched
+    engine (see :func:`_naive_impl` for the budget_i / valid contract)."""
     n = fn.n
+    k = min(screen_k, n)
     state = fn.init_state()
+    ub0 = full_sweep(fn, state)
 
     def body(i, carry):
-        state, selected, order, gains, evals, done = carry
-        g = jnp.where(selected, NEG_INF, fn.gains(state))
-        j = jnp.argmax(g)
-        gj = g[j]
-        stop = done | _should_stop(gj, stop_if_zero, stop_if_negative)
+        state, selected, ub, order, gains, evals, done = carry
+        blocked = selected if valid is None else selected | ~valid
+        ubm = jnp.where(blocked, NEG_INF, ub)
+        top_vals, top_idx = jax.lax.top_k(ubm, k)
+        # mask screened gains of blocked entries: when fewer than k eligible
+        # candidates remain, top_k spills into blocked indices whose true
+        # gain may be positive — without this they could be (re)selected
+        true_g = jnp.where(blocked[top_idx], NEG_INF, fn.gains_at(state, top_idx))
+        ub2 = ubm.at[top_idx].set(true_g)
+        best_i = jnp.argmax(true_g)
+        j_screen, g_screen = top_idx[best_i], true_g[best_i]
+        rest_max = jnp.max(ub2.at[top_idx].set(NEG_INF))
+        ok = g_screen >= rest_max - 1e-6
+
+        def fallback_sweep(_):
+            g_all = jnp.where(blocked, NEG_INF, full_sweep(fn, state))
+            j = jnp.argmax(g_all)
+            return j, g_all[j], g_all, jnp.int32(n)
+
+        def accept(_):
+            return j_screen, g_screen, ub2, jnp.int32(k)
+
+        j, gj, ub_new, cost = jax.lax.cond(ok, accept, fallback_sweep, None)
+        past = jnp.zeros((), bool) if budget_i is None else i >= budget_i
+        stop = done | past | _should_stop(gj, stop_if_zero, stop_if_negative)
         take = ~stop
         new_state = fn.update(state, j)
         state = _tree_where(take, new_state, state)
         selected = selected.at[j].set(selected[j] | take)
+        blocked = selected if valid is None else selected | ~valid
+        ub = jnp.where(blocked, NEG_INF, ub_new)
         order = order.at[i].set(jnp.where(take, j, -1))
         gains = gains.at[i].set(jnp.where(take, gj, 0.0))
-        evals = evals + jnp.where(done, 0, n)
-        return state, selected, order, gains, evals, stop
+        evals = evals + jnp.where(done | past, 0, cost)
+        return state, selected, ub, order, gains, evals, stop
 
     carry = (
         state,
         jnp.zeros((n,), bool),
+        ub0,
         jnp.full((budget,), -1, jnp.int32),
         jnp.zeros((budget,), jnp.float32),
-        jnp.zeros((), jnp.int32),
+        jnp.asarray(n, jnp.int32),  # the initial bound sweep
         jnp.zeros((), bool),
     )
-    state, selected, order, gains, evals, _ = jax.lax.fori_loop(0, budget, body, carry)
+    out = jax.lax.fori_loop(0, budget, body, carry)
+    state, selected, ub, order, gains, evals, _ = out
     return GreedyResult(order=order, gains=gains, n_evals=evals, value=gains.sum())
 
 
@@ -106,54 +191,7 @@ def lazy_greedy(
     refreshes all bounds).  Identical output to naive_greedy, far fewer gain
     evaluations on peaked gain distributions.
     """
-    n = fn.n
-    k = min(screen_k, n)
-    state = fn.init_state()
-    ub0 = fn.gains(state)
-
-    def body(i, carry):
-        state, selected, ub, order, gains, evals, done = carry
-        ubm = jnp.where(selected, NEG_INF, ub)
-        top_vals, top_idx = jax.lax.top_k(ubm, k)
-        true_g = fn.gains_at(state, top_idx)
-        ub2 = ubm.at[top_idx].set(true_g)
-        best_i = jnp.argmax(true_g)
-        j_screen, g_screen = top_idx[best_i], true_g[best_i]
-        rest_max = jnp.max(ub2.at[top_idx].set(NEG_INF))
-        ok = g_screen >= rest_max - 1e-6
-
-        def full_sweep(_):
-            g_all = jnp.where(selected, NEG_INF, fn.gains(state))
-            j = jnp.argmax(g_all)
-            return j, g_all[j], g_all, jnp.int32(n)
-
-        def accept(_):
-            return j_screen, g_screen, ub2, jnp.int32(k)
-
-        j, gj, ub_new, cost = jax.lax.cond(ok, accept, full_sweep, None)
-        stop = done | _should_stop(gj, stop_if_zero, stop_if_negative)
-        take = ~stop
-        new_state = fn.update(state, j)
-        state = _tree_where(take, new_state, state)
-        selected = selected.at[j].set(selected[j] | take)
-        ub = jnp.where(selected, NEG_INF, ub_new)
-        order = order.at[i].set(jnp.where(take, j, -1))
-        gains = gains.at[i].set(jnp.where(take, gj, 0.0))
-        evals = evals + jnp.where(done, 0, cost)
-        return state, selected, ub, order, gains, evals, stop
-
-    carry = (
-        state,
-        jnp.zeros((n,), bool),
-        ub0,
-        jnp.full((budget,), -1, jnp.int32),
-        jnp.zeros((budget,), jnp.float32),
-        jnp.asarray(n, jnp.int32),  # the initial bound sweep
-        jnp.zeros((), bool),
-    )
-    out = jax.lax.fori_loop(0, budget, body, carry)
-    state, selected, ub, order, gains, evals, _ = out
-    return GreedyResult(order=order, gains=gains, n_evals=evals, value=gains.sum())
+    return _lazy_impl(fn, budget, screen_k, stop_if_zero, stop_if_negative)
 
 
 def _sample_unselected(key, selected, size):
@@ -239,7 +277,7 @@ def lazier_than_lazy_greedy(
     s = sample_size or max(1, min(n, int(math.ceil(n / budget * math.log(1.0 / epsilon)))))
     k = min(screen_k, s)
     state = fn.init_state()
-    ub0 = fn.gains(state)
+    ub0 = full_sweep(fn, state)
 
     def body(i, carry):
         state, selected, ub, order, gains, evals, done = carry

@@ -9,7 +9,9 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import ref
+from repro.kernels.fb_gains import fb_gains_pallas
 from repro.kernels.fl_gains import fl_gains_pallas
+from repro.kernels.gc_gains import gc_gains_pallas
 from repro.kernels.similarity_kernel import similarity_pallas
 
 
@@ -27,6 +29,16 @@ def fl_gains(sim, curmax):
     return fl_gains_pallas(sim, curmax, interpret=_interpret())
 
 
+def gc_gains(sim, selmask, total, lam):
+    return gc_gains_pallas(sim, selmask, total, lam, interpret=_interpret())
+
+
+def fb_gains(feats, acc, w, concave: str = "sqrt"):
+    return fb_gains_pallas(feats, acc, w, concave=concave, interpret=_interpret())
+
+
 # re-export oracles for convenience
 similarity_ref = ref.similarity_ref
 fl_gains_ref = ref.fl_gains_ref
+gc_gains_ref = ref.gc_gains_ref
+fb_gains_ref = ref.fb_gains_ref

@@ -38,6 +38,39 @@ def fl_gains_ref(sim: jax.Array, curmax: jax.Array) -> jax.Array:
     return jnp.maximum(s32 - curmax.astype(jnp.float32)[:, None], 0.0).sum(axis=0)
 
 
+def gc_gains_ref(
+    sim: jax.Array, selmask: jax.Array, total: jax.Array, lam: jax.Array
+) -> jax.Array:
+    """Graph-cut marginal gains for all candidates from the selection mask.
+
+    gains_j = total_j - lam * (2 * selsum_j + S_jj),
+    selsum_j = sum_k S_jk * m_k;  sim (n, n), selmask/total (n,) -> (n,)
+    """
+    s32 = sim.astype(jnp.float32)
+    selsum = s32 @ selmask.astype(jnp.float32)
+    diag = jnp.diagonal(s32)
+    return total.astype(jnp.float32) - jnp.asarray(lam, jnp.float32) * (
+        2.0 * selsum + diag
+    )
+
+
+def fb_gains_ref(
+    feats: jax.Array, acc: jax.Array, w: jax.Array, concave: str = "sqrt"
+) -> jax.Array:
+    """Feature-based (concave-over-modular) gains for all candidates.
+
+    gains_j = sum_f w_f * (g(acc_f + X_jf) - g(acc_f));  feats (n, F) -> (n,)
+    """
+    from repro.common import get_concave
+
+    g = get_concave(concave)
+    x32 = feats.astype(jnp.float32)
+    a32 = acc.astype(jnp.float32)
+    return ((g(a32[None, :] + x32) - g(a32)[None, :]) * w.astype(jnp.float32)).sum(
+        axis=1
+    )
+
+
 def fl_gains_update_ref(
     sim: jax.Array, curmax: jax.Array, winner: jax.Array
 ) -> tuple[jax.Array, jax.Array]:

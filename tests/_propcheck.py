@@ -1,0 +1,119 @@
+"""Deterministic fallback for ``hypothesis`` in minimal environments.
+
+The property-test modules import hypothesis as:
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ModuleNotFoundError:
+        from _propcheck import given, settings, st
+
+When hypothesis is installed the real library is used unchanged.  When it is
+not, this shim replays each ``@given`` test over a seeded parameter grid:
+``max_examples`` draws from the declared strategies, seeded per-test from a
+stable hash of the test name, so failures reproduce run-to-run.  Only the
+strategy surface the suite actually uses is implemented (``integers``,
+``floats``, ``data``).
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def sample(self, rng: np.random.Generator):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.min_value, self.max_value = min_value, max_value
+
+    def sample(self, rng):
+        # hypothesis bounds are inclusive on both ends
+        return int(rng.integers(self.min_value, self.max_value + 1))
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value: float, max_value: float):
+        self.min_value, self.max_value = min_value, max_value
+
+    def sample(self, rng):
+        return float(rng.uniform(self.min_value, self.max_value))
+
+
+class _Data(_Strategy):
+    pass
+
+
+class DataObject:
+    """Interactive draw handle mirroring hypothesis' ``st.data()``."""
+
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy):
+        return strategy.sample(self._rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Integers:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Floats:
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def data() -> _Data:
+        return _Data()
+
+
+st = _Strategies()
+
+
+def _stable_seed(name: str) -> int:
+    return int.from_bytes(hashlib.sha256(name.encode()).digest()[:4], "big")
+
+
+def given(**strategies):
+    """Replay the test over a deterministic grid of strategy draws."""
+
+    def decorate(test_fn):
+        @functools.wraps(test_fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_pc_max_examples", _DEFAULT_MAX_EXAMPLES)
+            base = _stable_seed(test_fn.__qualname__)
+            for example in range(n):
+                rng = np.random.default_rng((base, example))
+                drawn = {
+                    name: DataObject(rng) if isinstance(strat, _Data) else strat.sample(rng)
+                    for name, strat in strategies.items()
+                }
+                test_fn(*args, **kwargs, **drawn)
+
+        # hide strategy-bound parameters from pytest's fixture resolution
+        sig = inspect.signature(test_fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for p in sig.parameters.values() if p.name not in strategies]
+        )
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Record max_examples on the (given-wrapped) test; deadline is a no-op."""
+
+    def decorate(fn):
+        fn._pc_max_examples = max_examples
+        return fn
+
+    return decorate

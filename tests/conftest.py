@@ -1,6 +1,23 @@
 import numpy as np
 import pytest
 
+# the largest reduced-arch configs dominate test_archs wall time; they stay
+# covered by `make test-all` but are cut from the tier-1 fast suite
+_HEAVY_ARCHS = (
+    "jamba-1.5-large-398b",
+    "whisper-small",
+    "deepseek-v2-236b",
+    "kimi-k2-1t-a32b",
+)
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if "test_archs.py" in item.nodeid and any(
+            a in item.nodeid for a in _HEAVY_ARCHS
+        ):
+            item.add_marker(pytest.mark.slow)
+
 
 @pytest.fixture(scope="session")
 def rng():

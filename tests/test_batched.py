@@ -1,0 +1,261 @@
+"""Optimizer-equivalence + batched-engine correctness.
+
+- lazy_greedy must match naive_greedy element-for-element on every function
+  class (the lazy bound screen is exact under submodularity)
+- batched_maximize must match a Python loop of single maximize calls per
+  instance — orders, gains, AND the n_evals accounting, exactly
+- padding masks: a zero-padded instance with a valid mask selects the same
+  set as the unpadded instance
+- _should_stop edge cases: the stopIfZeroGain / stopIfNegativeGain semantics
+  are pinned (zero-gain stops iff stopIfZeroGain; stopIfZeroGain subsumes
+  negative gains; with both off the budget is always exhausted)
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BatchedEngine,
+    FacilityLocation,
+    FeatureBased,
+    GraphCut,
+    LogDet,
+    ProbabilisticSetCover,
+    SetCover,
+    batched_maximize,
+    create_kernel,
+    lazy_greedy,
+    naive_greedy,
+)
+from repro.core.optimizers.greedy import _should_stop
+
+N = 32
+
+
+def _build(name, rng):
+    x = rng.normal(size=(N, 6)).astype(np.float32)
+    S = np.asarray(create_kernel(x, metric="cosine"))
+    if name == "fl":
+        return FacilityLocation.from_kernel(S)
+    if name == "fl_kernel":
+        return FacilityLocation.from_kernel(S, use_kernel=True)
+    if name == "gc":
+        return GraphCut.from_kernel(S, lam=0.3)
+    if name == "gc_kernel":
+        return GraphCut.from_kernel(S, lam=0.3, use_kernel=True)
+    if name == "logdet":
+        return LogDet.from_kernel(S + 0.5 * np.eye(N, dtype=np.float32))
+    if name == "sc":
+        return SetCover.from_cover(
+            rng.integers(0, 2, size=(N, 12)).astype(np.float32)
+        )
+    if name == "psc":
+        return ProbabilisticSetCover.from_probs(
+            rng.uniform(0, 0.9, size=(N, 10)).astype(np.float32)
+        )
+    if name == "fb":
+        return FeatureBased.from_features(
+            rng.uniform(0, 1, size=(N, 9)).astype(np.float32), concave="sqrt"
+        )
+    if name == "fb_kernel":
+        return FeatureBased.from_features(
+            rng.uniform(0, 1, size=(N, 9)).astype(np.float32),
+            concave="sqrt",
+            use_kernel=True,
+        )
+    raise KeyError(name)
+
+
+# every submodular function class (disparity functions are excluded: they are
+# not submodular, so the lazy bound screen carries no guarantee there)
+ALL_CLASSES = [
+    "fl",
+    "fl_kernel",
+    "gc",
+    "gc_kernel",
+    "logdet",
+    "sc",
+    "psc",
+    "fb",
+    "fb_kernel",
+]
+
+
+@pytest.mark.parametrize("name", ALL_CLASSES)
+def test_lazy_equals_naive_every_class(name, rng):
+    fn = _build(name, rng)
+    r_naive = naive_greedy(fn, 8, False, False)
+    r_lazy = lazy_greedy(fn, 8, 8, False, False)
+    assert list(np.asarray(r_naive.order)) == list(np.asarray(r_lazy.order))
+    np.testing.assert_allclose(
+        np.asarray(r_naive.gains), np.asarray(r_lazy.gains), rtol=1e-5, atol=1e-5
+    )
+    # NOTE: no n_evals <= naive assertion here — on flat gain distributions
+    # (e.g. probabilistic set cover) the bound screen's fallback sweeps can
+    # cost slightly more than naive; identical OUTPUT is the guarantee.
+    assert int(r_lazy.n_evals) >= fn.n  # at least the initial bound sweep
+
+
+def _fl_instances(rng, B, n=24):
+    fns = []
+    for _ in range(B):
+        x = rng.normal(size=(n, 5)).astype(np.float32)
+        S = np.asarray(create_kernel(x, metric="euclidean"))
+        fns.append(FacilityLocation.from_kernel(S))
+    return fns
+
+
+@pytest.mark.parametrize("optimizer", ["NaiveGreedy", "LazyGreedy"])
+def test_batched_matches_sequential_loop(optimizer, rng):
+    """B=8 instances, mixed budgets: per-instance results must be identical
+    to a Python loop of single maximize calls — including n_evals."""
+    B = 8
+    fns = _fl_instances(rng, B)
+    budgets = [5, 3, 7, 5, 2, 6, 4, 5]
+    single = {"NaiveGreedy": naive_greedy, "LazyGreedy": lazy_greedy}[optimizer]
+    batched = batched_maximize(fns, budgets, optimizer=optimizer, return_result=True)
+    assert len(batched) == B
+    for i, (fn, b) in enumerate(zip(fns, budgets)):
+        seq = single(fn, b)
+        assert list(np.asarray(seq.order)) == list(np.asarray(batched[i].order)), i
+        np.testing.assert_allclose(
+            np.asarray(seq.gains), np.asarray(batched[i].gains), rtol=1e-6
+        )
+        assert int(seq.n_evals) == int(batched[i].n_evals), i
+        np.testing.assert_allclose(
+            float(seq.value), float(batched[i].value), rtol=1e-5
+        )
+
+
+def test_batched_naive_eval_accounting_exact(rng):
+    """n_evals must be exactly (steps taken) * n for the naive engine."""
+    B = 4
+    n = 24
+    fns = _fl_instances(rng, B, n=n)
+    budgets = [3, 5, 1, 4]
+    res = batched_maximize(fns, budgets, return_result=True)
+    for r, b in zip(res, budgets):
+        steps = int((np.asarray(r.order) >= 0).sum())
+        assert steps == b  # monotone fn, budget < n: never stops early
+        assert int(r.n_evals) == steps * n
+
+
+def test_batched_valid_mask_padding(rng):
+    """Zero-padded instances + valid mask == the unpadded instance."""
+    n_small, n_pad = 20, 30
+    x = rng.normal(size=(n_small, 6)).astype(np.float32)
+    S = np.asarray(create_kernel(x, metric="euclidean"))
+    Sp = np.zeros((n_pad, n_pad), np.float32)
+    Sp[:n_small, :n_small] = S
+    fn_small = FacilityLocation.from_kernel(S)
+    fn_pad = FacilityLocation.from_kernel(Sp)
+    valid = np.zeros((4, n_pad), bool)
+    valid[:, :n_small] = True
+    res = batched_maximize(
+        [fn_pad] * 4, 5, valid=jnp.asarray(valid), return_result=True
+    )
+    seq = naive_greedy(fn_small, 5)
+    for r in res:
+        assert list(np.asarray(seq.order)) == list(np.asarray(r.order))
+        np.testing.assert_allclose(
+            np.asarray(seq.gains), np.asarray(r.gains), rtol=1e-6
+        )
+
+
+def test_batched_lazy_never_selects_padding(rng):
+    """Exhaustion edge case: with fewer valid candidates than screen_k and
+    stopping disabled, the lazy screen's top-k spills into padded indices —
+    they must be masked out, never selected."""
+    n_valid, n_pad = 4, 16
+    x = rng.normal(size=(n_valid, 4)).astype(np.float32)
+    S = np.asarray(create_kernel(x, metric="euclidean"))
+    Sp = np.zeros((n_pad, n_pad), np.float32)
+    Sp[:n_valid, :n_valid] = S
+    valid = np.zeros((2, n_pad), bool)
+    valid[:, :n_valid] = True
+    res = batched_maximize(
+        [FacilityLocation.from_kernel(Sp)] * 2,
+        10,  # budget far beyond the valid count
+        optimizer="LazyGreedy",
+        valid=jnp.asarray(valid),
+        return_result=True,
+        stopIfZeroGain=False,
+        stopIfNegativeGain=False,
+    )
+    for r in res:
+        order = np.asarray(r.order)
+        chosen = order[order >= 0]
+        # padded candidates must never appear (pre-fix, top_k spill let
+        # their unmasked 0-gains win over the NEG_INF-masked valid set)
+        assert (chosen < n_valid).all(), order
+        # the real selection (first n_valid picks) is unique; past
+        # exhaustion with stopping disabled the argmax degenerately repeats
+        # — same as the sequential optimizers, so not asserted against
+        assert len(set(chosen[:n_valid].tolist())) == n_valid, order
+
+
+def test_batched_engine_reuse(rng):
+    """A resident BatchedEngine answers repeated queries consistently and
+    supports per-call budgets."""
+    fns = _fl_instances(rng, 3)
+    engine = BatchedEngine(fns)
+    first = engine.maximize(4, return_result=True)
+    again = engine.maximize(4, return_result=True)
+    for a, b in zip(first, again):
+        assert list(np.asarray(a.order)) == list(np.asarray(b.order))
+    shorter = engine.maximize(2, return_result=True)
+    for a, s in zip(first, shorter):
+        assert list(np.asarray(a.order))[:2] == list(np.asarray(s.order))
+
+
+def test_batched_rejects_mixed_families(rng):
+    fl = _fl_instances(rng, 1, n=N)[0]
+    gc = _build("gc", rng)
+    with pytest.raises(ValueError):
+        batched_maximize([fl, gc], 3)
+    with pytest.raises(ValueError):
+        batched_maximize(_fl_instances(rng, 2), [3, 4, 5])  # budget len mismatch
+
+
+# -- _should_stop semantics ---------------------------------------------------
+
+
+def test_should_stop_truth_table():
+    """Pin the stopping rule: stop_if_zero uses gj <= 0 (so it subsumes
+    negatives), stop_if_negative uses gj < 0, both off never stops."""
+    cases = [
+        # (gain, stop_if_zero, stop_if_negative, expected)
+        (1.0, True, True, False),
+        (0.0, True, True, True),
+        (-1.0, True, True, True),
+        (0.0, False, True, False),  # zero gain allowed when only negatives stop
+        (-1e-6, False, True, True),
+        (0.0, True, False, True),
+        (-1.0, True, False, True),  # stop_if_zero alone still stops negatives
+        (0.0, False, False, False),
+        (-5.0, False, False, False),
+    ]
+    for g, sz, sn, want in cases:
+        got = bool(_should_stop(jnp.asarray(g, jnp.float32), sz, sn))
+        assert got == want, (g, sz, sn)
+
+
+def test_stop_flag_behaviour_on_modular_function(rng):
+    """Behavioural pin: modular SetCover with positive / zero / negative
+    element weights under each flag combination."""
+    n = 9
+    w = np.asarray([2.0, 1.5, 1.0, 0.0, 0.0, -0.5, -1.0, 3.0, 0.5], np.float32)
+    fn = SetCover.from_cover(np.eye(n, dtype=np.float32), w)
+
+    both = naive_greedy(fn, n, True, True)
+    assert sorted(i for i, _ in both.as_list()) == sorted(
+        int(i) for i in np.flatnonzero(w > 0)
+    )
+
+    neg_only = naive_greedy(fn, n, False, True)
+    chosen = [i for i, _ in neg_only.as_list()]
+    assert sorted(chosen) == sorted(int(i) for i in np.flatnonzero(w >= 0))
+
+    never = naive_greedy(fn, n, False, False)
+    assert len(never.as_list()) == n  # budget exhausted, negatives included
+    np.testing.assert_allclose(float(never.value), w.sum(), rtol=1e-6)

@@ -10,8 +10,11 @@ optimizers (beyond the per-function identities in test_functions.py):
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+    from _propcheck import given, settings, st
 
 from repro.common import mask_from_indices
 from repro.core import (

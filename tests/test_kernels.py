@@ -4,8 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+    from _propcheck import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.fl_gains import fl_gains_pallas
@@ -133,6 +136,128 @@ def test_fused_fl_sweep_matches_ref(shape, rng):
         fused_fl_sweep_ref(jnp.asarray(x), jnp.asarray(y), jnp.asarray(cm))
     )
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+# -- graph-cut gain sweep (backend-layer kernel) -----------------------------
+
+GC_SHAPES = [
+    (8,),  # far below one tile
+    (100,),  # ragged, sub-tile
+    (128,),  # exactly one tile (bj=bk=64 -> multi-tile, aligned)
+    (257,),  # ragged, multi-tile
+]
+
+
+@pytest.mark.parametrize("shape", GC_SHAPES)
+def test_gc_gains_matches_ref(shape, rng):
+    from repro.kernels.gc_gains import gc_gains_pallas
+
+    (n,) = shape
+    s = rng.uniform(0, 1, size=(n, n)).astype(np.float32)
+    s = (s + s.T) / 2
+    m = (rng.uniform(size=n) < 0.3).astype(np.float32)
+    tot = s.sum(axis=0).astype(np.float32)
+    got = np.asarray(gc_gains_pallas(s, m, tot, 0.4, interpret=True, bj=64, bk=64))
+    want = np.asarray(
+        ref.gc_gains_ref(jnp.asarray(s), jnp.asarray(m), jnp.asarray(tot), 0.4)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_gc_gains_dtypes(dtype, rng):
+    from repro.kernels.gc_gains import gc_gains_pallas
+
+    n = 150
+    s = jnp.asarray(rng.uniform(0, 1, size=(n, n)).astype(np.float32), dtype)
+    m = jnp.asarray((rng.uniform(size=n) < 0.5).astype(np.float32))
+    tot = jnp.asarray(rng.uniform(0, n, size=n).astype(np.float32))
+    got = np.asarray(gc_gains_pallas(s, m, tot, 0.25, interpret=True, bj=64, bk=64))
+    want = np.asarray(ref.gc_gains_ref(s, m, tot, 0.25))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=5e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(3, 200), seed=st.integers(0, 2**31 - 1))
+def test_gc_gains_property(n, seed):
+    from repro.kernels.gc_gains import gc_gains_pallas
+
+    rng = np.random.default_rng(seed)
+    s = rng.uniform(0, 1, size=(n, n)).astype(np.float32)
+    m = (rng.uniform(size=n) < 0.4).astype(np.float32)
+    tot = s.sum(axis=0).astype(np.float32)
+    lam = float(rng.uniform(0.0, 1.0))
+    got = np.asarray(gc_gains_pallas(s, m, tot, lam, interpret=True, bj=64, bk=64))
+    want = np.asarray(
+        ref.gc_gains_ref(jnp.asarray(s), jnp.asarray(m), jnp.asarray(tot), lam)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gc_function_kernel_path_matches_plain(rng):
+    """GraphCut(use_kernel=True) routes full sweeps through the Pallas gain
+    backend and must select the identical greedy set."""
+    from repro.core import GraphCut, create_kernel, naive_greedy
+
+    x = rng.normal(size=(70, 12)).astype(np.float32)
+    S = np.asarray(create_kernel(x, metric="cosine"))
+    plain = GraphCut.from_kernel(S, lam=0.3)
+    fused = GraphCut.from_kernel(S, lam=0.3, use_kernel=True)
+    r1 = naive_greedy(plain, 10, False, False)
+    r2 = naive_greedy(fused, 10, False, False)
+    assert list(np.asarray(r1.order)) == list(np.asarray(r2.order))
+    np.testing.assert_allclose(
+        np.asarray(r1.gains), np.asarray(r2.gains), rtol=1e-4, atol=1e-4
+    )
+
+
+# -- feature-based concave-over-modular sweep ---------------------------------
+
+FB_SHAPES = [(8, 5), (128, 128), (130, 70), (300, 33)]
+
+
+@pytest.mark.parametrize("shape", FB_SHAPES)
+@pytest.mark.parametrize("concave", ["sqrt", "log", "inverse"])
+def test_fb_gains_matches_ref(shape, concave, rng):
+    from repro.kernels.fb_gains import fb_gains_pallas
+
+    n, F = shape
+    feats = rng.uniform(0, 1, size=(n, F)).astype(np.float32)
+    acc = rng.uniform(0, 2, size=(F,)).astype(np.float32)
+    w = rng.uniform(0.5, 1.5, size=(F,)).astype(np.float32)
+    got = np.asarray(
+        fb_gains_pallas(feats, acc, w, concave=concave, interpret=True, bn=64, bf=64)
+    )
+    want = np.asarray(
+        ref.fb_gains_ref(jnp.asarray(feats), jnp.asarray(acc), jnp.asarray(w), concave)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_fb_gains_dtypes(dtype, rng):
+    from repro.kernels.fb_gains import fb_gains_pallas
+
+    feats = jnp.asarray(rng.uniform(0, 1, size=(90, 40)).astype(np.float32), dtype)
+    acc = jnp.asarray(rng.uniform(0, 2, size=(40,)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 1.5, size=(40,)).astype(np.float32))
+    got = np.asarray(fb_gains_pallas(feats, acc, w, interpret=True))
+    want = np.asarray(ref.fb_gains_ref(feats, acc, w))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=5e-2)
+
+
+def test_fb_function_kernel_path_matches_plain(rng):
+    from repro.core import FeatureBased, naive_greedy
+
+    feats = rng.uniform(0, 1, size=(60, 20)).astype(np.float32)
+    plain = FeatureBased.from_features(feats, concave="log")
+    fused = FeatureBased.from_features(feats, concave="log", use_kernel=True)
+    r1 = naive_greedy(plain, 10, False, False)
+    r2 = naive_greedy(fused, 10, False, False)
+    assert list(np.asarray(r1.order)) == list(np.asarray(r2.order))
+    np.testing.assert_allclose(
+        np.asarray(r1.gains), np.asarray(r2.gains), rtol=1e-4, atol=1e-4
+    )
 
 
 @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])

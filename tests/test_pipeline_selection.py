@@ -125,9 +125,13 @@ _MULTIDEV_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.slow
 def test_distributed_greedy_eight_devices():
     """Real 8-device (4x2 mesh) run in a subprocess — proves the shard_map
-    greedy's collectives are correct, not just its single-device lowering."""
+    greedy's collectives are correct, not just its single-device lowering.
+
+    slow: compiling the shard_map fori_loop for 8 host devices takes several
+    minutes on CPU; run via `make test-all`."""
     r = subprocess.run(
         [sys.executable, "-c", _MULTIDEV_SCRIPT],
         capture_output=True,
