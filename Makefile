@@ -1,13 +1,15 @@
-# Single entry point for tests and benchmarks (referenced from ROADMAP.md).
+# Single entry point for tests, benchmarks and doc checks (see README.md).
 #
 #   make test-fast   tier-1 suite (excludes @slow; the CI / pre-merge gate)
 #   make test-all    everything, including multi-device + heavy-arch tests
 #   make bench       benchmark driver (paper tables) + batched-engine bench
+#   make bench-serve serving throughput sweep (wave size x mesh shape)
+#   make docs-check  execute the code blocks in README.md and docs/*.md
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test-fast test-all bench bench-batched
+.PHONY: test-fast test-all bench bench-batched bench-serve docs-check
 
 test-fast:
 	$(PYTHON) -m pytest -x -q
@@ -21,3 +23,10 @@ bench:
 
 bench-batched:
 	$(PYTHON) -m benchmarks.batched_bench
+
+# own process: it must set --xla_force_host_platform_device_count pre-import
+bench-serve:
+	$(PYTHON) -m benchmarks.serve_bench
+
+docs-check:
+	$(PYTHON) tools/check_docs.py

@@ -1,0 +1,75 @@
+"""Serving a mixed selection workload — the three-family request wave.
+
+Submits FacilityLocation, GraphCut and FeatureBased selection requests with
+heterogeneous ground-set sizes and budgets to a :class:`SelectionServer`,
+which coalesces them into padded per-(family, n-bucket) waves, answers each
+wave with ONE batched-engine dispatch, and demultiplexes the responses.
+Every selection is verified bit-identical to a direct ``maximize`` call.
+
+    PYTHONPATH=src python examples/serving.py
+
+Add a 2-D device mesh to shard the waves (batch x data axes):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/serving.py --mesh 2x2
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import (
+    FacilityLocation,
+    FeatureBased,
+    GraphCut,
+    create_kernel,
+    maximize,
+)
+from repro.launch.serve import SelectionServer
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--mesh", default=None, help="BATCHxDATA grid, e.g. 2x2")
+args = ap.parse_args()
+
+rng = np.random.default_rng(0)
+
+
+def embeddings(n):
+    return rng.normal(size=(n, 16)).astype(np.float32)
+
+
+# a mixed workload: 2 coverage queries, 2 representation+diversity queries,
+# 2 feature-coverage queries — different ground-set sizes and budgets
+requests = []
+for n, budget in ((40, 6), (64, 8)):
+    S = np.asarray(create_kernel(embeddings(n), metric="euclidean"))
+    requests.append((FacilityLocation.from_kernel(S), budget))
+for n, budget in ((40, 5), (48, 7)):
+    S = np.asarray(create_kernel(embeddings(n), metric="euclidean"))
+    requests.append((GraphCut.from_kernel(S, lam=0.3), budget))
+for n, budget in ((40, 6), (56, 4)):
+    feats = rng.uniform(0, 1, size=(n, 24)).astype(np.float32)
+    requests.append((FeatureBased.from_features(feats, concave="sqrt"), budget))
+
+mesh = None
+if args.mesh:
+    import jax
+
+    b, d = (int(v) for v in args.mesh.lower().split("x"))
+    mesh = jax.make_mesh((b, d), ("batch", "data"))
+
+server = SelectionServer(mesh=mesh)
+responses = server.select(requests)
+
+print(f"{len(requests)} requests -> {server.stats.waves} waves\n")
+for (fn, budget), resp in zip(requests, responses):
+    ids = [i for i, _ in resp.selection]
+    print(
+        f"{type(fn).__name__:>16s} n={fn.n:3d} k={budget}  "
+        f"wave(B={resp.wave_size}, n_bucket={resp.n_bucket}, "
+        f"backend={resp.backend})  -> {ids}"
+    )
+    # the serving contract: identical to a direct single maximize call
+    assert resp.selection == maximize(fn, budget), "serving must be exact"
+
+print(f"\nall selections bit-identical to direct maximize calls")
+print(f"server stats: {server.stats.summary()}")

@@ -37,6 +37,10 @@ from repro.core.optimizers.constrained import cover_greedy, knapsack_greedy
 from repro.core.optimizers.distributed import (
     distributed_fl_greedy,
     distributed_flqmi_greedy,
+    register_shard_rule,
+    shard_rule,
+    sharded_batched_greedy,
+    stack_parts,
 )
 from repro.core.optimizers.greedy import (
     GreedyResult,
@@ -105,6 +109,10 @@ __all__ = [
     "knapsack_greedy",
     "distributed_fl_greedy",
     "distributed_flqmi_greedy",
+    "sharded_batched_greedy",
+    "shard_rule",
+    "register_shard_rule",
+    "stack_parts",
     "GreedyResult",
     "create_kernel",
     "build_extended_kernel",

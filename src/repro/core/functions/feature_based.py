@@ -64,12 +64,19 @@ class FeatureBased(SetFunction):
     def gains(self, state: FBState) -> jax.Array:
         g = get_concave(self.concave)
         base = g(state.acc)  # (F,)
-        return (g(state.acc[None, :] + self.feats) - base[None, :]) @ self.w
+        # elementwise-multiply + reduce rather than `@ w`: XLA lowers a
+        # batched matvec through a different GEMM tiling than the single
+        # instance, which shifts gains by ulps under vmap; the reduce form is
+        # bit-stable, keeping batched/sharded serving identical to single
+        # `maximize` calls.
+        diff = g(state.acc[None, :] + self.feats) - base[None, :]
+        return (diff * self.w[None, :]).sum(axis=-1)
 
     def gains_at(self, state: FBState, idxs: jax.Array) -> jax.Array:
         g = get_concave(self.concave)
         base = g(state.acc)
-        return (g(state.acc[None, :] + self.feats[idxs]) - base[None, :]) @ self.w
+        diff = g(state.acc[None, :] + self.feats[idxs]) - base[None, :]
+        return (diff * self.w[None, :]).sum(axis=-1)
 
     def update(self, state: FBState, j: jax.Array) -> FBState:
         return FBState(acc=state.acc + self.feats[j])

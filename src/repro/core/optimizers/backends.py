@@ -18,6 +18,15 @@ sweep* from *which optimizer consumes it*:
 
 Partial sweeps (``gains_at``) stay on the function: they are gather-shaped,
 not kernel-shaped.
+
+Shard-local reuse contract (distributed batched serving): backends must be
+pure functions of the ``fn`` pytree they are handed — no hidden global-shape
+assumptions — because ``optimizers/distributed.py`` applies them to
+*candidate-sliced local instances* inside shard_map + vmap.  A backend that
+honors this serves single queries, vmap-ed waves, and per-shard sweeps from
+the one implementation (the Pallas FL/FB sweeps do; GraphCut's stateless
+full-matrix sweep reads the global diagonal, so its shard rule uses the
+memoized form instead — see ``GCShardRule``).
 """
 from __future__ import annotations
 
@@ -80,3 +89,10 @@ def resolve_backend(fn) -> GainBackend:
 def full_sweep(fn, state) -> jax.Array:
     """Marginal gains for all candidates, routed through the resolved backend."""
     return resolve_backend(fn).full_sweep(fn, state)
+
+
+def backend_name(fn) -> str:
+    """Name of the backend serving ``fn``'s full sweeps ("xla", "pallas-fl",
+    ...).  Serving uses this to report which implementation answered a wave;
+    the README's function x backend matrix is generated from the same hook."""
+    return getattr(resolve_backend(fn), "name", "xla")

@@ -19,6 +19,15 @@ The per-instance results are bit-identical to a Python loop of single
 rule, same ``n_evals`` accounting); ``tests/test_batched.py`` pins this.
 Full sweeps route through the pluggable gain backend (backends.py), so a
 function family's fused Pallas sweep is used inside the batch too.
+
+Passing ``mesh=`` (a 2-D jax Mesh) promotes the engine to the **distributed
+batched** form: the batch axis shards over ``batch_axis`` and every
+instance's candidate axis over ``data_axis``, running the shard_map
+partition-greedy sweep from ``optimizers/distributed.py`` under a vmap over
+the local batch slice.  Results keep the same bit-identical contract
+(``tests/test_serving.py`` pins it on a >=4-device host mesh); only
+"NaiveGreedy" is supported sharded — under vmap/SPMD the lazy screen's
+branches both execute, so it cannot win there (see ROADMAP).
 """
 from __future__ import annotations
 
@@ -93,15 +102,51 @@ class BatchedEngine:
     a server does it ONCE at ingest and then answers many selection calls
     against the resident batch; each :meth:`maximize` is a single jitted
     dispatch.  ``batched_maximize`` is the one-shot convenience wrapper.
+
+    With ``mesh=`` the resident batch is laid out over a 2-D device mesh:
+    batch axis over ``batch_axis``, candidate axis over ``data_axis`` (B and
+    n must each be a multiple of the corresponding mesh axis size — the
+    serving coalescer in ``launch/coalesce.py`` pads waves to guarantee
+    this).
     """
 
-    def __init__(self, fns: Sequence, valid: jax.Array | None = None):
+    def __init__(
+        self,
+        fns: Sequence,
+        valid: jax.Array | None = None,
+        mesh: jax.sharding.Mesh | None = None,
+        batch_axis: str = "batch",
+        data_axis: str = "data",
+    ):
         fns = list(fns)
         if not fns:
             raise ValueError("BatchedEngine: need at least one instance")
         self.batch_size = len(fns)
         self.n = fns[0].n
-        self.stacked = stack_functions(fns)
+        self.mesh = mesh
+        self.batch_axis = batch_axis
+        self.data_axis = data_axis
+        if mesh is None:
+            self.stacked = stack_functions(fns)
+        else:
+            from repro.core.optimizers.distributed import shard_rule, stack_parts
+
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            for name, dim, what in (
+                (batch_axis, self.batch_size, "batch size"),
+                (data_axis, self.n, "ground-set size"),
+            ):
+                if name not in sizes:
+                    raise ValueError(
+                        f"mesh has no axis {name!r} (axes: {mesh.axis_names})"
+                    )
+                if dim % sizes[name]:
+                    raise ValueError(
+                        f"{what} {dim} is not a multiple of mesh axis "
+                        f"{name!r} size {sizes[name]}"
+                    )
+            self.rule = shard_rule(fns[0])
+            self.parts = stack_parts(self.rule, fns)
         self.valid = (
             jnp.ones((self.batch_size, self.n), bool)
             if valid is None
@@ -118,8 +163,12 @@ class BatchedEngine:
         budget: int | Sequence[int],
         optimizer: str = "NaiveGreedy",
         return_result: bool = False,
+        max_budget: int | None = None,
         **kwargs,
     ) -> list:
+        """Solve the resident batch.  ``max_budget`` optionally raises the
+        static loop bound above max(budgets) — serving uses bucketed bounds so
+        waves with different budget mixes share one compiled program."""
         B = self.batch_size
         budgets = (
             [int(budget)] * B
@@ -130,11 +179,38 @@ class BatchedEngine:
             raise ValueError(
                 f"budget list has {len(budgets)} entries for {B} instances"
             )
-        max_budget = max(budgets)
+        max_budget = max(budgets) if max_budget is None else int(max_budget)
+        if max_budget < max(budgets):
+            raise ValueError(
+                f"max_budget {max_budget} < largest per-instance budget "
+                f"{max(budgets)}"
+            )
         b_arr = jnp.asarray(budgets, jnp.int32)
         stop_zero = kwargs.get("stopIfZeroGain", True)
         stop_neg = kwargs.get("stopIfNegativeGain", True)
-        if optimizer == "NaiveGreedy":
+        if self.mesh is not None:
+            if optimizer != "NaiveGreedy":
+                raise ValueError(
+                    f"sharded BatchedEngine supports only 'NaiveGreedy', got "
+                    f"{optimizer!r} (the lazy screen's branches both execute "
+                    "under vmap/SPMD, so it cannot help there)"
+                )
+            from repro.core.optimizers.distributed import sharded_batched_greedy
+
+            order, gains, evals, value = sharded_batched_greedy(
+                self.rule,
+                self.parts,
+                b_arr,
+                self.valid,
+                max_budget=max_budget,
+                mesh=self.mesh,
+                batch_axes=(self.batch_axis,),
+                col_axes=(self.data_axis,),
+                stop_if_zero=stop_zero,
+                stop_if_negative=stop_neg,
+            )
+            res = GreedyResult(order=order, gains=gains, n_evals=evals, value=value)
+        elif optimizer == "NaiveGreedy":
             res = _batched_naive(
                 self.stacked, max_budget, b_arr, self.valid, stop_zero, stop_neg
             )
@@ -176,6 +252,9 @@ def batched_maximize(
     optimizer: str = "NaiveGreedy",
     valid: jax.Array | None = None,
     return_result: bool = False,
+    mesh: jax.sharding.Mesh | None = None,
+    batch_axis: str = "batch",
+    data_axis: str = "data",
     **kwargs,
 ) -> list:
     """Solve B selection problems in one jitted program.
@@ -183,11 +262,13 @@ def batched_maximize(
     Args:
       fns: B same-family SetFunction instances (identical static meta).
       budget: shared int or per-instance sequence of ints.
-      optimizer: "NaiveGreedy" or "LazyGreedy".
+      optimizer: "NaiveGreedy" or "LazyGreedy" ("NaiveGreedy" only with mesh).
       valid: optional (B, n) bool — False marks padded candidates.
       return_result: True -> list of per-instance :class:`GreedyResult`
         (order/gains sliced to that instance's budget), False -> list of
         submodlib-style [(index, gain), ...] lists.
+      mesh: optional 2-D mesh — shard the batch axis over ``batch_axis`` and
+        the candidate axis over ``data_axis`` (the distributed batched form).
       kwargs: stopIfZeroGain / stopIfNegativeGain / screen_k, as `maximize`.
 
     For repeated selections over the same instances, build a
@@ -197,7 +278,9 @@ def batched_maximize(
     fns = list(fns)
     if not fns:
         return []
-    engine = BatchedEngine(fns, valid=valid)
+    engine = BatchedEngine(
+        fns, valid=valid, mesh=mesh, batch_axis=batch_axis, data_axis=data_axis
+    )
     return engine.maximize(
         budget, optimizer=optimizer, return_result=return_result, **kwargs
     )

@@ -1,7 +1,21 @@
 """Multi-pod distributed partition greedy (DESIGN §2, §5).
 
-The ground set (kernel columns) is sharded over the data-parallel mesh axes
-and the represented set (kernel rows) over the model axis.  Each greedy step:
+Two layers live here:
+
+1. The original per-function partition greedies (``distributed_fl_greedy``
+   and friends): the ground set (kernel columns) sharded over the
+   data-parallel mesh axes, the represented set (kernel rows) over the model
+   axis.
+2. The generic **sharded batched engine** (serving tentpole): a B-query wave
+   runs with the batch axis sharded over one mesh axis and every instance's
+   candidate axis sharded over another — ``jax.vmap`` over the local batch
+   slice composed with the shard_map partition-greedy sweep.  Function
+   families plug in through :class:`ShardRule` adapters (registry mirrors
+   ``backends.register_gain_backend``), and each shard's gain sweep routes
+   through ``backends.full_sweep`` on a candidate-sliced local instance, so
+   fused Pallas sweeps are reused per shard.
+
+For the original partition greedy, each step:
 
   1. local partial gains      — fused relu-reduction on the resident block
   2. psum over the row axis   — full gains for the local candidate shard
@@ -20,7 +34,7 @@ Works on any mesh: ``col_axes`` may span ("pod", "data") so a 512-chip
 from __future__ import annotations
 
 from functools import partial
-from typing import Sequence
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -252,3 +266,345 @@ def distributed_flqmi_greedy(
         return order, gains
 
     return run(sim_qv, modular)
+
+
+# ---------------------------------------------------------------------------
+# Sharded batched greedy: B queries x sharded ground set on a 2-D mesh.
+# ---------------------------------------------------------------------------
+#
+# A ShardRule describes how one function family's pytree and greedy state
+# decompose over the candidate axis, so ONE generic shard_map program serves
+# every family.  Per instance (inside jax.vmap over the local batch slice):
+#
+#   parts  = the family's dynamic arrays, candidate axis sliced to V_loc
+#   state  = the memoized statistic; replicated (FL curmax, FB acc) or
+#            itself candidate-sharded (GC selsum)
+#   sweep  = local marginal gains for the V_loc resident candidates
+#   apply  = fold the globally elected winner into the state; at most one
+#            O(stat) psum broadcast (the winner's column/row)
+#
+# Bit-identical contract: rows/features are never split, so each candidate's
+# gain is the same float reduction as on one device; the first-index global
+# argmax is recovered exactly by local argmax -> pmax(gain) -> pmin(index).
+
+import dataclasses as _dataclasses
+
+
+class ShardRule:
+    """Family adapter for the generic sharded batched greedy.
+
+    Implementations are frozen dataclasses holding only static meta (they are
+    hashed into the jit cache key).  Methods run inside shard_map + vmap, so
+    ``parts`` / ``state`` are the per-instance local slices.
+    """
+
+    def global_parts(self, fn) -> tuple:
+        """Dynamic arrays of one instance, in a fixed order."""
+        raise NotImplementedError
+
+    def part_specs(self, batch_axes, col_axes) -> tuple:
+        """PartitionSpec per part for the B-stacked arrays (batch dim first)."""
+        raise NotImplementedError
+
+    def init_state(self, parts):
+        """Greedy state for A = {} from the local parts."""
+        raise NotImplementedError
+
+    def local_sweep(self, parts, state) -> jax.Array:
+        """Marginal gains for the V_loc local candidates, shape (V_loc,)."""
+        raise NotImplementedError
+
+    def apply_winner(self, parts, state, take, is_mine, wl, winner, col_axes):
+        """State after adding the elected ``winner`` (global index; ``wl`` is
+        its local column on the owning shard).  Must be a no-op when ``take``
+        is False and identical on every shard afterwards."""
+        raise NotImplementedError
+
+
+@_dataclasses.dataclass(frozen=True)
+class FLShardRule(ShardRule):
+    """FacilityLocation: columns sharded, rows (represented set) replicated;
+    curmax is replicated and updated via a psum broadcast of the winner's
+    column — the same O(U) payload as ``distributed_fl_greedy``."""
+
+    use_kernel: bool = False
+
+    def global_parts(self, fn):
+        return (fn.sim,)
+
+    def part_specs(self, batch_axes, col_axes):
+        return (P(batch_axes, None, col_axes),)
+
+    def init_state(self, parts):
+        (sim,) = parts
+        return jnp.zeros((sim.shape[0],), sim.dtype)
+
+    def local_sweep(self, parts, curmax):
+        from repro.core.functions.facility_location import FacilityLocation, FLState
+        from repro.core.optimizers.backends import full_sweep
+
+        (sim,) = parts
+        fn_loc = FacilityLocation(
+            sim=sim, n=int(sim.shape[1]), use_kernel=self.use_kernel
+        )
+        return full_sweep(fn_loc, FLState(curmax=curmax, n_rows=int(sim.shape[0])))
+
+    def apply_winner(self, parts, curmax, take, is_mine, wl, winner, col_axes):
+        (sim,) = parts
+        col = jnp.where(is_mine, sim[:, wl], 0.0)
+        col = jax.lax.psum(col, col_axes)
+        return jnp.where(take, jnp.maximum(curmax, col), curmax)
+
+
+@_dataclasses.dataclass(frozen=True)
+class GCShardRule(ShardRule):
+    """GraphCut: ground-kernel ROWS are the candidate axis (each shard keeps
+    the full row of its candidates), so selsum shards with the candidates and
+    the winner update is collective-free — every shard already holds the
+    winner's kernel value against its own candidates.
+
+    The sweep is the memoized O(n)-per-step form (``total - lam * (2 selsum
+    + diag)``); GraphCut's fused Pallas sweep is the *stateless* full-matrix
+    recompute, a different float reduction than the memoized form, so a
+    ``use_kernel=True`` GraphCut could not keep the bit-identical contract
+    here — the factory rejects it (single-device serving handles it fine)."""
+
+    def global_parts(self, fn):
+        return (fn.sim_ground, fn.total, jnp.diagonal(fn.sim_ground), fn.lam)
+
+    def part_specs(self, batch_axes, col_axes):
+        return (
+            P(batch_axes, col_axes, None),
+            P(batch_axes, col_axes),
+            P(batch_axes, col_axes),
+            P(batch_axes),
+        )
+
+    def init_state(self, parts):
+        block, total, diag, lam = parts
+        return jnp.zeros((block.shape[0],), block.dtype)
+
+    def local_sweep(self, parts, selsum):
+        block, total, diag, lam = parts
+        return total - lam * (2.0 * selsum + diag)
+
+    def apply_winner(self, parts, selsum, take, is_mine, wl, winner, col_axes):
+        block, total, diag, lam = parts
+        return jnp.where(take, selsum + block[:, winner], selsum)
+
+
+@_dataclasses.dataclass(frozen=True)
+class FBShardRule(ShardRule):
+    """FeatureBased: feature rows sharded over candidates, the accumulated
+    feature mass replicated; the winner's feature row is psum-broadcast."""
+
+    concave: str = "sqrt"
+    use_kernel: bool = False
+
+    def global_parts(self, fn):
+        return (fn.feats, fn.w)
+
+    def part_specs(self, batch_axes, col_axes):
+        return (P(batch_axes, col_axes, None), P(batch_axes))
+
+    def init_state(self, parts):
+        feats, w = parts
+        return jnp.zeros((feats.shape[1],), jnp.float32)
+
+    def local_sweep(self, parts, acc):
+        from repro.core.functions.feature_based import FBState, FeatureBased
+        from repro.core.optimizers.backends import full_sweep
+
+        feats, w = parts
+        fn_loc = FeatureBased(
+            feats=feats,
+            w=w,
+            n=int(feats.shape[0]),
+            concave=self.concave,
+            use_kernel=self.use_kernel,
+        )
+        return full_sweep(fn_loc, FBState(acc=acc))
+
+    def apply_winner(self, parts, acc, take, is_mine, wl, winner, col_axes):
+        feats, w = parts
+        row = jnp.where(is_mine, feats[wl], 0.0)
+        row = jax.lax.psum(row, col_axes)
+        return jnp.where(take, acc + row, acc)
+
+
+# class -> factory(fn) -> ShardRule | None, resolved along the MRO (the same
+# plug-in shape as backends.register_gain_backend)
+_SHARD_RULES: dict[type, Any] = {}
+
+
+def register_shard_rule(cls: type, factory) -> None:
+    """Plug a :class:`ShardRule` factory in for ``cls`` (and subclasses)."""
+    _SHARD_RULES[cls] = factory
+
+
+def shard_rule(fn) -> ShardRule:
+    """Resolve the shard rule serving ``fn``'s family, or raise."""
+    for klass in type(fn).__mro__:
+        factory = _SHARD_RULES.get(klass)
+        if factory is not None:
+            rule = factory(fn)
+            if rule is not None:
+                return rule
+    raise ValueError(
+        f"{type(fn).__name__} has no registered ShardRule; distributed "
+        "batched serving supports FacilityLocation / GraphCut / FeatureBased "
+        "(register more via register_shard_rule)"
+    )
+
+
+def _register_builtin_rules():
+    from repro.core.functions.facility_location import FacilityLocation
+    from repro.core.functions.feature_based import FeatureBased
+    from repro.core.functions.graph_cut import GraphCut
+
+    def _gc_rule(fn):
+        if fn.use_kernel:
+            raise ValueError(
+                "GraphCut with use_kernel=True cannot be mesh-sharded "
+                "bit-identically: single-device maximize sweeps through the "
+                "stateless Pallas recompute while the shard rule must use "
+                "the memoized form, and their float reductions differ. "
+                "Serve it single-device, or build the GraphCut with "
+                "use_kernel=False."
+            )
+        return GCShardRule()
+
+    register_shard_rule(
+        FacilityLocation, lambda fn: FLShardRule(use_kernel=fn.use_kernel)
+    )
+    register_shard_rule(GraphCut, _gc_rule)
+    register_shard_rule(
+        FeatureBased,
+        lambda fn: FBShardRule(concave=fn.concave, use_kernel=fn.use_kernel),
+    )
+
+
+_register_builtin_rules()
+
+
+def stack_parts(rule: ShardRule, fns: Sequence) -> tuple:
+    """Stack each instance's ``rule.global_parts`` into (B, ...) arrays."""
+    per = [rule.global_parts(f) for f in fns]
+    return tuple(
+        jnp.stack([p[k] for p in per]) for k in range(len(per[0]))
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "rule",
+        "max_budget",
+        "mesh",
+        "batch_axes",
+        "col_axes",
+        "stop_if_zero",
+        "stop_if_negative",
+    ),
+)
+def sharded_batched_greedy(
+    rule: ShardRule,
+    parts: tuple,
+    budgets: jax.Array,
+    valid: jax.Array,
+    *,
+    max_budget: int,
+    mesh: jax.sharding.Mesh,
+    batch_axes: Sequence[str] = ("batch",),
+    col_axes: Sequence[str] = ("data",),
+    stop_if_zero: bool = True,
+    stop_if_negative: bool = True,
+):
+    """Run a B-query naive-greedy wave over a (batch x data) mesh.
+
+    Args:
+      rule: the family's :class:`ShardRule` (static — part of the jit key).
+      parts: B-stacked dynamic arrays from :func:`stack_parts`.
+      budgets: (B,) int32 per-instance budgets (instances freeze once spent).
+      valid: (B, n) bool; False marks padded candidates.
+      max_budget: static loop bound, >= max(budgets).
+      mesh: mesh carrying ``batch_axes`` (batch sharding) + ``col_axes``
+        (candidate sharding); B and n must be multiples of the respective
+        axis sizes.
+
+    Returns ``(order, gains, n_evals, value)`` with shapes ``(B, max_budget)``,
+    ``(B, max_budget)``, ``(B,)``, ``(B,)`` — per instance bit-identical to
+    ``naive_greedy`` on one device (same sweep -> argmax -> update ordering,
+    same stopping rule, ``n_evals`` counting the padded sweep width n).
+    """
+    from repro.core.optimizers.greedy import _should_stop
+
+    batch_axes = tuple(batch_axes)
+    col_axes = tuple(col_axes)
+    B, n = valid.shape
+
+    @partial(
+        _shard_map,
+        mesh=mesh,
+        in_specs=(
+            rule.part_specs(batch_axes, col_axes),
+            P(batch_axes),
+            P(batch_axes, col_axes),
+        ),
+        out_specs=(
+            P(batch_axes, None),
+            P(batch_axes, None),
+            P(batch_axes),
+            P(batch_axes),
+        ),
+        check_vma=False,
+    )
+    def run(parts_l, budgets_l, valid_l):
+        def one(parts_i, budget_i, valid_i):
+            V_loc = valid_i.shape[0]
+            col_off = _flat_axis_index(col_axes) * V_loc
+            state0 = rule.init_state(parts_i)
+
+            def body(i, carry):
+                state, selected, order, gains, evals, done = carry
+                blocked = selected | ~valid_i
+                g = jnp.where(blocked, NEG_INF, rule.local_sweep(parts_i, state))
+                lbi = jnp.argmax(g)
+                lbg = g[lbi]
+                gbest = jax.lax.pmax(lbg, col_axes)
+                cand = jnp.where(lbg >= gbest, col_off + lbi, _INT_MAX)
+                winner = jax.lax.pmin(cand, col_axes)  # first global argmax
+                past = i >= budget_i
+                stop = done | past | _should_stop(
+                    gbest, stop_if_zero, stop_if_negative
+                )
+                take = ~stop
+                is_mine = (winner >= col_off) & (winner < col_off + V_loc)
+                wl = jnp.clip(winner - col_off, 0, V_loc - 1)
+                state = rule.apply_winner(
+                    parts_i, state, take, is_mine, wl, winner, col_axes
+                )
+                selected = selected | (
+                    take & is_mine & (jnp.arange(V_loc) == wl)
+                )
+                order = order.at[i].set(jnp.where(take, winner, -1))
+                gains = gains.at[i].set(jnp.where(take, gbest, 0.0))
+                evals = evals + jnp.where(done | past, 0, n)
+                return state, selected, order, gains, evals, stop
+
+            carry = (
+                state0,
+                jnp.zeros((V_loc,), bool),
+                jnp.full((max_budget,), -1, jnp.int32),
+                jnp.zeros((max_budget,), jnp.float32),
+                jnp.zeros((), jnp.int32),
+                jnp.zeros((), bool),
+            )
+            _, _, order, gains, evals, _ = jax.lax.fori_loop(
+                0, max_budget, body, carry
+            )
+            return order, gains, evals, gains.sum()
+
+        return jax.vmap(one)(parts_l, budgets_l, valid_l)
+
+    return run(parts, budgets, valid)

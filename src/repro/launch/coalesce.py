@@ -1,0 +1,239 @@
+"""Request coalescing for the selection server (launch/serve.py).
+
+Incoming selection requests are heterogeneous — different function families,
+ground-set sizes, budgets — while the batched engines want homogeneous,
+statically-shaped waves.  This module is the bridge:
+
+1. **pad**: each request's function is zero-padded along the candidate axis
+   to a power-of-two bucket size (zero rows/columns have zero marginal gain
+   for the supported families, so padding never changes the selection), with
+   a per-request ``valid`` row masking the padding;
+2. **group**: padded requests sharing (pytree structure, leaf shapes,
+   optimizer, stop flags) coalesce into waves of at most ``max_wave``;
+3. **bucket budgets**: a wave's static loop bound is the power-of-two bucket
+   of its largest budget, so waves with different budget mixes reuse one
+   compiled program (instances freeze once their own budget is spent);
+4. **pad the batch**: when serving on a mesh, the wave's batch dimension is
+   padded to a multiple of the batch-axis size with budget-0 copies of the
+   first instance (they finish in zero steps and are dropped at demux).
+
+The demultiplexing inverse lives on :class:`Wave`: results come back in wave
+order and :meth:`Wave.demux` maps them to request ids, dropping batch pads.
+
+Padding semantics are family-specific and registered in ``_PADDERS`` —
+FacilityLocation (zero COLUMNS only: the represented-set rows are never
+padded, because appending rows changes XLA's sum-reduction tree and shifts
+gains by ulps — see ``_pad_fl``), GraphCut (zero rows+columns, zero modular
+term — its gains are elementwise, so both axes pad exactly), FeatureBased
+(zero feature rows; the feature axis is untouched).  ``register_padder``
+plugs in more families.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.functions.facility_location import FacilityLocation
+from repro.core.functions.feature_based import FeatureBased
+from repro.core.functions.graph_cut import GraphCut
+
+
+@dataclasses.dataclass
+class SelectionRequest:
+    """One user query: select ``budget`` items under ``fn``."""
+
+    rid: int | str
+    fn: object  # a SetFunction instance
+    budget: int
+    optimizer: str = "NaiveGreedy"
+    stop_if_zero: bool = True
+    stop_if_negative: bool = True
+    screen_k: int = 8  # LazyGreedy screen width (ignored by NaiveGreedy)
+
+
+def next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 1 << (int(x) - 1).bit_length()
+
+
+def bucket_size(n: int, multiple: int = 1) -> int:
+    """Power-of-two bucket >= n, rounded up to a multiple (the mesh data-axis
+    size, so sharded waves always divide evenly)."""
+    b = next_pow2(n)
+    return -(-b // multiple) * multiple
+
+
+# ---------------------------------------------------------------------------
+# Family padders: fn, n_to -> equivalent instance over a padded ground set.
+# ---------------------------------------------------------------------------
+
+def _pad_fl(fn: FacilityLocation, n_to: int) -> FacilityLocation:
+    import jax.numpy as jnp
+
+    U, n = fn.sim.shape
+    # zero columns only: a padded candidate's gain is max(0 - curmax, 0) = 0
+    # and the valid mask blocks it.  The ROW (represented-set) axis is never
+    # padded — a gain is a sum-reduction over rows, and appending even exact
+    # zeros changes XLA's reduction tree and therefore the float result by
+    # ulps; keeping rows intact is what makes served FL selections
+    # bit-identical to unpadded `maximize`.  Requests with different row
+    # counts simply land in different waves (the wave key includes shapes).
+    sim = jnp.zeros((U, n_to), fn.sim.dtype).at[:, :n].set(fn.sim)
+    return FacilityLocation(sim=sim, n=n_to, use_kernel=fn.use_kernel)
+
+
+def _pad_gc(fn: GraphCut, n_to: int) -> GraphCut:
+    import jax.numpy as jnp
+
+    n = fn.n
+    sim = jnp.zeros((n_to, n_to), fn.sim_ground.dtype).at[:n, :n].set(fn.sim_ground)
+    total = jnp.zeros((n_to,), fn.total.dtype).at[:n].set(fn.total)
+    return GraphCut(
+        sim_ground=sim, total=total, lam=fn.lam, n=n_to, use_kernel=fn.use_kernel
+    )
+
+
+def _pad_fb(fn: FeatureBased, n_to: int) -> FeatureBased:
+    import jax.numpy as jnp
+
+    n = fn.n
+    feats = jnp.zeros((n_to, fn.feats.shape[1]), fn.feats.dtype).at[:n].set(fn.feats)
+    return FeatureBased(
+        feats=feats, w=fn.w, n=n_to, concave=fn.concave, use_kernel=fn.use_kernel
+    )
+
+
+_PADDERS: dict[type, Callable] = {
+    FacilityLocation: _pad_fl,
+    GraphCut: _pad_gc,
+    FeatureBased: _pad_fb,
+}
+
+
+def register_padder(cls: type, padder: Callable) -> None:
+    """Plug in ``padder(fn, n_to) -> fn_padded`` for a function family."""
+    _PADDERS[cls] = padder
+
+
+def pad_function(fn, n_to: int):
+    """Zero-pad ``fn``'s candidate axis to ``n_to`` (identity if equal)."""
+    if fn.n == n_to:
+        return fn
+    if fn.n > n_to:
+        raise ValueError(f"cannot pad n={fn.n} down to {n_to}")
+    for klass in type(fn).__mro__:
+        padder = _PADDERS.get(klass)
+        if padder is not None:
+            return padder(fn, n_to)
+    raise ValueError(
+        f"{type(fn).__name__} has no registered padder; serving supports "
+        "FacilityLocation / GraphCut / FeatureBased (register_padder adds more)"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Waves
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Wave:
+    """A homogeneous, statically-shaped batch ready for a batched engine."""
+
+    requests: list[SelectionRequest]  # the real requests, in batch order
+    fns: list  # padded instances; len >= len(requests) (batch pads at tail)
+    valid: np.ndarray  # (B, n_bucket) bool
+    budgets: list[int]  # per-slot budgets; 0 for batch-pad slots
+    max_budget: int  # static loop bound (pow2 bucket of the largest budget)
+    optimizer: str
+    stop_if_zero: bool
+    stop_if_negative: bool
+    screen_k: int
+    n_bucket: int
+
+    @property
+    def batch_size(self) -> int:
+        return len(self.fns)
+
+    @property
+    def n_padded_slots(self) -> int:
+        return len(self.fns) - len(self.requests)
+
+    def demux(self, results: Sequence) -> dict:
+        """Map per-slot engine results back to {rid: result}, dropping the
+        batch-pad slots.  ``results`` is whatever the engine returned, in
+        slot order (GreedyResults or [(idx, gain), ...] lists)."""
+        return {req.rid: results[i] for i, req in enumerate(self.requests)}
+
+
+def _wave_key(req: SelectionRequest, fn_padded) -> tuple:
+    structure = jax.tree.structure(fn_padded)
+    shapes = tuple(tuple(leaf.shape) for leaf in jax.tree.leaves(fn_padded))
+    return (
+        structure,
+        shapes,
+        req.optimizer,
+        req.stop_if_zero,
+        req.stop_if_negative,
+        req.screen_k,
+    )
+
+
+def coalesce(
+    requests: Sequence[SelectionRequest],
+    *,
+    max_wave: int = 64,
+    n_multiple: int = 1,
+    b_multiple: int = 1,
+) -> list[Wave]:
+    """Group requests into dispatchable waves.
+
+    Args:
+      requests: pending selection requests (any mix of families/sizes).
+      max_wave: cap on real requests per wave.
+      n_multiple: pad every n-bucket up to a multiple of this (the mesh
+        data-axis size for sharded serving).
+      b_multiple: pad every wave's batch up to a multiple of this (the mesh
+        batch-axis size for sharded serving).
+
+    Returns waves in first-arrival order of their earliest request.
+    """
+    groups: dict[tuple, list[tuple[SelectionRequest, object]]] = {}
+    for req in requests:
+        n_bucket = bucket_size(req.fn.n, n_multiple)
+        padded = pad_function(req.fn, n_bucket)
+        groups.setdefault(_wave_key(req, padded), []).append((req, padded))
+
+    waves = []
+    for key, members in groups.items():
+        _, _, optimizer, stop_zero, stop_neg, screen_k = key
+        for lo in range(0, len(members), max_wave):
+            chunk = members[lo : lo + max_wave]
+            reqs = [r for r, _ in chunk]
+            fns = [f for _, f in chunk]
+            budgets = [r.budget for r in reqs]
+            # batch pads: budget-0 copies of slot 0, dropped at demux
+            b_total = -(-len(fns) // b_multiple) * b_multiple
+            fns = fns + [fns[0]] * (b_total - len(fns))
+            budgets = budgets + [0] * (b_total - len(reqs))
+            n_bucket = fns[0].n
+            valid = np.zeros((b_total, n_bucket), bool)
+            for i in range(b_total):
+                true_n = reqs[i].fn.n if i < len(reqs) else reqs[0].fn.n
+                valid[i, :true_n] = True
+            waves.append(
+                Wave(
+                    requests=reqs,
+                    fns=fns,
+                    valid=valid,
+                    budgets=budgets,
+                    max_budget=next_pow2(max(budgets)) if max(budgets) else 1,
+                    optimizer=optimizer,
+                    stop_if_zero=stop_zero,
+                    stop_if_negative=stop_neg,
+                    screen_k=screen_k,
+                    n_bucket=n_bucket,
+                )
+            )
+    return waves

@@ -6,7 +6,7 @@ os.environ["XLA_FLAGS"] = (
 )
 # ^ MUST precede any jax import: jax locks the device count on first init.
 
-_DOC = """Multi-pod dry-run (assignment: MULTI-POD DRY-RUN).
+_DOC = """Multi-pod compile-only dry-run: cost/memory analysis without devices.
 
 For every applicable (arch × shape) cell, on the single-pod 16x16 mesh and
 the 2x16x16 multi-pod mesh:

@@ -1,4 +1,10 @@
-"""Production mesh construction (assignment: MULTI-POD DRY-RUN §1).
+"""Device-mesh construction for the dry-run / training / serving launchers.
+
+``make_production_mesh`` builds the 256-chip (single-pod 16x16) or 512-chip
+(2x16x16 multi-pod) target meshes that ``launch/dryrun.py`` lowers against;
+``make_test_mesh`` builds small host-device meshes for tests and CPU runs.
+Selection serving builds its own 2-D ("batch", "data") meshes directly via
+``jax.make_mesh`` — see launch/serve.py.
 
 A FUNCTION, not a module constant — importing this module never touches jax
 device state."""

@@ -1,87 +1,309 @@
-"""Batched serving engine: continuous prefill+decode over a request queue.
+"""Selection serving: a coalescing front door over the batched engines.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
-        --requests 8 --prompt-len 64 --gen-len 32
+This is the serving shape for submodular subset selection (the paper's
+engine is single-node, one query at a time): clients submit selection
+requests — a function instance, a budget, an optimizer — and the server
+answers them in **waves**:
+
+  submit()  ->  pending queue
+  flush()   ->  coalesce into padded (function-family, n-bucket) waves
+            ->  one batched-engine dispatch per wave
+                  (single device, or a 2-D batch x data mesh via ``mesh=``)
+            ->  demultiplex per-request responses + latency/throughput stats
+
+Results are bit-identical to a loop of single ``maximize`` calls per request
+(``tests/test_serving.py`` pins this): zero-padding adds zero-gain
+candidates that the ``valid`` mask blocks, budget bucketing only extends the
+frozen tail of the greedy loop, and the sharded path preserves the
+sweep -> first-argmax -> update ordering exactly.
+
+    # 8 host devices, 2x2 batch x data mesh, a mixed random workload:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.serve --requests 32 --mesh 2x2
+
+See docs/serving.md for the request lifecycle and benchmarks/serve_bench.py
+for the wave-size x mesh-shape throughput sweep.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+from typing import Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import get_config
-from repro.models.model import decode_step, init_params, prefill
+from repro.core.optimizers.backends import backend_name
+from repro.core.optimizers.batched import BatchedEngine
+from repro.launch.coalesce import SelectionRequest, Wave, coalesce
 
 
-class ServeEngine:
-    """Static-batch serving: prefill a batch of prompts, then decode greedily.
+@dataclasses.dataclass
+class SelectionResponse:
+    """Answer to one request, plus where/how it was served."""
 
-    The decode step is jit'd once per (batch, max_len) bucket — the same
-    program the dry-run lowers for decode_32k/long_500k."""
+    rid: int | str
+    selection: list  # [(index, gain), ...] in pick order, true-n index space
+    result: object  # the per-request GreedyResult (n_evals counts padded n)
+    wave_size: int  # real requests in the wave that served this
+    n_bucket: int  # padded ground-set size of that wave
+    backend: str  # gain-sweep backend that answered ("xla", "pallas-fl", ...)
+    latency_s: float  # wave dispatch wall time (shared by the wave)
 
-    def __init__(self, cfg, params, max_len: int):
-        self.cfg = cfg
-        self.params = params
-        self.max_len = max_len
-        self._decode = jax.jit(
-            lambda p, c, t, n: decode_step(cfg, p, c, t, n), donate_argnums=1
-        )
-        self._prefill = jax.jit(
-            lambda p, b: prefill(cfg, p, b, max_len=max_len)
-        )
 
-    def generate(self, batch: dict, gen_len: int):
-        B, L = batch["tokens"].shape
-        logits, caches = self._prefill(self.params, batch)
-        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        out = [tok]
-        for i in range(gen_len - 1):
-            logits, caches = self._decode(
-                self.params, caches, tok, jnp.asarray(L + i, jnp.int32)
+@dataclasses.dataclass
+class ServerStats:
+    """Aggregate accounting across flushes."""
+
+    requests: int = 0
+    waves: int = 0
+    slots: int = 0  # total engine slots dispatched (incl. batch pads)
+    padded_slots: int = 0  # batch-pad slots (wasted work)
+    wave_seconds: list = dataclasses.field(default_factory=list)
+
+    @property
+    def total_seconds(self) -> float:
+        return float(sum(self.wave_seconds))
+
+    @property
+    def qps(self) -> float:
+        t = self.total_seconds
+        return self.requests / t if t > 0 else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "requests": self.requests,
+            "waves": self.waves,
+            "slots": self.slots,
+            "padded_slots": self.padded_slots,
+            "total_s": round(self.total_seconds, 4),
+            "qps": round(self.qps, 1),
+        }
+
+
+class SelectionServer:
+    """Coalescing selection server over :class:`BatchedEngine`.
+
+    Args:
+      mesh: None for single-device serving, or a 2-D mesh whose
+        ``batch_axis`` shards the wave's batch dimension and ``data_axis``
+        shards every instance's candidate axis (the distributed batched
+        engine).  Wave padding automatically rounds up to the mesh axis
+        sizes.
+      max_wave: cap on real requests per wave (bounds per-wave latency).
+
+    The dispatch path is synchronous; ``submit`` only enqueues, so an async
+    front-end is a thin wrapper that calls ``flush`` on a timer or queue-depth
+    trigger and completes futures from the returned dict.
+    """
+
+    def __init__(
+        self,
+        mesh=None,
+        batch_axis: str = "batch",
+        data_axis: str = "data",
+        max_wave: int = 64,
+    ):
+        self.mesh = mesh
+        self.batch_axis = batch_axis
+        self.data_axis = data_axis
+        self.max_wave = max_wave
+        if mesh is not None:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            for name in (batch_axis, data_axis):
+                if name not in sizes:
+                    raise ValueError(
+                        f"mesh has no axis {name!r} (axes: {mesh.axis_names})"
+                    )
+            self.b_multiple = sizes[batch_axis]
+            self.n_multiple = sizes[data_axis]
+        else:
+            self.b_multiple = 1
+            self.n_multiple = 1
+        self._pending: list[SelectionRequest] = []
+        self._undelivered: dict = {}  # flushed but not yet returned to a caller
+        self._next_rid = 0
+        self.stats = ServerStats()
+
+    # -- request ingest ------------------------------------------------------
+
+    def submit(
+        self,
+        fn,
+        budget: int,
+        optimizer: str = "NaiveGreedy",
+        rid=None,
+        **kwargs,
+    ):
+        """Enqueue one selection request; returns its request id.
+
+        kwargs: stopIfZeroGain / stopIfNegativeGain / screen_k (LazyGreedy
+        only) — anything else raises, so a misspelled flag cannot silently
+        serve a request under the wrong stopping semantics.
+        """
+        if self.mesh is not None and optimizer != "NaiveGreedy":
+            raise ValueError(
+                f"sharded serving supports only 'NaiveGreedy', got {optimizer!r}"
             )
-            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-            out.append(tok)
-        return jnp.concatenate(out, axis=1)
+        unknown = set(kwargs) - {"stopIfZeroGain", "stopIfNegativeGain", "screen_k"}
+        if unknown:
+            raise TypeError(f"submit() got unknown option(s): {sorted(unknown)}")
+        if rid is None:
+            rid = self._next_rid
+            self._next_rid += 1
+        self._pending.append(
+            SelectionRequest(
+                rid=rid,
+                fn=fn,
+                budget=int(budget),
+                optimizer=optimizer,
+                stop_if_zero=kwargs.get("stopIfZeroGain", True),
+                stop_if_negative=kwargs.get("stopIfNegativeGain", True),
+                screen_k=int(kwargs.get("screen_k", 8)),
+            )
+        )
+        return rid
+
+    # -- dispatch ------------------------------------------------------------
+
+    def _dispatch(self, wave: Wave) -> dict:
+        t0 = time.perf_counter()
+        engine = BatchedEngine(
+            wave.fns,
+            valid=wave.valid,
+            mesh=self.mesh,
+            batch_axis=self.batch_axis,
+            data_axis=self.data_axis,
+        )
+        results = engine.maximize(
+            wave.budgets,
+            optimizer=wave.optimizer,
+            return_result=True,
+            max_budget=wave.max_budget,
+            stopIfZeroGain=wave.stop_if_zero,
+            stopIfNegativeGain=wave.stop_if_negative,
+            screen_k=wave.screen_k,
+        )
+        dt = time.perf_counter() - t0
+        self.stats.waves += 1
+        self.stats.requests += len(wave.requests)
+        self.stats.slots += wave.batch_size
+        self.stats.padded_slots += wave.n_padded_slots
+        self.stats.wave_seconds.append(dt)
+        name = backend_name(wave.fns[0])
+        by_rid = wave.demux(results)
+        return {
+            req.rid: SelectionResponse(
+                rid=req.rid,
+                selection=by_rid[req.rid].as_list(),
+                result=by_rid[req.rid],
+                wave_size=len(wave.requests),
+                n_bucket=wave.n_bucket,
+                backend=name,
+                latency_s=dt,
+            )
+            for req in wave.requests
+        }
+
+    def flush(self) -> dict:
+        """Coalesce + dispatch everything pending; returns {rid: response},
+        including any responses computed by an earlier ``select`` call on
+        behalf of requests it didn't own (nothing is ever dropped)."""
+        pending, self._pending = self._pending, []
+        responses, self._undelivered = self._undelivered, {}
+        for wave in coalesce(
+            pending,
+            max_wave=self.max_wave,
+            n_multiple=self.n_multiple,
+            b_multiple=self.b_multiple,
+        ):
+            responses.update(self._dispatch(wave))
+        return responses
+
+    def select(self, requests: Sequence[tuple]) -> list[SelectionResponse]:
+        """Convenience: submit (fn, budget) pairs, flush, return responses in
+        request order.  Responses to requests enqueued earlier via ``submit``
+        ride the same flush and are held for the next ``flush`` call."""
+        rids = [self.submit(fn, budget) for fn, budget in requests]
+        out = self.flush()
+        mine = [out.pop(r) for r in rids]
+        self._undelivered.update(out)
+        return mine
+
+
+# ---------------------------------------------------------------------------
+# CLI: serve a random mixed workload and report throughput.
+# ---------------------------------------------------------------------------
+
+def _random_requests(n_requests: int, seed: int = 0):
+    """A mixed FL / GraphCut / FeatureBased workload with varying n."""
+    from repro.core import FacilityLocation, FeatureBased, GraphCut, create_kernel
+
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        n = int(rng.choice([24, 32, 48, 64]))
+        budget = int(rng.integers(3, 9))
+        kind = i % 3
+        if kind == 0:
+            x = rng.normal(size=(n, 8)).astype(np.float32)
+            S = np.asarray(create_kernel(x, metric="euclidean"))
+            fn = FacilityLocation.from_kernel(S)
+        elif kind == 1:
+            x = rng.normal(size=(n, 8)).astype(np.float32)
+            S = np.asarray(create_kernel(x, metric="euclidean"))
+            fn = GraphCut.from_kernel(S, lam=0.3)
+        else:
+            feats = rng.uniform(0, 1, size=(n, 12)).astype(np.float32)
+            fn = FeatureBased.from_features(feats, concave="sqrt")
+        reqs.append((fn, budget))
+    return reqs
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen-len", type=int, default=32)
-    ap.add_argument("--full", action="store_true")
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument(
+        "--mesh",
+        default=None,
+        help="BATCHxDATA device grid, e.g. 2x2 (requires "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU); "
+        "default: single-device serving",
+    )
+    ap.add_argument("--max-wave", type=int, default=64)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
     a = ap.parse_args()
 
-    cfg = get_config(a.arch)
-    if not a.full:
-        cfg = cfg.reduced()
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-    batch = {
-        "tokens": jnp.asarray(
-            rng.integers(0, cfg.vocab, (a.requests, a.prompt_len)), jnp.int32
-        )
-    }
-    if cfg.family == "audio":
-        batch["frames"] = jnp.asarray(
-            rng.normal(size=(a.requests, cfg.enc_positions, cfg.d_model)), jnp.float32
-        )
-    if cfg.family == "vlm":
-        batch["patches"] = jnp.asarray(
-            rng.normal(size=(a.requests, cfg.n_patches, cfg.d_model)), jnp.float32
+    import jax
+
+    mesh = None
+    if a.mesh:
+        b, d = (int(v) for v in a.mesh.lower().split("x"))
+        mesh = jax.make_mesh((b, d), ("batch", "data"))
+
+    server = SelectionServer(mesh=mesh, max_wave=a.max_wave)
+    requests = _random_requests(a.requests, seed=a.seed)
+
+    for rnd in range(a.rounds):
+        t0 = time.perf_counter()
+        responses = server.select(requests)
+        dt = time.perf_counter() - t0
+        assert len(responses) == len(requests)
+        label = "warmup (compiles)" if rnd == 0 else "steady"
+        print(
+            f"round {rnd}: {len(requests)} requests in {dt:.3f}s "
+            f"({len(requests) / dt:.1f} q/s)  [{label}]"
         )
 
-    engine = ServeEngine(cfg, params, a.prompt_len + a.gen_len)
-    t0 = time.time()
-    tokens = engine.generate(batch, a.gen_len)
-    dt = time.time() - t0
-    total = a.requests * a.gen_len
-    print(f"generated {tokens.shape} in {dt:.2f}s  ({total / dt:.1f} tok/s)")
-    print("sample:", np.asarray(tokens[0][:16]))
+    s = server.stats.summary()
+    print(f"\nserver stats: {s}")
+    r0 = responses[0]
+    print(
+        f"sample response: rid={r0.rid} wave={r0.wave_size} "
+        f"n_bucket={r0.n_bucket} backend={r0.backend} "
+        f"selection={[i for i, _ in r0.selection]}"
+    )
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
-"""Input shape cells (assignment: ARCHITECTURES × SHAPES) and their
-ShapeDtypeStruct stand-ins — weak-type-correct, shardable, no allocation."""
+"""Input shape cells for the dry-run's architectures x shapes sweep, and
+their ShapeDtypeStruct stand-ins — weak-type-correct, shardable, no
+allocation (see launch/dryrun.py for the driver that lowers each cell)."""
 from __future__ import annotations
 
 import dataclasses
@@ -26,7 +27,6 @@ SHAPES = {
 }
 
 # long_500k needs sub-quadratic attention: only the SSM/hybrid archs run it
-# (assignment rule; skips recorded in DESIGN §4 / EXPERIMENTS §Dry-run)
 LONG_CONTEXT_ARCHS = {"jamba-1.5-large-398b", "mamba2-370m"}
 
 

@@ -1,7 +1,10 @@
-"""Model assembly for all assigned architecture families.
+"""Model assembly for the data-selection-for-training testbed.
 
-Families: dense / moe / vlm (decoder-only transformer), hybrid (jamba
-period-scan), ssm (mamba2), audio (whisper enc-dec).
+These models are the *workload* side of the library: launch/train.py trains
+them with per-round submodular coreset selection over their gradient/loss
+embeddings, and launch/dryrun.py uses them to cost out the production
+meshes.  Families: dense / moe / vlm (decoder-only transformer), hybrid
+(jamba period-scan), ssm (mamba2), audio (whisper enc-dec).
 
 All layer stacks are scanned (jax.lax.scan over stacked params) with
 jax.checkpoint around the layer body — this keeps HLO size O(1) in depth

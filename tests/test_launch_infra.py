@@ -131,14 +131,19 @@ def test_distributed_stochastic_greedy_quality(rng):
     assert got >= 0.97 * float(ref.value)
 
 
-def test_serve_engine_generates(rng):
-    from repro.launch.serve import ServeEngine
-    from repro.models.model import init_params
+def test_selection_server_serves(rng):
+    """launch/serve.py front door: a mixed batch of requests comes back with
+    correct per-request selections (deep serving coverage: test_serving.py)."""
+    from repro.core import FacilityLocation, create_kernel, maximize
+    from repro.launch.serve import SelectionServer
 
-    cfg = get_config("qwen3-0.6b").reduced()
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, params, max_len=48)
-    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32)}
-    out = engine.generate(batch, gen_len=16)
-    assert out.shape == (2, 16)
-    assert np.asarray(out).min() >= 0 and np.asarray(out).max() < cfg.vocab
+    server = SelectionServer()
+    fns = []
+    for n in (20, 28):
+        x = rng.normal(size=(n, 6)).astype(np.float32)
+        S = np.asarray(create_kernel(x, metric="euclidean"))
+        fns.append(FacilityLocation.from_kernel(S))
+    responses = server.select([(fns[0], 4), (fns[1], 6)])
+    for fn, budget, resp in zip(fns, (4, 6), responses):
+        assert resp.selection == maximize(fn, budget)
+    assert server.stats.requests == 2
