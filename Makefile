@@ -1,15 +1,20 @@
 # Single entry point for tests, benchmarks and doc checks (see README.md).
 #
+#   make verify      pre-merge umbrella: test-fast + docs-check
 #   make test-fast   tier-1 suite (excludes @slow; the CI / pre-merge gate)
 #   make test-all    everything, including multi-device + heavy-arch tests
 #   make bench       benchmark driver (paper tables) + batched-engine bench
 #   make bench-serve serving throughput sweep (wave size x mesh shape)
-#   make docs-check  execute the code blocks in README.md and docs/*.md
+#   make docs-check  execute the code blocks in README.md and docs/*.md,
+#                    and assert the README coverage matrix matches the
+#                    registries (tools/gen_matrix.py --check)
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test-fast test-all bench bench-batched bench-serve docs-check
+.PHONY: verify test-fast test-all bench bench-batched bench-serve docs-check
+
+verify: test-fast docs-check
 
 test-fast:
 	$(PYTHON) -m pytest -x -q

@@ -1,26 +1,31 @@
-"""Distributed batched serving throughput: wave size x mesh shape sweep.
+"""Distributed batched serving throughput: wave size x mesh shape x family.
 
 Spawns 8 host-platform devices (XLA_FLAGS must be set before the first jax
 import, so this module is its own entry point) and measures steady-state
-wave throughput of the serving stack for a homogeneous FacilityLocation
-workload across:
+wave throughput of the serving stack across:
 
-  - wave sizes B (requests coalesced per dispatch), and
+  - wave sizes B (requests coalesced per dispatch),
   - mesh shapes (batch x data): how the wave is laid out over devices —
     1x1 is the single-device vmap engine; Bx1 shards only the batch axis;
-    1xD shards only each instance's ground set; intermediate shapes do both.
+    1xD shards only each instance's ground set; intermediate shapes do both,
+  - function families: the full serving matrix (FL, GraphCut, FeatureBased,
+    SetCover, ProbabilisticSetCover, Disparity*, FLQMI, GCMI, LogDet).
 
 Reported per cell: wall time per wave and queries/sec (best of 3 after a
 compile warm-up).  Selections are asserted bit-identical to the sequential
-loop before timing.
+loop before timing.  ``--json PATH`` dumps the rows for trend tracking —
+``benchmarks/BENCH_serving.json`` is the committed snapshot.
 
     PYTHONPATH=src python -m benchmarks.serve_bench          # full sweep
-    PYTHONPATH=src python -m benchmarks.serve_bench --quick  # 2 cells
+    PYTHONPATH=src python -m benchmarks.serve_bench --quick  # smoke cells
+    PYTHONPATH=src python -m benchmarks.serve_bench --json benchmarks/BENCH_serving.json
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import platform
 import time
 
 os.environ["XLA_FLAGS"] = (
@@ -31,22 +36,29 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402  (after the device-count env var)
 import numpy as np  # noqa: E402
 
-from repro.core import (  # noqa: E402
-    FacilityLocation,
-    create_kernel,
-    naive_greedy,
-)
+from repro.core import naive_greedy  # noqa: E402
 from repro.core.optimizers.batched import BatchedEngine  # noqa: E402
+from repro.launch.serve import _random_function  # noqa: E402
+
+# families x stopping flags: the dispersion functions have zero empty-set
+# gain, so their waves run with stopping disabled (see docs/functions.md)
+FAMILIES = {
+    "fl": (True, True),
+    "gc": (True, True),
+    "fb": (True, True),
+    "sc": (True, True),
+    "psc": (True, True),
+    "flqmi": (True, True),
+    "gcmi": (True, True),
+    "logdet": (True, True),
+    "dsum": (False, False),
+    "dmin": (False, False),
+}
 
 
-def make_instances(B, n, d=8, seed=0):
+def make_instances(B, n, family="fl", seed=0):
     rng = np.random.default_rng(seed)
-    fns = []
-    for _ in range(B):
-        x = rng.normal(size=(n, d)).astype(np.float32)
-        S = np.asarray(create_kernel(x, metric="euclidean"))
-        fns.append(FacilityLocation.from_kernel(S))
-    return fns
+    return [_random_function(family, n, rng) for _ in range(B)]
 
 
 def _time(fn, reps=5):
@@ -60,35 +72,59 @@ def _time(fn, reps=5):
     return best
 
 
-def run_cell(B, n, budget, mesh_shape):
-    """One (wave size, mesh shape) cell; returns the timing row."""
-    fns = make_instances(B, n)
+def run_cell(B, n, budget, mesh_shape, family="fl"):
+    """One (wave size, mesh shape, family) cell; returns the timing row."""
+    fns = make_instances(B, n, family)
+    stop_zero, stop_neg = FAMILIES[family]
     if mesh_shape == (1, 1):
         engine = BatchedEngine(fns)  # single-device vmap engine
     else:
         mesh = jax.make_mesh(mesh_shape, ("batch", "data"))
         engine = BatchedEngine(fns, mesh=mesh)
 
-    # correctness gate before timing: bit-identical to the sequential loop
-    for fn, r in zip(fns, engine.maximize(budget, return_result=True)):
-        ref = naive_greedy(fn, budget)
-        assert list(np.asarray(ref.order)) == list(np.asarray(r.order))
-        assert np.array_equal(np.asarray(ref.gains), np.asarray(r.gains))
+    def dispatch():
+        return engine.maximize(
+            budget,
+            return_result=True,
+            stopIfZeroGain=stop_zero,
+            stopIfNegativeGain=stop_neg,
+        )
 
-    t = _time(lambda: engine.maximize(budget, return_result=True))
+    # correctness gate before timing: bit-identical to the sequential loop
+    for fn, r in zip(fns, dispatch()):
+        ref = naive_greedy(fn, budget, stop_zero, stop_neg)
+        assert list(np.asarray(ref.order)) == list(np.asarray(r.order)), family
+        assert np.array_equal(np.asarray(ref.gains), np.asarray(r.gains)), family
+
+    t = _time(dispatch)
     return {
+        "family": family,
         "B": B,
         "n": n,
         "budget": budget,
         "mesh": f"{mesh_shape[0]}x{mesh_shape[1]}",
-        "wave_ms": t * 1e3,
-        "qps": B / t,
+        "wave_ms": round(t * 1e3, 2),
+        "qps": round(B / t, 1),
     }
 
 
-def main(quick: bool = False):
+def _print_rows(title, rows):
+    print(f"\n# {title}")
+    print(
+        f"{'family':>8s} {'B':>4s} {'n':>5s} {'k':>3s} {'mesh':>5s} "
+        f"{'wave ms':>9s} {'q/s':>9s}"
+    )
+    for r in rows:
+        print(
+            f"{r['family']:>8s} {r['B']:4d} {r['n']:5d} {r['budget']:3d} "
+            f"{r['mesh']:>5s} {r['wave_ms']:9.1f} {r['qps']:9.0f}"
+        )
+
+
+def main(quick: bool = False, json_path: str | None = None):
     budget = 8
-    cells = (
+    # classic FL wave-size x mesh-shape sweep
+    fl_cells = (
         [(32, 128, (1, 1)), (32, 128, (2, 2))]
         if quick
         else [
@@ -98,26 +134,43 @@ def main(quick: bool = False):
             for shape in ((1, 1), (8, 1), (1, 8), (4, 2), (2, 4))
         ]
     )
-    rows = [run_cell(B, n, budget, shape) for B, n, shape in cells]
+    fl_rows = [run_cell(B, n, budget, shape) for B, n, shape in fl_cells]
+    _print_rows("Serving wave throughput: wave size x mesh shape (batch x data)", fl_rows)
 
-    print("\n# Serving wave throughput: wave size x mesh shape (batch x data)")
-    print(f"{'B':>4s} {'n':>5s} {'k':>3s} {'mesh':>5s} {'wave ms':>9s} {'q/s':>9s}")
-    for r in rows:
-        print(
-            f"{r['B']:4d} {r['n']:5d} {r['budget']:3d} {r['mesh']:>5s} "
-            f"{r['wave_ms']:9.1f} {r['qps']:9.0f}"
-        )
-    meshes = {r["mesh"] for r in rows}
+    # the function x backend serving matrix: every served family, single
+    # device vs a 2x2 batch x data mesh
+    families = ["sc", "psc", "dsum"] if quick else [f for f in FAMILIES if f != "fl"]
+    fam_rows = [
+        run_cell(16, 128, budget, shape, family=fam)
+        for fam in families
+        for shape in ((1, 1), (2, 2))
+    ]
+    _print_rows("Family breadth: every served family, 1x1 vs 2x2 mesh", fam_rows)
+
+    rows = fl_rows + fam_rows
     best = max(rows, key=lambda r: r["qps"])
     print(
-        f"\n{len(meshes)} mesh shapes; best cell: B={best['B']} n={best['n']} "
+        f"\nbest cell: {best['family']} B={best['B']} n={best['n']} "
         f"mesh={best['mesh']} -> {best['qps']:.0f} q/s"
     )
+    if json_path:
+        snapshot = {
+            "bench": "serve_bench",
+            "host": platform.machine(),
+            "backend": jax.default_backend(),
+            "devices": len(jax.devices()),
+            "jax": jax.__version__,
+            "rows": rows,
+        }
+        with open(json_path, "w") as f:
+            json.dump(snapshot, f, indent=1)
+        print(f"wrote {len(rows)} rows to {json_path}")
     return rows
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true", help="2-cell smoke sweep")
+    ap.add_argument("--quick", action="store_true", help="smoke sweep")
+    ap.add_argument("--json", default=None, help="dump rows to this path")
     a = ap.parse_args()
-    main(quick=a.quick)
+    main(quick=a.quick, json_path=a.json)

@@ -12,6 +12,29 @@ greedy of Dasgupta et al. [11]: ``gains`` returns the dispersion surrogate
 ``min_{k in A} d_jk - f(A)`` (uncapped), whose argmax is the farthest-point
 rule; ``evaluate`` remains the true set function.  Property tests therefore
 check the gain/evaluate identity only for Sum and MinSum.
+
+Serving hooks (see docs/functions.md for the coverage matrix):
+
+- ``use_kernel=True`` on DisparitySum / DisparityMin routes full sweeps
+  through the fused Pallas kernels in ``kernels/disp_gains.py`` via the
+  ``gain_backend()`` hook.  Like GraphCut's, these are *stateless* sweeps
+  recomputed from the selection mask (kept in the state for exactly this
+  purpose) — the serving shape, where no memoized per-query state is
+  resident.  DisparityMin's masked min is float-exact either way; the
+  DisparitySum kernel's sum order differs from the incremental ``selsum``
+  by ulps, so its mesh ShardRule — which must stay bit-identical to
+  single-device ``maximize`` — rejects ``use_kernel=True`` instances
+  (same policy as GraphCut; single-device serving handles them fine).
+- Both register a zero row+column padder (``launch/coalesce.py``) and a
+  candidate-row ShardRule over the memoized statistics
+  (``optimizers/distributed.py``), so Disparity requests serve through
+  ``SelectionServer`` on and off mesh.  Note the empty-set gain is 0 for
+  both, so submit disparity requests with ``stopIfZeroGain=False``.
+
+DisparityMinSum's gains reduce over *all rows* of the distance matrix
+(including would-be padding rows), so zero-padding shifts its gains by ulps
+— it deliberately registers no padder/ShardRule and is the pinned
+unsupported-family error path in ``tests/test_serving.py``.
 """
 from __future__ import annotations
 
@@ -27,20 +50,37 @@ _BIG = 1e30
 @pytree_dataclass
 class DSumState:
     selsum: jax.Array  # (n,) sum_{k in A} d_jk
+    selmask: jax.Array  # (n,) 0/1 selection indicator (feeds the fused sweep)
 
 
-@pytree_dataclass(meta_fields=("n",))
+class DSumPallasSweep:
+    """GainBackend: stateless masked-matvec sweep over the distance matrix
+    (recomputed from the selection mask; see kernels/disp_gains.py)."""
+
+    name = "pallas-dsum"
+
+    def full_sweep(self, fn: "DisparitySum", state: DSumState) -> jax.Array:
+        from repro.kernels import ops
+
+        return ops.dsum_gains(fn.dist, state.selmask)
+
+
+@pytree_dataclass(meta_fields=("n", "use_kernel"))
 class DisparitySum(SetFunction):
     dist: jax.Array  # (n, n) pairwise distances, zero diagonal
     n: int
+    use_kernel: bool = False  # route full sweeps through the Pallas kernel
 
     @staticmethod
-    def from_distance(dist: jax.Array) -> "DisparitySum":
+    def from_distance(dist: jax.Array, use_kernel: bool = False) -> "DisparitySum":
         dist = jnp.asarray(dist)
-        return DisparitySum(dist=dist, n=int(dist.shape[0]))
+        return DisparitySum(dist=dist, n=int(dist.shape[0]), use_kernel=use_kernel)
 
     def init_state(self) -> DSumState:
-        return DSumState(selsum=jnp.zeros((self.n,), self.dist.dtype))
+        return DSumState(
+            selsum=jnp.zeros((self.n,), self.dist.dtype),
+            selmask=jnp.zeros((self.n,), jnp.float32),
+        )
 
     def gains(self, state: DSumState) -> jax.Array:
         return state.selsum
@@ -48,8 +88,14 @@ class DisparitySum(SetFunction):
     def gains_at(self, state: DSumState, idxs: jax.Array) -> jax.Array:
         return state.selsum[idxs]
 
+    def gain_backend(self) -> DSumPallasSweep | None:
+        return DSumPallasSweep() if self.use_kernel else None
+
     def update(self, state: DSumState, j: jax.Array) -> DSumState:
-        return DSumState(selsum=state.selsum + self.dist[:, j])
+        return DSumState(
+            selsum=state.selsum + self.dist[:, j],
+            selmask=state.selmask.at[j].set(1.0),
+        )
 
     def evaluate(self, mask: jax.Array) -> jax.Array:
         m = mask.astype(self.dist.dtype)
@@ -64,29 +110,48 @@ class DMinState:
     mind: jax.Array  # (n,) min_{k in A} d_jk  (BIG when A empty)
     curmin: jax.Array  # scalar f(A) (0 while |A| <= 1)
     count: jax.Array  # int32
+    selmask: jax.Array  # (n,) 0/1 selection indicator (feeds the fused sweep)
 
 
-@pytree_dataclass(meta_fields=("n",))
+class DMinPallasSweep:
+    """GainBackend: stateless masked-min sweep recomputing ``mind`` from the
+    selection mask (float-exact vs the memoized statistic — min is
+    order-independent); see kernels/disp_gains.py."""
+
+    name = "pallas-dmin"
+
+    def full_sweep(self, fn: "DisparityMin", state: DMinState) -> jax.Array:
+        from repro.kernels import ops
+
+        return ops.dmin_gains(fn.dist, state.selmask, state.count, state.curmin)
+
+
+@pytree_dataclass(meta_fields=("n", "use_kernel"))
 class DisparityMin(SetFunction):
     dist: jax.Array
     n: int
+    use_kernel: bool = False  # route full sweeps through the Pallas kernel
 
     @staticmethod
-    def from_distance(dist: jax.Array) -> "DisparityMin":
+    def from_distance(dist: jax.Array, use_kernel: bool = False) -> "DisparityMin":
         dist = jnp.asarray(dist)
-        return DisparityMin(dist=dist, n=int(dist.shape[0]))
+        return DisparityMin(dist=dist, n=int(dist.shape[0]), use_kernel=use_kernel)
 
     def init_state(self) -> DMinState:
         return DMinState(
             mind=jnp.full((self.n,), _BIG, self.dist.dtype),
             curmin=jnp.zeros((), self.dist.dtype),
             count=jnp.zeros((), jnp.int32),
+            selmask=jnp.zeros((self.n,), jnp.float32),
         )
 
     def gains(self, state: DMinState) -> jax.Array:
         # Dispersion surrogate (see module docstring): farthest-point rule.
         surrogate = jnp.where(state.count == 0, 0.0, state.mind)
         return jnp.minimum(surrogate, _BIG) - state.curmin
+
+    def gain_backend(self) -> DMinPallasSweep | None:
+        return DMinPallasSweep() if self.use_kernel else None
 
     def update(self, state: DMinState, j: jax.Array) -> DMinState:
         newmin = jnp.where(
@@ -102,6 +167,7 @@ class DisparityMin(SetFunction):
             mind=jnp.minimum(state.mind, self.dist[:, j]),
             curmin=newmin,
             count=state.count + 1,
+            selmask=state.selmask.at[j].set(1.0),
         )
 
     def evaluate(self, mask: jax.Array) -> jax.Array:

@@ -16,6 +16,21 @@ candidate with one rank-1 step:
 
 The candidate buffer C is pre-allocated at ``max_select`` (static), keeping
 the whole greedy loop jit-compatible.
+
+Serving hooks: LogDet registers a zero row+column padder
+(``launch/coalesce.py`` — a padded candidate has pivot d2 = 0 and therefore
+gain NEG_INF) and a candidate-row ShardRule (``optimizers/distributed.py`` —
+C rows and d2 shard with the candidates; the winner's Cholesky row and pivot
+are psum-broadcast), so LogDet and the logdet_cg / Schur-complement measures
+built on it (``core/info/logdet.py``) serve through ``SelectionServer`` on
+and off mesh.  The rank-1 update below uses the elementwise-multiply +
+reduce form ``(C * c_j).sum(axis=1)`` instead of ``C @ c_j``: a batched
+matvec lowers through a different GEMM tiling under vmap, which would shift
+e_i by ulps and break the served == sequential bit-identical contract (the
+same trick as ``FeatureBased.gains``).  There is no fused Pallas sweep yet
+— gains are an O(n) read of d2; the expensive part is this rank-1 update
+(see ROADMAP).  docs/functions.md has the coverage matrix and a runnable
+snippet.
 """
 from __future__ import annotations
 
@@ -66,8 +81,9 @@ class LogDet(SetFunction):
     def update(self, state: LogDetState, j: jax.Array) -> LogDetState:
         cj = state.C[j]  # (max_select,)
         dj = jnp.sqrt(jnp.maximum(state.d2[j], _EPS))
-        # e_i for every candidate i in one matvec:
-        e = (self.L[:, j] - state.C @ cj) / dj  # (n,)
+        # e_i for every candidate i at once; reduce form, not `C @ cj`
+        # (vmap-bit-stable — see module docstring)
+        e = (self.L[:, j] - (state.C * cj[None, :]).sum(axis=1)) / dj  # (n,)
         C = state.C.at[:, state.count].set(e, mode="drop")
         d2 = state.d2 - e * e
         return LogDetState(

@@ -6,9 +6,29 @@ PSC:  f(A) = sum_u w_u * (1 - prod_{j in A} (1 - p_ju))
 Memoized statistics (Table 3): the covered-concept indicator for SC and the
 per-concept miss probability  Pbar_u = prod_{j in A}(1 - p_ju)  for PSC.
 
+Both full sweeps are pluggable through the :class:`GainBackend` layer
+(``core/optimizers/backends.py``): building with ``use_kernel=True`` routes
+``full_sweep`` through the fused Pallas kernels in ``kernels/sc_gains.py``
+(masked max / probability-product over the concept-incidence matrix, one
+streamed pass per sweep); the default is the XLA ``gains()`` below.  Both
+families also register serving adapters — a zero-row padder
+(``launch/coalesce.py``) and a concept-replicated ShardRule
+(``optimizers/distributed.py``) — so SC/PSC requests coalesce into padded
+waves and shard over a mesh bit-identically.  See docs/functions.md for the
+per-family coverage matrix and runnable snippets.
+
+The gains use the elementwise-multiply + reduce form rather than ``@ w``:
+a batched matvec lowers through a different GEMM tiling than the single
+instance, shifting gains by ulps under vmap; the reduce form is bit-stable,
+which is what lets served/batched selections equal single ``maximize`` calls
+exactly (the same trick as ``FeatureBased.gains``).
+
 The MI / CG / CMI instantiations of both (paper §5.2.2-5.2.4) are *weight /
-cover-set modifications* of the base function, so they are expressed here via
-``reweight`` constructors — exactly the implementation trick the paper uses.
+cover-set modifications* of the base function, so they are expressed in
+``core/info/sc.py`` via ``reweight`` constructors — exactly the
+implementation trick the paper uses.  Because those measures ARE SetCover /
+ProbabilisticSetCover instances, they inherit the kernel, padder, and
+ShardRule coverage for free (registries resolve along the MRO).
 """
 from __future__ import annotations
 
@@ -24,29 +44,49 @@ class SCState:
     covered: jax.Array  # (m,) float indicator in [0, 1] of covered concepts
 
 
-@pytree_dataclass(meta_fields=("n",))
+class SCPallasSweep:
+    """GainBackend: fused mask -> weight -> reduce over the incidence matrix
+    (no (n, m) relu intermediate in HBM); see kernels/sc_gains.py."""
+
+    name = "pallas-sc"
+
+    def full_sweep(self, fn: "SetCover", state: SCState) -> jax.Array:
+        from repro.kernels import ops
+
+        return ops.sc_gains(fn.cover, state.covered, fn.w)
+
+
+@pytree_dataclass(meta_fields=("n", "use_kernel"))
 class SetCover(SetFunction):
     cover: jax.Array  # (n, m) binary: element i covers concept u
     w: jax.Array  # (m,) concept weights
     n: int
+    use_kernel: bool = False  # route full sweeps through the Pallas kernel
 
     @staticmethod
-    def from_cover(cover: jax.Array, w: jax.Array | None = None) -> "SetCover":
+    def from_cover(
+        cover: jax.Array, w: jax.Array | None = None, use_kernel: bool = False
+    ) -> "SetCover":
         cover = jnp.asarray(cover, jnp.float32)
         m = cover.shape[1]
         w = jnp.ones((m,), jnp.float32) if w is None else jnp.asarray(w, jnp.float32)
-        return SetCover(cover=cover, w=w, n=int(cover.shape[0]))
+        return SetCover(
+            cover=cover, w=w, n=int(cover.shape[0]), use_kernel=use_kernel
+        )
 
     def init_state(self) -> SCState:
         return SCState(covered=jnp.zeros((self.cover.shape[1],), self.cover.dtype))
 
     def gains(self, state: SCState) -> jax.Array:
         new = jnp.maximum(self.cover - state.covered[None, :], 0.0)  # (n, m)
-        return new @ self.w
+        return (new * self.w[None, :]).sum(axis=-1)
 
     def gains_at(self, state: SCState, idxs: jax.Array) -> jax.Array:
         new = jnp.maximum(self.cover[idxs] - state.covered[None, :], 0.0)
-        return new @ self.w
+        return (new * self.w[None, :]).sum(axis=-1)
+
+    def gain_backend(self) -> SCPallasSweep | None:
+        return SCPallasSweep() if self.use_kernel else None
 
     def update(self, state: SCState, j: jax.Array) -> SCState:
         return SCState(covered=jnp.maximum(state.covered, self.cover[j]))
@@ -66,21 +106,37 @@ class PSCState:
     miss: jax.Array  # (m,) Pbar_u(A) = prod_{j in A} (1 - p_ju)
 
 
-@pytree_dataclass(meta_fields=("n",))
+class PSCPallasSweep:
+    """GainBackend: fused probability-product sweep, weighting each concept by
+    the memoized miss probability; see kernels/sc_gains.py."""
+
+    name = "pallas-psc"
+
+    def full_sweep(self, fn: "ProbabilisticSetCover", state: PSCState) -> jax.Array:
+        from repro.kernels import ops
+
+        return ops.psc_gains(fn.probs, state.miss, fn.w)
+
+
+@pytree_dataclass(meta_fields=("n", "use_kernel"))
 class ProbabilisticSetCover(SetFunction):
     log_miss: jax.Array  # (n, m) log(1 - p_ju), precomputed for stable products
     w: jax.Array  # (m,)
     n: int
+    use_kernel: bool = False  # route full sweeps through the Pallas kernel
 
     @staticmethod
     def from_probs(
-        probs: jax.Array, w: jax.Array | None = None
+        probs: jax.Array, w: jax.Array | None = None, use_kernel: bool = False
     ) -> "ProbabilisticSetCover":
         probs = jnp.clip(jnp.asarray(probs, jnp.float32), 0.0, 1.0 - 1e-7)
         m = probs.shape[1]
         w = jnp.ones((m,), jnp.float32) if w is None else jnp.asarray(w, jnp.float32)
         return ProbabilisticSetCover(
-            log_miss=jnp.log1p(-probs), w=w, n=int(probs.shape[0])
+            log_miss=jnp.log1p(-probs),
+            w=w,
+            n=int(probs.shape[0]),
+            use_kernel=use_kernel,
         )
 
     @property
@@ -92,10 +148,13 @@ class ProbabilisticSetCover(SetFunction):
 
     def gains(self, state: PSCState) -> jax.Array:
         # f(j|A) = sum_u w_u * Pbar_u(A) * p_ju
-        return self.probs @ (self.w * state.miss)
+        return (self.probs * (self.w * state.miss)[None, :]).sum(axis=-1)
 
     def gains_at(self, state: PSCState, idxs: jax.Array) -> jax.Array:
-        return self.probs[idxs] @ (self.w * state.miss)
+        return (self.probs[idxs] * (self.w * state.miss)[None, :]).sum(axis=-1)
+
+    def gain_backend(self) -> PSCPallasSweep | None:
+        return PSCPallasSweep() if self.use_kernel else None
 
     def update(self, state: PSCState, j: jax.Array) -> PSCState:
         return PSCState(miss=state.miss * jnp.exp(self.log_miss[j]))

@@ -12,6 +12,16 @@ The base function must be built over the *extended* ground set V ∪ Q ∪ P
 (see ``similarity.build_extended_kernel``), with V at indices [0, n_v).
 These generic forms are the correctness oracles for the closed-form
 instantiations (fl.py, gc.py, logdet.py, sc.py) in the property tests.
+
+Serving note: the generic combinators wrap an arbitrary base pytree, so they
+register no coalescer padder / mesh ShardRule — serve the *closed-form*
+instantiations instead, which are plain instances of already-served families
+(FLVMI / FLQMI / FLCG / FLCMI and GCMI register their own adapters; gccg,
+the sc_* / psc_* measures, and logdet_cg resolve through GraphCut /
+SetCover / ProbabilisticSetCover / LogDet along the MRO).  The generic forms
+still work everywhere ``maximize`` does, including the single-device batched
+engine when same-shaped.  Coverage matrix + runnable snippets:
+docs/functions.md.
 """
 from __future__ import annotations
 

@@ -9,6 +9,11 @@ with a modified cover set / reweighted concepts:
   PSCMI   = PSC with weights w_u * (1 - P_u(Q))
   PSCCG   = PSC with weights w_u * P_u(P)
   PSCCMI  = PSC with weights w_u * (1 - P_u(Q)) * P_u(P)
+
+Because every measure IS a SetCover / ProbabilisticSetCover instance, the
+whole family inherits that class's serving stack for free: the fused Pallas
+sweep (``use_kernel=True``, forwarded below), the coalescer padder, and the
+mesh ShardRule all resolve along the MRO — see docs/functions.md.
 """
 from __future__ import annotations
 
@@ -22,21 +27,37 @@ def _concepts_of(cover_rows: jnp.ndarray) -> jnp.ndarray:
     return jnp.max(jnp.asarray(cover_rows, jnp.float32), axis=0, initial=0.0)
 
 
-def sc_mi(cover: jnp.ndarray, w: jnp.ndarray, cover_q: jnp.ndarray) -> SetCover:
+def sc_mi(
+    cover: jnp.ndarray,
+    w: jnp.ndarray,
+    cover_q: jnp.ndarray,
+    use_kernel: bool = False,
+) -> SetCover:
     keep = _concepts_of(cover_q)
-    return SetCover.from_cover(cover, jnp.asarray(w) * keep)
+    return SetCover.from_cover(cover, jnp.asarray(w) * keep, use_kernel=use_kernel)
 
 
-def sc_cg(cover: jnp.ndarray, w: jnp.ndarray, cover_p: jnp.ndarray) -> SetCover:
+def sc_cg(
+    cover: jnp.ndarray,
+    w: jnp.ndarray,
+    cover_p: jnp.ndarray,
+    use_kernel: bool = False,
+) -> SetCover:
     drop = _concepts_of(cover_p)
-    return SetCover.from_cover(cover, jnp.asarray(w) * (1.0 - drop))
+    return SetCover.from_cover(
+        cover, jnp.asarray(w) * (1.0 - drop), use_kernel=use_kernel
+    )
 
 
 def sc_cmi(
-    cover: jnp.ndarray, w: jnp.ndarray, cover_q: jnp.ndarray, cover_p: jnp.ndarray
+    cover: jnp.ndarray,
+    w: jnp.ndarray,
+    cover_q: jnp.ndarray,
+    cover_p: jnp.ndarray,
+    use_kernel: bool = False,
 ) -> SetCover:
     keep = _concepts_of(cover_q) * (1.0 - _concepts_of(cover_p))
-    return SetCover.from_cover(cover, jnp.asarray(w) * keep)
+    return SetCover.from_cover(cover, jnp.asarray(w) * keep, use_kernel=use_kernel)
 
 
 def _miss(probs_rows: jnp.ndarray) -> jnp.ndarray:
@@ -45,17 +66,25 @@ def _miss(probs_rows: jnp.ndarray) -> jnp.ndarray:
 
 
 def psc_mi(
-    probs: jnp.ndarray, w: jnp.ndarray, probs_q: jnp.ndarray
+    probs: jnp.ndarray,
+    w: jnp.ndarray,
+    probs_q: jnp.ndarray,
+    use_kernel: bool = False,
 ) -> ProbabilisticSetCover:
     return ProbabilisticSetCover.from_probs(
-        probs, jnp.asarray(w) * (1.0 - _miss(probs_q))
+        probs, jnp.asarray(w) * (1.0 - _miss(probs_q)), use_kernel=use_kernel
     )
 
 
 def psc_cg(
-    probs: jnp.ndarray, w: jnp.ndarray, probs_p: jnp.ndarray
+    probs: jnp.ndarray,
+    w: jnp.ndarray,
+    probs_p: jnp.ndarray,
+    use_kernel: bool = False,
 ) -> ProbabilisticSetCover:
-    return ProbabilisticSetCover.from_probs(probs, jnp.asarray(w) * _miss(probs_p))
+    return ProbabilisticSetCover.from_probs(
+        probs, jnp.asarray(w) * _miss(probs_p), use_kernel=use_kernel
+    )
 
 
 def psc_cmi(
@@ -63,7 +92,10 @@ def psc_cmi(
     w: jnp.ndarray,
     probs_q: jnp.ndarray,
     probs_p: jnp.ndarray,
+    use_kernel: bool = False,
 ) -> ProbabilisticSetCover:
     return ProbabilisticSetCover.from_probs(
-        probs, jnp.asarray(w) * (1.0 - _miss(probs_q)) * _miss(probs_p)
+        probs,
+        jnp.asarray(w) * (1.0 - _miss(probs_q)) * _miss(probs_p),
+        use_kernel=use_kernel,
     )

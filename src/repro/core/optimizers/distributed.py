@@ -432,6 +432,317 @@ class FBShardRule(ShardRule):
         return jnp.where(take, acc + row, acc)
 
 
+@_dataclasses.dataclass(frozen=True)
+class SCShardRule(ShardRule):
+    """SetCover: incidence rows sharded over candidates, the concept axis
+    (and the covered indicator) replicated; the winner's incidence row is
+    psum-broadcast — the FeatureBased shape over concepts."""
+
+    use_kernel: bool = False
+
+    def global_parts(self, fn):
+        return (fn.cover, fn.w)
+
+    def part_specs(self, batch_axes, col_axes):
+        return (P(batch_axes, col_axes, None), P(batch_axes))
+
+    def init_state(self, parts):
+        cover, w = parts
+        return jnp.zeros((cover.shape[1],), cover.dtype)
+
+    def local_sweep(self, parts, covered):
+        from repro.core.functions.set_cover import SCState, SetCover
+        from repro.core.optimizers.backends import full_sweep
+
+        cover, w = parts
+        fn_loc = SetCover(
+            cover=cover, w=w, n=int(cover.shape[0]), use_kernel=self.use_kernel
+        )
+        return full_sweep(fn_loc, SCState(covered=covered))
+
+    def apply_winner(self, parts, covered, take, is_mine, wl, winner, col_axes):
+        cover, w = parts
+        row = jnp.where(is_mine, cover[wl], 0.0)
+        row = jax.lax.psum(row, col_axes)
+        return jnp.where(take, jnp.maximum(covered, row), covered)
+
+
+@_dataclasses.dataclass(frozen=True)
+class PSCShardRule(ShardRule):
+    """ProbabilisticSetCover: log-miss rows sharded over candidates, the
+    memoized per-concept miss probability replicated; the winner's log-miss
+    row is psum-broadcast and folded multiplicatively."""
+
+    use_kernel: bool = False
+
+    def global_parts(self, fn):
+        return (fn.log_miss, fn.w)
+
+    def part_specs(self, batch_axes, col_axes):
+        return (P(batch_axes, col_axes, None), P(batch_axes))
+
+    def init_state(self, parts):
+        log_miss, w = parts
+        return jnp.ones((log_miss.shape[1],), jnp.float32)
+
+    def local_sweep(self, parts, miss):
+        from repro.core.functions.set_cover import PSCState, ProbabilisticSetCover
+        from repro.core.optimizers.backends import full_sweep
+
+        log_miss, w = parts
+        fn_loc = ProbabilisticSetCover(
+            log_miss=log_miss,
+            w=w,
+            n=int(log_miss.shape[0]),
+            use_kernel=self.use_kernel,
+        )
+        return full_sweep(fn_loc, PSCState(miss=miss))
+
+    def apply_winner(self, parts, miss, take, is_mine, wl, winner, col_axes):
+        log_miss, w = parts
+        row = jnp.where(is_mine, log_miss[wl], 0.0)
+        row = jax.lax.psum(row, col_axes)
+        return jnp.where(take, miss * jnp.exp(row), miss)
+
+
+@_dataclasses.dataclass(frozen=True)
+class DSumShardRule(ShardRule):
+    """DisparitySum: distance-matrix ROWS are the candidate axis (each shard
+    keeps the full row of its candidates), selsum shards with the candidates,
+    and the winner update is collective-free — the GraphCut shape."""
+
+    def global_parts(self, fn):
+        return (fn.dist,)
+
+    def part_specs(self, batch_axes, col_axes):
+        return (P(batch_axes, col_axes, None),)
+
+    def init_state(self, parts):
+        (dist,) = parts
+        return jnp.zeros((dist.shape[0],), dist.dtype)
+
+    def local_sweep(self, parts, selsum):
+        return selsum
+
+    def apply_winner(self, parts, selsum, take, is_mine, wl, winner, col_axes):
+        (dist,) = parts
+        return jnp.where(take, selsum + dist[:, winner], selsum)
+
+
+@_dataclasses.dataclass(frozen=True)
+class DMinShardRule(ShardRule):
+    """DisparityMin: ``mind`` shards with the candidate rows; the scalars
+    f(A) and |A| are replicated, refreshed from a psum of the winner's
+    ``mind`` entry (its owning shard contributes, the rest add exact zeros)."""
+
+    def global_parts(self, fn):
+        return (fn.dist,)
+
+    def part_specs(self, batch_axes, col_axes):
+        return (P(batch_axes, col_axes, None),)
+
+    def init_state(self, parts):
+        (dist,) = parts
+        big = jnp.asarray(1e30, dist.dtype)
+        return (
+            jnp.full((dist.shape[0],), big, dist.dtype),  # mind (local rows)
+            jnp.zeros((), dist.dtype),  # curmin = f(A)
+            jnp.zeros((), jnp.int32),  # count = |A|
+        )
+
+    def local_sweep(self, parts, state):
+        mind, curmin, count = state
+        # DisparityMin.gains on the local slice (scalars replicated)
+        surrogate = jnp.where(count == 0, 0.0, mind)
+        return jnp.minimum(surrogate, 1e30) - curmin
+
+    def apply_winner(self, parts, state, take, is_mine, wl, winner, col_axes):
+        (dist,) = parts
+        mind, curmin, count = state
+        mind_w = jax.lax.psum(jnp.where(is_mine, mind[wl], 0.0), col_axes)
+        newmin = jnp.where(
+            count <= 0,
+            curmin,
+            jnp.where(count == 1, mind_w, jnp.minimum(curmin, mind_w)),
+        )
+        return (
+            jnp.where(take, jnp.minimum(mind, dist[:, winner]), mind),
+            jnp.where(take, newmin, curmin),
+            count + jnp.where(take, 1, 0).astype(jnp.int32),
+        )
+
+
+@_dataclasses.dataclass(frozen=True)
+class GCMIShardRule(ShardRule):
+    """GCMI: a pure modular function — the query-sum vector shards with the
+    candidates, the running value is replicated via a scalar psum."""
+
+    def global_parts(self, fn):
+        return (fn.qsum,)
+
+    def part_specs(self, batch_axes, col_axes):
+        return (P(batch_axes, col_axes),)
+
+    def init_state(self, parts):
+        (qsum,) = parts
+        return jnp.zeros((), qsum.dtype)
+
+    def local_sweep(self, parts, value):
+        (qsum,) = parts
+        return qsum
+
+    def apply_winner(self, parts, value, take, is_mine, wl, winner, col_axes):
+        (qsum,) = parts
+        qj = jax.lax.psum(jnp.where(is_mine, qsum[wl], 0.0), col_axes)
+        return jnp.where(take, value + qj, value)
+
+
+@_dataclasses.dataclass(frozen=True)
+class LogDetShardRule(ShardRule):
+    """LogDet: the candidate Cholesky rows C and pivots d2 shard with the
+    candidates (kernel rows); the winner's Cholesky row + pivot are
+    psum-broadcast and every shard applies the same rank-1 update.  The
+    reduce-form inner product in ``LogDet.update`` is what keeps the local
+    e_i floats identical to the single-device sweep."""
+
+    max_select: int = 0
+
+    def global_parts(self, fn):
+        return (fn.L, jnp.diagonal(fn.L))
+
+    def part_specs(self, batch_axes, col_axes):
+        return (P(batch_axes, col_axes, None), P(batch_axes, col_axes))
+
+    def init_state(self, parts):
+        block, diag = parts
+        return (
+            jnp.zeros((block.shape[0], self.max_select), block.dtype),  # C
+            diag,  # d2
+            jnp.zeros((), jnp.int32),  # count
+        )
+
+    def local_sweep(self, parts, state):
+        from repro.core.functions.log_det import LogDet, LogDetState
+        from repro.core.optimizers.backends import full_sweep
+
+        block, diag = parts
+        C, d2, count = state
+        fn_loc = LogDet(L=block, n=int(block.shape[0]), max_select=self.max_select)
+        st = LogDetState(C=C, d2=d2, count=count, value=jnp.zeros((), block.dtype))
+        return full_sweep(fn_loc, st)
+
+    def apply_winner(self, parts, state, take, is_mine, wl, winner, col_axes):
+        from repro.core.functions.log_det import _EPS
+
+        block, diag = parts
+        C, d2, count = state
+        cj = jax.lax.psum(jnp.where(is_mine, C[wl], jnp.zeros_like(C[wl])), col_axes)
+        d2j = jax.lax.psum(jnp.where(is_mine, d2[wl], 0.0), col_axes)
+        dj = jnp.sqrt(jnp.maximum(d2j, _EPS))
+        e = (block[:, winner] - (C * cj[None, :]).sum(axis=1)) / dj
+        C_new = C.at[:, count].set(e, mode="drop")
+        return (
+            jnp.where(take, C_new, C),
+            jnp.where(take, d2 - e * e, d2),
+            count + jnp.where(take, 1, 0).astype(jnp.int32),
+        )
+
+
+class _FLInfoShardRule(ShardRule):
+    """Shared shape for the FL-family information measures: query-side rows
+    replicated, candidate columns sharded, ``curmax`` replicated and updated
+    by a psum broadcast of the winner's column — the
+    ``distributed_flqmi_greedy`` configuration generalized.  Subclasses
+    rebuild the measure on the local column slice; the sweep then routes
+    through ``backends.full_sweep`` so the class's own ``gains`` runs."""
+
+    def _local_fn(self, parts):
+        raise NotImplementedError
+
+    def init_state(self, parts):
+        sim = parts[0]
+        return jnp.zeros((sim.shape[0],), sim.dtype)
+
+    def local_sweep(self, parts, curmax):
+        from repro.core.functions.facility_location import FLState
+        from repro.core.optimizers.backends import full_sweep
+
+        sim = parts[0]
+        return full_sweep(
+            self._local_fn(parts),
+            FLState(curmax=curmax, n_rows=int(sim.shape[0])),
+        )
+
+    def apply_winner(self, parts, curmax, take, is_mine, wl, winner, col_axes):
+        sim = parts[0]
+        col = jax.lax.psum(jnp.where(is_mine, sim[:, wl], 0.0), col_axes)
+        return jnp.where(take, jnp.maximum(curmax, col), curmax)
+
+
+@_dataclasses.dataclass(frozen=True)
+class FLQMIShardRule(_FLInfoShardRule):
+    def global_parts(self, fn):
+        return (fn.sim_qv, fn.modular)
+
+    def part_specs(self, batch_axes, col_axes):
+        return (P(batch_axes, None, col_axes), P(batch_axes, col_axes))
+
+    def _local_fn(self, parts):
+        from repro.core.info.fl import FLQMI
+
+        sim_qv, modular = parts
+        return FLQMI(sim_qv=sim_qv, modular=modular, n=int(sim_qv.shape[1]))
+
+
+@_dataclasses.dataclass(frozen=True)
+class FLVMIShardRule(_FLInfoShardRule):
+    def global_parts(self, fn):
+        return (fn.sim, fn.qmax)
+
+    def part_specs(self, batch_axes, col_axes):
+        return (P(batch_axes, None, col_axes), P(batch_axes, None))
+
+    def _local_fn(self, parts):
+        from repro.core.info.fl import FLVMI
+
+        sim, qmax = parts
+        return FLVMI(sim=sim, qmax=qmax, n=int(sim.shape[1]))
+
+
+@_dataclasses.dataclass(frozen=True)
+class FLCGShardRule(_FLInfoShardRule):
+    def global_parts(self, fn):
+        return (fn.sim, fn.pmax)
+
+    def part_specs(self, batch_axes, col_axes):
+        return (P(batch_axes, None, col_axes), P(batch_axes, None))
+
+    def _local_fn(self, parts):
+        from repro.core.info.fl import FLCG
+
+        sim, pmax = parts
+        return FLCG(sim=sim, pmax=pmax, n=int(sim.shape[1]))
+
+
+@_dataclasses.dataclass(frozen=True)
+class FLCMIShardRule(_FLInfoShardRule):
+    def global_parts(self, fn):
+        return (fn.sim, fn.qmax, fn.pmax)
+
+    def part_specs(self, batch_axes, col_axes):
+        return (
+            P(batch_axes, None, col_axes),
+            P(batch_axes, None),
+            P(batch_axes, None),
+        )
+
+    def _local_fn(self, parts):
+        from repro.core.info.fl import FLCMI
+
+        sim, qmax, pmax = parts
+        return FLCMI(sim=sim, qmax=qmax, pmax=pmax, n=int(sim.shape[1]))
+
+
 # class -> factory(fn) -> ShardRule | None, resolved along the MRO (the same
 # plug-in shape as backends.register_gain_backend)
 _SHARD_RULES: dict[type, Any] = {}
@@ -450,29 +761,48 @@ def shard_rule(fn) -> ShardRule:
             rule = factory(fn)
             if rule is not None:
                 return rule
+    raise NotImplementedError(
+        f"{type(fn).__name__} has no registered ShardRule, so it cannot be "
+        "mesh-sharded; plug one in via "
+        "repro.core.optimizers.distributed.register_shard_rule (see "
+        "docs/functions.md for the families served out of the box)"
+    )
+
+
+def _reject_kernel_on_mesh(name: str) -> None:
     raise ValueError(
-        f"{type(fn).__name__} has no registered ShardRule; distributed "
-        "batched serving supports FacilityLocation / GraphCut / FeatureBased "
-        "(register more via register_shard_rule)"
+        f"{name} with use_kernel=True cannot be mesh-sharded bit-identically: "
+        "single-device maximize sweeps through the stateless Pallas recompute "
+        "while the shard rule must use the memoized form, and their float "
+        "reductions differ. Serve it single-device, or build the function "
+        "with use_kernel=False."
     )
 
 
 def _register_builtin_rules():
+    from repro.core.functions.disparity import DisparityMin, DisparitySum
     from repro.core.functions.facility_location import FacilityLocation
     from repro.core.functions.feature_based import FeatureBased
     from repro.core.functions.graph_cut import GraphCut
+    from repro.core.functions.log_det import LogDet
+    from repro.core.functions.set_cover import ProbabilisticSetCover, SetCover
+    from repro.core.info.fl import FLCG, FLCMI, FLQMI, FLVMI
+    from repro.core.info.gc import GCMI
 
     def _gc_rule(fn):
         if fn.use_kernel:
-            raise ValueError(
-                "GraphCut with use_kernel=True cannot be mesh-sharded "
-                "bit-identically: single-device maximize sweeps through the "
-                "stateless Pallas recompute while the shard rule must use "
-                "the memoized form, and their float reductions differ. "
-                "Serve it single-device, or build the GraphCut with "
-                "use_kernel=False."
-            )
+            _reject_kernel_on_mesh("GraphCut")
         return GCShardRule()
+
+    def _dsum_rule(fn):
+        if fn.use_kernel:
+            _reject_kernel_on_mesh("DisparitySum")
+        return DSumShardRule()
+
+    def _dmin_rule(fn):
+        if fn.use_kernel:
+            _reject_kernel_on_mesh("DisparityMin")
+        return DMinShardRule()
 
     register_shard_rule(
         FacilityLocation, lambda fn: FLShardRule(use_kernel=fn.use_kernel)
@@ -482,6 +812,22 @@ def _register_builtin_rules():
         FeatureBased,
         lambda fn: FBShardRule(concave=fn.concave, use_kernel=fn.use_kernel),
     )
+    register_shard_rule(
+        SetCover, lambda fn: SCShardRule(use_kernel=fn.use_kernel)
+    )
+    register_shard_rule(
+        ProbabilisticSetCover, lambda fn: PSCShardRule(use_kernel=fn.use_kernel)
+    )
+    register_shard_rule(DisparitySum, _dsum_rule)
+    register_shard_rule(DisparityMin, _dmin_rule)
+    register_shard_rule(GCMI, lambda fn: GCMIShardRule())
+    register_shard_rule(
+        LogDet, lambda fn: LogDetShardRule(max_select=fn.max_select)
+    )
+    register_shard_rule(FLQMI, lambda fn: FLQMIShardRule())
+    register_shard_rule(FLVMI, lambda fn: FLVMIShardRule())
+    register_shard_rule(FLCG, lambda fn: FLCGShardRule())
+    register_shard_rule(FLCMI, lambda fn: FLCMIShardRule())
 
 
 _register_builtin_rules()

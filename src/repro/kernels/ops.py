@@ -9,9 +9,11 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import ref
+from repro.kernels.disp_gains import dmin_gains_pallas, dsum_gains_pallas
 from repro.kernels.fb_gains import fb_gains_pallas
 from repro.kernels.fl_gains import fl_gains_pallas
 from repro.kernels.gc_gains import gc_gains_pallas
+from repro.kernels.sc_gains import psc_gains_pallas, sc_gains_pallas
 from repro.kernels.similarity_kernel import similarity_pallas
 
 
@@ -37,8 +39,28 @@ def fb_gains(feats, acc, w, concave: str = "sqrt"):
     return fb_gains_pallas(feats, acc, w, concave=concave, interpret=_interpret())
 
 
+def sc_gains(cover, covered, w):
+    return sc_gains_pallas(cover, covered, w, interpret=_interpret())
+
+
+def psc_gains(probs, miss, w):
+    return psc_gains_pallas(probs, miss, w, interpret=_interpret())
+
+
+def dsum_gains(dist, selmask):
+    return dsum_gains_pallas(dist, selmask, interpret=_interpret())
+
+
+def dmin_gains(dist, selmask, count, curmin):
+    return dmin_gains_pallas(dist, selmask, count, curmin, interpret=_interpret())
+
+
 # re-export oracles for convenience
 similarity_ref = ref.similarity_ref
 fl_gains_ref = ref.fl_gains_ref
 gc_gains_ref = ref.gc_gains_ref
 fb_gains_ref = ref.fb_gains_ref
+sc_gains_ref = ref.sc_gains_ref
+psc_gains_ref = ref.psc_gains_ref
+dsum_gains_ref = ref.dsum_gains_ref
+dmin_gains_ref = ref.dmin_gains_ref

@@ -71,6 +71,51 @@ def fb_gains_ref(
     )
 
 
+def sc_gains_ref(cover: jax.Array, covered: jax.Array, w: jax.Array) -> jax.Array:
+    """Set-cover marginal gains for all candidates from the covered indicator.
+
+    gains_j = sum_u w_u * max(G_ju - covered_u, 0);  cover (n, m) -> (n,)
+    """
+    g32 = cover.astype(jnp.float32)
+    new = jnp.maximum(g32 - covered.astype(jnp.float32)[None, :], 0.0)
+    return (new * w.astype(jnp.float32)[None, :]).sum(axis=-1)
+
+
+def psc_gains_ref(probs: jax.Array, miss: jax.Array, w: jax.Array) -> jax.Array:
+    """Probabilistic-set-cover gains from the memoized miss probabilities.
+
+    gains_j = sum_u w_u * Pbar_u(A) * p_ju;  probs (n, m), miss/w (m,) -> (n,)
+    """
+    p32 = probs.astype(jnp.float32)
+    wm = w.astype(jnp.float32) * miss.astype(jnp.float32)
+    return (p32 * wm[None, :]).sum(axis=-1)
+
+
+def dsum_gains_ref(dist: jax.Array, selmask: jax.Array) -> jax.Array:
+    """Disparity-sum gains from the selection mask.
+
+    gains_j = sum_k d_jk * m_k;  dist (n, n), selmask (n,) -> (n,)
+    """
+    d32 = dist.astype(jnp.float32)
+    return (d32 * selmask.astype(jnp.float32)[None, :]).sum(axis=-1)
+
+
+def dmin_gains_ref(
+    dist: jax.Array, selmask: jax.Array, count: jax.Array, curmin: jax.Array
+) -> jax.Array:
+    """Disparity-min surrogate gains (farthest-point rule) from the mask.
+
+    gains_j = min(surr_j, BIG) - curmin,  surr_j = 0 if count == 0 else
+    min_{k: m_k} d_jk;  dist (n, n), selmask (n,), count/curmin scalars -> (n,)
+    """
+    big = 1e30
+    d32 = dist.astype(jnp.float32)
+    vals = jnp.where(selmask.astype(bool)[None, :], d32, big)
+    mind = jnp.min(vals, axis=1)
+    surrogate = jnp.where(jnp.asarray(count) == 0, 0.0, mind)
+    return jnp.minimum(surrogate, big) - jnp.asarray(curmin, jnp.float32)
+
+
 def fl_gains_update_ref(
     sim: jax.Array, curmax: jax.Array, winner: jax.Array
 ) -> tuple[jax.Array, jax.Array]:

@@ -25,8 +25,19 @@ FacilityLocation (zero COLUMNS only: the represented-set rows are never
 padded, because appending rows changes XLA's sum-reduction tree and shifts
 gains by ulps — see ``_pad_fl``), GraphCut (zero rows+columns, zero modular
 term — its gains are elementwise, so both axes pad exactly), FeatureBased
-(zero feature rows; the feature axis is untouched).  ``register_padder``
-plugs in more families.
+(zero feature rows; the feature axis is untouched), SetCover /
+ProbabilisticSetCover (zero incidence rows; the concept axis is untouched),
+DisparitySum / DisparityMin (zero rows+columns — padded candidates are
+valid-masked and padded columns are never selected), LogDet (zero
+rows+columns: a padded candidate's Cholesky pivot is 0, so its gain is
+NEG_INF), GCMI (zero query-sum entries), and the FL-family information
+measures (zero COLUMNS of the ground-side kernel only; the query-side row
+axis is never padded, for the same reduction-tree reason as FL).  MI / CG
+measures that are plain instances of a padded family — gccg, sc_mi/.../
+psc_cmi, logdet_cg — resolve along the MRO and need no entry of their own.
+``register_padder`` plugs in more families; unsupported ones raise a
+``NotImplementedError`` naming it (see docs/functions.md for the coverage
+matrix).
 """
 from __future__ import annotations
 
@@ -36,9 +47,14 @@ from typing import Callable, Sequence
 import jax
 import numpy as np
 
+from repro.core.functions.disparity import DisparityMin, DisparitySum
 from repro.core.functions.facility_location import FacilityLocation
 from repro.core.functions.feature_based import FeatureBased
 from repro.core.functions.graph_cut import GraphCut
+from repro.core.functions.log_det import LogDet
+from repro.core.functions.set_cover import ProbabilisticSetCover, SetCover
+from repro.core.info.fl import FLCG, FLCMI, FLQMI, FLVMI
+from repro.core.info.gc import GCMI
 
 
 @dataclasses.dataclass
@@ -105,10 +121,102 @@ def _pad_fb(fn: FeatureBased, n_to: int) -> FeatureBased:
     )
 
 
+def _pad_sc(fn: SetCover, n_to: int) -> SetCover:
+    import jax.numpy as jnp
+
+    n, m = fn.cover.shape
+    # zero incidence rows: a padded candidate covers nothing, so its gain is
+    # exactly 0 and the valid mask blocks it; real candidates' gains are
+    # per-row reductions over the untouched concept axis, so they are
+    # bit-identical to the unpadded instance.
+    cover = jnp.zeros((n_to, m), fn.cover.dtype).at[:n].set(fn.cover)
+    return SetCover(cover=cover, w=fn.w, n=n_to, use_kernel=fn.use_kernel)
+
+
+def _pad_psc(fn: ProbabilisticSetCover, n_to: int) -> ProbabilisticSetCover:
+    import jax.numpy as jnp
+
+    n, m = fn.log_miss.shape
+    # log(1 - p) = 0 rows: a padded candidate has p = 0 everywhere -> gain 0.
+    log_miss = jnp.zeros((n_to, m), fn.log_miss.dtype).at[:n].set(fn.log_miss)
+    return ProbabilisticSetCover(
+        log_miss=log_miss, w=fn.w, n=n_to, use_kernel=fn.use_kernel
+    )
+
+
+def _pad_square_dist(fn, n_to: int):
+    import jax.numpy as jnp
+
+    cls = type(fn)
+    n = fn.n
+    dist = jnp.zeros((n_to, n_to), fn.dist.dtype).at[:n, :n].set(fn.dist)
+    return cls(dist=dist, n=n_to, use_kernel=fn.use_kernel)
+
+
+def _pad_logdet(fn: LogDet, n_to: int) -> LogDet:
+    import jax.numpy as jnp
+
+    n = fn.n
+    # zero rows+columns: a padded candidate's pivot d2 starts (and stays) 0,
+    # so its gain is NEG_INF and it can never be selected even before the
+    # valid mask; max_select is preserved (it is capacity, not ground size).
+    L = jnp.zeros((n_to, n_to), fn.L.dtype).at[:n, :n].set(fn.L)
+    return LogDet(L=L, n=n_to, max_select=fn.max_select)
+
+
+def _pad_gcmi(fn: GCMI, n_to: int) -> GCMI:
+    import jax.numpy as jnp
+
+    qsum = jnp.zeros((n_to,), fn.qsum.dtype).at[: fn.n].set(fn.qsum)
+    return GCMI(qsum=qsum, n=n_to)
+
+
+def _pad_flqmi(fn: FLQMI, n_to: int) -> FLQMI:
+    import jax.numpy as jnp
+
+    nq, n = fn.sim_qv.shape
+    # zero COLUMNS only, like FacilityLocation: the query-side row axis is a
+    # sum-reduction axis and may never be padded (reduction-tree ulps).
+    sim_qv = jnp.zeros((nq, n_to), fn.sim_qv.dtype).at[:, :n].set(fn.sim_qv)
+    modular = jnp.zeros((n_to,), fn.modular.dtype).at[:n].set(fn.modular)
+    return FLQMI(sim_qv=sim_qv, modular=modular, n=n_to)
+
+
+def _pad_ground_cols(sim, n_to: int):
+    import jax.numpy as jnp
+
+    nv, n = sim.shape
+    return jnp.zeros((nv, n_to), sim.dtype).at[:, :n].set(sim)
+
+
+def _pad_flvmi(fn: FLVMI, n_to: int) -> FLVMI:
+    return FLVMI(sim=_pad_ground_cols(fn.sim, n_to), qmax=fn.qmax, n=n_to)
+
+
+def _pad_flcg(fn: FLCG, n_to: int) -> FLCG:
+    return FLCG(sim=_pad_ground_cols(fn.sim, n_to), pmax=fn.pmax, n=n_to)
+
+
+def _pad_flcmi(fn: FLCMI, n_to: int) -> FLCMI:
+    return FLCMI(
+        sim=_pad_ground_cols(fn.sim, n_to), qmax=fn.qmax, pmax=fn.pmax, n=n_to
+    )
+
+
 _PADDERS: dict[type, Callable] = {
     FacilityLocation: _pad_fl,
     GraphCut: _pad_gc,
     FeatureBased: _pad_fb,
+    SetCover: _pad_sc,
+    ProbabilisticSetCover: _pad_psc,
+    DisparitySum: _pad_square_dist,
+    DisparityMin: _pad_square_dist,
+    LogDet: _pad_logdet,
+    GCMI: _pad_gcmi,
+    FLQMI: _pad_flqmi,
+    FLVMI: _pad_flvmi,
+    FLCG: _pad_flcg,
+    FLCMI: _pad_flcmi,
 }
 
 
@@ -117,20 +225,35 @@ def register_padder(cls: type, padder: Callable) -> None:
     _PADDERS[cls] = padder
 
 
+def resolve_padder(cls: type) -> Callable:
+    """The padder serving ``cls`` (resolved along the MRO), or a
+    ``NotImplementedError`` naming :func:`register_padder`.  The serving
+    front door calls this at submit time so an unsupported family is
+    rejected before it can poison a flush."""
+    for klass in cls.__mro__:
+        padder = _PADDERS.get(klass)
+        if padder is not None:
+            return padder
+    raise NotImplementedError(
+        f"{cls.__name__} has no registered padder, so it cannot be "
+        "coalesced into served waves; plug one in via "
+        "repro.launch.coalesce.register_padder (see docs/functions.md for "
+        "the families served out of the box)"
+    )
+
+
 def pad_function(fn, n_to: int):
-    """Zero-pad ``fn``'s candidate axis to ``n_to`` (identity if equal)."""
+    """Zero-pad ``fn``'s candidate axis to ``n_to`` (identity if equal).
+
+    The registry is consulted even when no padding is needed: a family
+    without a padder must fail the same way at every ground-set size, not
+    only when its n misses a power-of-two bucket."""
+    padder = resolve_padder(type(fn))
     if fn.n == n_to:
         return fn
     if fn.n > n_to:
         raise ValueError(f"cannot pad n={fn.n} down to {n_to}")
-    for klass in type(fn).__mro__:
-        padder = _PADDERS.get(klass)
-        if padder is not None:
-            return padder(fn, n_to)
-    raise ValueError(
-        f"{type(fn).__name__} has no registered padder; serving supports "
-        "FacilityLocation / GraphCut / FeatureBased (register_padder adds more)"
-    )
+    return padder(fn, n_to)
 
 
 # ---------------------------------------------------------------------------

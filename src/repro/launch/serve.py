@@ -137,10 +137,16 @@ class SelectionServer:
     ):
         """Enqueue one selection request; returns its request id.
 
-        kwargs: stopIfZeroGain / stopIfNegativeGain / screen_k (LazyGreedy
-        only) — anything else raises, so a misspelled flag cannot silently
-        serve a request under the wrong stopping semantics.
+        An unsupported function family (no registered padder) is rejected
+        HERE, not at flush time: a bad request must never poison the flush
+        that would have answered everyone else's.  kwargs: stopIfZeroGain /
+        stopIfNegativeGain / screen_k (LazyGreedy only) — anything else
+        raises, so a misspelled flag cannot silently serve a request under
+        the wrong stopping semantics.
         """
+        from repro.launch.coalesce import resolve_padder
+
+        resolve_padder(type(fn))  # raises NotImplementedError if unsupported
         if self.mesh is not None and optimizer != "NaiveGreedy":
             raise ValueError(
                 f"sharded serving supports only 'NaiveGreedy', got {optimizer!r}"
@@ -208,15 +214,19 @@ class SelectionServer:
     def flush(self) -> dict:
         """Coalesce + dispatch everything pending; returns {rid: response},
         including any responses computed by an earlier ``select`` call on
-        behalf of requests it didn't own (nothing is ever dropped)."""
-        pending, self._pending = self._pending, []
-        responses, self._undelivered = self._undelivered, {}
-        for wave in coalesce(
-            pending,
+        behalf of requests it didn't own (nothing is ever dropped).
+        Coalescing runs BEFORE the pending queue and undelivered-response
+        holders are cleared, so a coalesce-time error leaves the server
+        state intact instead of silently dropping everyone's requests."""
+        waves = coalesce(
+            self._pending,
             max_wave=self.max_wave,
             n_multiple=self.n_multiple,
             b_multiple=self.b_multiple,
-        ):
+        )
+        self._pending = []
+        responses, self._undelivered = self._undelivered, {}
+        for wave in waves:
             responses.update(self._dispatch(wave))
         return responses
 
@@ -235,27 +245,82 @@ class SelectionServer:
 # CLI: serve a random mixed workload and report throughput.
 # ---------------------------------------------------------------------------
 
-def _random_requests(n_requests: int, seed: int = 0):
-    """A mixed FL / GraphCut / FeatureBased workload with varying n."""
-    from repro.core import FacilityLocation, FeatureBased, GraphCut, create_kernel
+# dispersion families: the empty-set gain is 0, so their requests must run
+# with stopping disabled or every selection silently comes back empty
+DISPERSION_FAMILIES = frozenset({"dsum", "dmin"})
 
+
+def _random_function(kind: str, n: int, rng):
+    """One random instance of a served family (shared by tests/benchmarks)."""
+    from repro.core import (
+        GCMI,
+        FLQMI,
+        FacilityLocation,
+        FeatureBased,
+        GraphCut,
+        LogDet,
+        ProbabilisticSetCover,
+        SetCover,
+        create_kernel,
+    )
+
+    def kernel():
+        x = rng.normal(size=(n, 8)).astype(np.float32)
+        return np.asarray(create_kernel(x, metric="euclidean"))
+
+    if kind == "fl":
+        return FacilityLocation.from_kernel(kernel())
+    if kind == "gc":
+        return GraphCut.from_kernel(kernel(), lam=0.3)
+    if kind == "fb":
+        feats = rng.uniform(0, 1, size=(n, 12)).astype(np.float32)
+        return FeatureBased.from_features(feats, concave="sqrt")
+    if kind == "sc":
+        cover = rng.integers(0, 2, size=(n, 16)).astype(np.float32)
+        return SetCover.from_cover(cover)
+    if kind == "psc":
+        probs = rng.uniform(0, 0.9, size=(n, 16)).astype(np.float32)
+        return ProbabilisticSetCover.from_probs(probs)
+    if kind == "dsum":
+        from repro.core import DisparitySum
+
+        return DisparitySum.from_distance(1.0 - kernel())
+    if kind == "dmin":
+        from repro.core import DisparityMin
+
+        return DisparityMin.from_distance(1.0 - kernel())
+    if kind == "flqmi":
+        x = rng.normal(size=(n, 8)).astype(np.float32)
+        q = rng.normal(size=(6, 8)).astype(np.float32)
+        from repro.core import create_kernel as ck
+
+        return FLQMI.build(np.asarray(ck(q, x, metric="euclidean")))
+    if kind == "gcmi":
+        x = rng.normal(size=(n, 8)).astype(np.float32)
+        q = rng.normal(size=(5, 8)).astype(np.float32)
+        from repro.core import create_kernel as ck
+
+        return GCMI.build(np.asarray(ck(x, q, metric="euclidean")), lam=0.4)
+    if kind == "logdet":
+        S = kernel() + 0.5 * np.eye(n, dtype=np.float32)
+        return LogDet.from_kernel(S, max_select=16)
+    raise KeyError(kind)
+
+
+def _random_requests(
+    n_requests: int, seed: int = 0, families: Sequence[str] = ("fl", "gc", "fb")
+):
+    """A mixed workload with varying n, cycling through ``families`` (any of
+    fl / gc / fb / sc / psc / dsum / dmin / flqmi / gcmi / logdet — every
+    family here has a padder AND a ShardRule, so the workload serves on and
+    off mesh; note dsum/dmin requests need stopIfZeroGain=False to select
+    anything, so keep them out of default-flag request mixes)."""
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n_requests):
         n = int(rng.choice([24, 32, 48, 64]))
         budget = int(rng.integers(3, 9))
-        kind = i % 3
-        if kind == 0:
-            x = rng.normal(size=(n, 8)).astype(np.float32)
-            S = np.asarray(create_kernel(x, metric="euclidean"))
-            fn = FacilityLocation.from_kernel(S)
-        elif kind == 1:
-            x = rng.normal(size=(n, 8)).astype(np.float32)
-            S = np.asarray(create_kernel(x, metric="euclidean"))
-            fn = GraphCut.from_kernel(S, lam=0.3)
-        else:
-            feats = rng.uniform(0, 1, size=(n, 12)).astype(np.float32)
-            fn = FeatureBased.from_features(feats, concave="sqrt")
+        fn = _random_function(families[i % len(families)], n, rng)
         reqs.append((fn, budget))
     return reqs
 
@@ -273,6 +338,12 @@ def main():
     ap.add_argument("--max-wave", type=int, default=64)
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--families",
+        default="fl,gc,fb",
+        help="comma-separated families to mix into the workload "
+        "(fl,gc,fb,sc,psc,flqmi,gcmi,logdet)",
+    )
     a = ap.parse_args()
 
     import jax
@@ -283,13 +354,28 @@ def main():
         mesh = jax.make_mesh((b, d), ("batch", "data"))
 
     server = SelectionServer(mesh=mesh, max_wave=a.max_wave)
-    requests = _random_requests(a.requests, seed=a.seed)
+    families = tuple(a.families.split(","))
+    requests = _random_requests(a.requests, seed=a.seed, families=families)
+    # same family indexing as _random_requests: dispersion requests ride with
+    # stopping disabled, otherwise their selections are silently empty
+    kinds = [families[i % len(families)] for i in range(len(requests))]
 
     for rnd in range(a.rounds):
         t0 = time.perf_counter()
-        responses = server.select(requests)
+        rids = [
+            server.submit(
+                fn,
+                budget,
+                stopIfZeroGain=kind not in DISPERSION_FAMILIES,
+                stopIfNegativeGain=kind not in DISPERSION_FAMILIES,
+            )
+            for (fn, budget), kind in zip(requests, kinds)
+        ]
+        out = server.flush()
+        responses = [out[r] for r in rids]
         dt = time.perf_counter() - t0
         assert len(responses) == len(requests)
+        assert all(r.selection for r in responses), "empty selection served"
         label = "warmup (compiles)" if rnd == 0 else "steady"
         print(
             f"round {rnd}: {len(requests)} requests in {dt:.3f}s "

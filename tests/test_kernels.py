@@ -260,6 +260,176 @@ def test_fb_function_kernel_path_matches_plain(rng):
     )
 
 
+# -- set-cover family sweeps (backend-layer kernels) --------------------------
+
+SC_SHAPES = [(8, 5), (100, 33), (128, 128), (257, 70), (300, 130)]
+
+
+@pytest.mark.parametrize("shape", SC_SHAPES)
+def test_sc_gains_matches_ref(shape, rng):
+    from repro.kernels.sc_gains import sc_gains_pallas
+
+    n, m = shape
+    cover = rng.integers(0, 2, size=(n, m)).astype(np.float32)
+    covered = (rng.uniform(size=m) < 0.4).astype(np.float32)
+    w = rng.uniform(0.5, 2.0, size=m).astype(np.float32)
+    got = np.asarray(
+        sc_gains_pallas(cover, covered, w, interpret=True, bn=64, bm=64)
+    )
+    want = np.asarray(
+        ref.sc_gains_ref(jnp.asarray(cover), jnp.asarray(covered), jnp.asarray(w))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert (got >= -1e-6).all()  # gains of a monotone function
+
+
+@pytest.mark.parametrize("shape", SC_SHAPES)
+def test_psc_gains_matches_ref(shape, rng):
+    from repro.kernels.sc_gains import psc_gains_pallas
+
+    n, m = shape
+    probs = rng.uniform(0, 0.9, size=(n, m)).astype(np.float32)
+    miss = rng.uniform(0, 1, size=m).astype(np.float32)
+    w = rng.uniform(0.5, 2.0, size=m).astype(np.float32)
+    got = np.asarray(
+        psc_gains_pallas(probs, miss, w, interpret=True, bn=64, bm=64)
+    )
+    want = np.asarray(
+        ref.psc_gains_ref(jnp.asarray(probs), jnp.asarray(miss), jnp.asarray(w))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(3, 200), m=st.integers(1, 80), seed=st.integers(0, 2**31 - 1))
+def test_sc_gains_property(n, m, seed):
+    from repro.kernels.sc_gains import sc_gains_pallas
+
+    rng = np.random.default_rng(seed)
+    cover = rng.integers(0, 2, size=(n, m)).astype(np.float32)
+    covered = (rng.uniform(size=m) < 0.5).astype(np.float32)
+    w = rng.uniform(0.0, 2.0, size=m).astype(np.float32)
+    got = np.asarray(sc_gains_pallas(cover, covered, w, interpret=True, bn=64, bm=64))
+    want = np.asarray(
+        ref.sc_gains_ref(jnp.asarray(cover), jnp.asarray(covered), jnp.asarray(w))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_sc_function_kernel_path_matches_plain(rng):
+    """SetCover(use_kernel=True) routes full sweeps through the Pallas gain
+    backend and must select the identical greedy set."""
+    from repro.core import SetCover, naive_greedy
+
+    cover = rng.integers(0, 2, size=(70, 25)).astype(np.float32)
+    w = rng.uniform(0.5, 2.0, size=25).astype(np.float32)
+    plain = SetCover.from_cover(cover, w)
+    fused = SetCover.from_cover(cover, w, use_kernel=True)
+    r1 = naive_greedy(plain, 10)
+    r2 = naive_greedy(fused, 10)
+    assert list(np.asarray(r1.order)) == list(np.asarray(r2.order))
+    np.testing.assert_allclose(
+        np.asarray(r1.gains), np.asarray(r2.gains), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_psc_function_kernel_path_matches_plain(rng):
+    from repro.core import ProbabilisticSetCover, naive_greedy
+
+    probs = rng.uniform(0, 0.9, size=(60, 20)).astype(np.float32)
+    plain = ProbabilisticSetCover.from_probs(probs)
+    fused = ProbabilisticSetCover.from_probs(probs, use_kernel=True)
+    r1 = naive_greedy(plain, 10)
+    r2 = naive_greedy(fused, 10)
+    assert list(np.asarray(r1.order)) == list(np.asarray(r2.order))
+    np.testing.assert_allclose(
+        np.asarray(r1.gains), np.asarray(r2.gains), rtol=1e-5, atol=1e-5
+    )
+
+
+# -- disparity sweeps (stateless, from the selection mask) --------------------
+
+DISP_SHAPES = [(8,), (100,), (128,), (257,)]
+
+
+@pytest.mark.parametrize("shape", DISP_SHAPES)
+def test_dsum_gains_matches_ref(shape, rng):
+    from repro.kernels.disp_gains import dsum_gains_pallas
+
+    (n,) = shape
+    d = rng.uniform(0, 2, size=(n, n)).astype(np.float32)
+    np.fill_diagonal(d, 0.0)
+    m = (rng.uniform(size=n) < 0.3).astype(np.float32)
+    got = np.asarray(dsum_gains_pallas(d, m, interpret=True, bj=64, bk=64))
+    want = np.asarray(ref.dsum_gains_ref(jnp.asarray(d), jnp.asarray(m)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", DISP_SHAPES)
+def test_dmin_gains_matches_ref(shape, rng):
+    from repro.kernels.disp_gains import dmin_gains_pallas
+
+    (n,) = shape
+    d = rng.uniform(0.1, 2, size=(n, n)).astype(np.float32)
+    np.fill_diagonal(d, 0.0)
+    m = (rng.uniform(size=n) < 0.3).astype(np.float32)
+    count = int(m.sum())
+    curmin = float(rng.uniform(0, 1)) if count else 0.0
+    got = np.asarray(
+        dmin_gains_pallas(d, m, count, curmin, interpret=True, bj=64, bk=64)
+    )
+    want = np.asarray(
+        ref.dmin_gains_ref(jnp.asarray(d), jnp.asarray(m), count, curmin)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_dmin_gains_empty_selection_is_zero(rng):
+    """|A| = 0: the surrogate collapses to 0 - f({}) = 0 for every candidate
+    (the kernel's SMEM count conditional, not the masked min, must win)."""
+    from repro.kernels.disp_gains import dmin_gains_pallas
+
+    d = rng.uniform(0, 2, size=(40, 40)).astype(np.float32)
+    got = np.asarray(
+        dmin_gains_pallas(
+            d, np.zeros(40, np.float32), 0, 0.0, interpret=True, bj=64, bk=64
+        )
+    )
+    np.testing.assert_array_equal(got, np.zeros(40, np.float32))
+
+
+def test_dsum_function_kernel_path_matches_plain(rng):
+    from repro.core import DisparitySum, naive_greedy
+
+    d = rng.uniform(0, 2, size=(60, 60)).astype(np.float32)
+    d = (d + d.T) / 2
+    np.fill_diagonal(d, 0.0)
+    plain = DisparitySum.from_distance(d)
+    fused = DisparitySum.from_distance(d, use_kernel=True)
+    r1 = naive_greedy(plain, 8, False, False)
+    r2 = naive_greedy(fused, 8, False, False)
+    assert list(np.asarray(r1.order)) == list(np.asarray(r2.order))
+    np.testing.assert_allclose(
+        np.asarray(r1.gains), np.asarray(r2.gains), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_dmin_function_kernel_path_matches_plain(rng):
+    """DisparityMin's masked min is order-independent, so the stateless
+    Pallas sweep reproduces the memoized path bit-for-bit."""
+    from repro.core import DisparityMin, naive_greedy
+
+    d = rng.uniform(0.1, 2, size=(60, 60)).astype(np.float32)
+    d = (d + d.T) / 2
+    np.fill_diagonal(d, 0.0)
+    plain = DisparityMin.from_distance(d)
+    fused = DisparityMin.from_distance(d, use_kernel=True)
+    r1 = naive_greedy(plain, 8, False, False)
+    r2 = naive_greedy(fused, 8, False, False)
+    assert list(np.asarray(r1.order)) == list(np.asarray(r2.order))
+    np.testing.assert_array_equal(np.asarray(r1.gains), np.asarray(r2.gains))
+
+
 @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
 def test_fused_fl_sweep_dtypes(dtype, rng):
     from repro.kernels.fused_fl_sweep import (

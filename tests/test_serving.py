@@ -36,6 +36,17 @@ from repro.launch.serve import SelectionServer, _random_requests
 
 
 def _build(kind, rng, n):
+    from repro.core import (
+        GCMI,
+        FLQMI,
+        FLVMI,
+        DisparityMin,
+        DisparitySum,
+        LogDet,
+        ProbabilisticSetCover,
+        SetCover,
+    )
+
     x = rng.normal(size=(n, 8)).astype(np.float32)
     S = np.asarray(create_kernel(x, metric="euclidean"))
     if kind == "fl":
@@ -48,7 +59,48 @@ def _build(kind, rng, n):
         return FeatureBased.from_features(
             rng.uniform(0, 1, size=(n, 12)).astype(np.float32), concave="sqrt"
         )
+    if kind == "sc":
+        return SetCover.from_cover(
+            rng.integers(0, 2, size=(n, 12)).astype(np.float32),
+            rng.uniform(0.5, 2.0, 12).astype(np.float32),
+        )
+    if kind == "sc_kernel":
+        return SetCover.from_cover(
+            rng.integers(0, 2, size=(n, 12)).astype(np.float32), use_kernel=True
+        )
+    if kind == "psc":
+        return ProbabilisticSetCover.from_probs(
+            rng.uniform(0, 0.9, size=(n, 12)).astype(np.float32)
+        )
+    if kind == "dsum":
+        return DisparitySum.from_distance(1.0 - S)
+    if kind == "dmin":
+        return DisparityMin.from_distance(1.0 - S)
+    if kind == "flqmi":
+        q = rng.normal(size=(5, 8)).astype(np.float32)
+        return FLQMI.build(np.asarray(create_kernel(q, x, metric="euclidean")))
+    if kind == "flvmi":
+        q = rng.normal(size=(5, 8)).astype(np.float32)
+        return FLVMI.build(S, np.asarray(create_kernel(x, q, metric="euclidean")))
+    if kind == "gcmi":
+        q = rng.normal(size=(5, 8)).astype(np.float32)
+        return GCMI.build(
+            np.asarray(create_kernel(x, q, metric="euclidean")), lam=0.4
+        )
+    if kind == "logdet":
+        return LogDet.from_kernel(
+            S + 0.5 * np.eye(n, dtype=np.float32), max_select=10
+        )
     raise KeyError(kind)
+
+
+# the empty-set gain is 0 for the dispersion functions, so their requests run
+# with stopping disabled (see core/functions/disparity.py)
+_NOSTOP = {"dsum", "dmin"}
+
+
+def _stop_args(kind):
+    return (False, False) if kind in _NOSTOP else (True, True)
 
 
 # -- coalescing ---------------------------------------------------------------
@@ -62,16 +114,28 @@ def test_bucket_size():
     assert bucket_size(2, multiple=3) == 3  # non-pow2 mesh axis
 
 
-@pytest.mark.parametrize("kind", ["fl", "gc", "fb"])
+@pytest.mark.parametrize(
+    "kind",
+    ["fl", "gc", "fb", "sc", "psc", "dsum", "dmin", "flqmi", "flvmi", "gcmi",
+     "logdet"],
+)
 def test_pad_function_preserves_selection_exactly(kind, rng):
     """Zero-padding the candidate axis + a valid mask is bit-invisible."""
     fn = _build(kind, rng, 23)
+    stop_zero, stop_neg = _stop_args(kind)
     padded = pad_function(fn, 32)
     assert padded.n == 32
     valid = np.zeros((1, 32), bool)
     valid[:, :23] = True
-    got = batched_maximize([padded], 6, valid=jnp.asarray(valid), return_result=True)[0]
-    ref = naive_greedy(fn, 6)
+    got = batched_maximize(
+        [padded],
+        6,
+        valid=jnp.asarray(valid),
+        return_result=True,
+        stopIfZeroGain=stop_zero,
+        stopIfNegativeGain=stop_neg,
+    )[0]
+    ref = naive_greedy(fn, 6, stop_zero, stop_neg)
     assert list(np.asarray(ref.order)) == list(np.asarray(got.order))
     np.testing.assert_array_equal(np.asarray(ref.gains), np.asarray(got.gains))
 
@@ -109,13 +173,43 @@ def test_coalesce_splits_at_max_wave(rng):
     assert sorted(len(w.requests) for w in waves) == [1, 2, 2]
 
 
-def test_coalesce_rejects_unknown_family(rng):
-    from repro.core import LogDet
+def _unsupported_family(rng):
+    """DisparityMinSum deliberately registers no padder/ShardRule: its gains
+    reduce over ALL rows of the distance matrix, so zero row-padding would
+    shift them by ulps (see core/functions/disparity.py)."""
+    from repro.core import DisparityMinSum
 
-    S = np.asarray(create_kernel(rng.normal(size=(8, 4)).astype(np.float32)))
-    fn = LogDet.from_kernel(S + 0.5 * np.eye(8, dtype=np.float32))
-    with pytest.raises(ValueError, match="padder"):
+    d = rng.uniform(0, 2, size=(8, 8)).astype(np.float32)
+    np.fill_diagonal(d, 0.0)
+    return DisparityMinSum.from_distance(d)
+
+
+def test_coalesce_rejects_unknown_family(rng):
+    fn = _unsupported_family(rng)
+    with pytest.raises(NotImplementedError, match="register_padder"):
         coalesce([SelectionRequest(rid=0, fn=fn, budget=2)], n_multiple=16)
+
+
+def test_server_rejects_unknown_family_with_clear_error(rng):
+    """An unsupported family submitted to the SelectionServer must surface a
+    NotImplementedError naming register_padder — not an opaque shape error
+    from deep inside the engine — AT SUBMIT TIME, and must not poison
+    co-pending valid requests."""
+    server = SelectionServer()
+    fn_ok = _build("fl", rng, 16)
+    rid_ok = server.submit(fn_ok, 3)
+    with pytest.raises(NotImplementedError, match="register_padder"):
+        server.submit(_unsupported_family(rng), 3)
+    out = server.flush()  # the valid request is unaffected by the rejection
+    assert out[rid_ok].selection == maximize(fn_ok, 3)
+
+
+def test_shard_rule_error_names_register_shard_rule(rng):
+    """The mesh path's unknown-family error must name register_shard_rule."""
+    mesh = jax.make_mesh((1, 1), ("batch", "data"))
+    fn = _unsupported_family(rng)
+    with pytest.raises(NotImplementedError, match="register_shard_rule"):
+        batched_maximize([fn], 2, mesh=mesh)
 
 
 # -- the server, single device ------------------------------------------------
@@ -230,6 +324,85 @@ def test_sharded_engine_unit_mesh_bit_identical(kind, rng):
         assert float(ref.value) == float(r.value)
 
 
+@pytest.mark.parametrize(
+    "kind", ["sc", "sc_kernel", "psc", "dsum", "dmin", "flqmi", "flvmi",
+             "gcmi", "logdet"]
+)
+def test_sharded_engine_unit_mesh_new_families(kind, rng):
+    """The serving-breadth families (SetCover family, Disparity, MI
+    combinators, LogDet) through the full shard_map+vmap program on a (1,1)
+    mesh: ids, gains, n_evals and value all equal the sequential loop."""
+    mesh = jax.make_mesh((1, 1), ("batch", "data"))
+    stop_zero, stop_neg = _stop_args(kind)
+    fns = [_build(kind, rng, 32) for _ in range(3)]
+    budgets = [5, 3, 6]
+    res = batched_maximize(
+        fns,
+        budgets,
+        mesh=mesh,
+        return_result=True,
+        stopIfZeroGain=stop_zero,
+        stopIfNegativeGain=stop_neg,
+    )
+    for fn, b, r in zip(fns, budgets, res):
+        ref = naive_greedy(fn, b, stop_zero, stop_neg)
+        assert list(np.asarray(ref.order)) == list(np.asarray(r.order))
+        np.testing.assert_array_equal(np.asarray(ref.gains), np.asarray(r.gains))
+        assert int(ref.n_evals) == int(r.n_evals)
+        assert float(ref.value) == float(r.value)
+
+
+def test_server_new_families_bit_identical(rng):
+    """Mixed SC / PSC / FLQMI / GCMI / LogDet workload through the server:
+    every served selection equals its single `maximize` call."""
+    from repro.launch.serve import _random_requests as rr
+
+    server = SelectionServer()
+    requests = rr(10, seed=11, families=("sc", "psc", "flqmi", "gcmi", "logdet"))
+    responses = server.select(requests)
+    for (fn, budget), resp in zip(requests, responses):
+        ref = maximize(fn, budget)
+        assert [i for i, _ in ref] == [i for i, _ in resp.selection]
+        assert [g for _, g in ref] == [g for _, g in resp.selection]
+
+
+def test_server_disparity_bit_identical(rng):
+    """Disparity requests need stopIfZeroGain=False (empty-set gain is 0);
+    with it they serve bit-identically, including coalesced same-shape
+    waves."""
+    server = SelectionServer()
+    fns = [_build(k, rng, 24) for k in ("dsum", "dsum", "dmin")]
+    rids = [
+        server.submit(f, 5, stopIfZeroGain=False, stopIfNegativeGain=False)
+        for f in fns
+    ]
+    out = server.flush()
+    for f, rid in zip(fns, rids):
+        ref = maximize(f, 5, stopIfZeroGain=False, stopIfNegativeGain=False)
+        assert out[rid].selection == ref
+
+
+def test_sharded_engine_rejects_disparity_use_kernel(rng):
+    """Disparity*(use_kernel=True) keeps the GraphCut policy: the stateless
+    Pallas sweep cannot be reconciled with the memoized shard rule
+    bit-identically, so the mesh path must refuse loudly."""
+    from repro.core import DisparityMin, DisparitySum
+
+    d = np.asarray(_build("dsum", rng, 32).dist)
+    mesh = jax.make_mesh((1, 1), ("batch", "data"))
+    for cls in (DisparitySum, DisparityMin):
+        fn = cls.from_distance(d, use_kernel=True)
+        with pytest.raises(ValueError, match="use_kernel"):
+            batched_maximize([fn], 3, mesh=mesh)
+        # single-device serving of the same instance stays bit-identical
+        r = batched_maximize(
+            [fn], 3, return_result=True,
+            stopIfZeroGain=False, stopIfNegativeGain=False,
+        )[0]
+        ref = naive_greedy(fn, 3, False, False)
+        assert list(np.asarray(ref.order)) == list(np.asarray(r.order))
+
+
 def test_sharded_engine_rejects_bad_mesh_axes(rng):
     fns = [_build("fl", rng, 32) for _ in range(3)]
     with pytest.raises(ValueError, match="no axis"):
@@ -331,3 +504,97 @@ def test_sharded_serving_four_devices():
         cwd="/root/repo",
     )
     assert "SHARDED_SERVE_OK" in r.stdout, r.stdout + r.stderr
+
+
+_MULTIDEV_BREADTH_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np, jax
+    from repro.core import (SetCover, ProbabilisticSetCover, DisparitySum,
+                            DisparityMin, FLQMI, FLVMI, GCMI, LogDet,
+                            create_kernel, naive_greedy, batched_maximize,
+                            maximize)
+    from repro.launch.serve import SelectionServer, _random_requests
+
+    rng = np.random.default_rng(0)
+
+    def build(kind, n=32):
+        x = rng.normal(size=(n, 8)).astype(np.float32)
+        S = np.asarray(create_kernel(x, metric="euclidean"))
+        if kind == "sc":
+            return SetCover.from_cover(
+                rng.integers(0, 2, size=(n, 12)).astype(np.float32))
+        if kind == "sc_kernel":
+            return SetCover.from_cover(
+                rng.integers(0, 2, size=(n, 12)).astype(np.float32),
+                use_kernel=True)
+        if kind == "psc":
+            return ProbabilisticSetCover.from_probs(
+                rng.uniform(0, 0.9, size=(n, 12)).astype(np.float32))
+        if kind == "dsum": return DisparitySum.from_distance(1.0 - S)
+        if kind == "dmin": return DisparityMin.from_distance(1.0 - S)
+        if kind == "flqmi":
+            q = rng.normal(size=(5, 8)).astype(np.float32)
+            return FLQMI.build(np.asarray(create_kernel(q, x, "euclidean")))
+        if kind == "flvmi":
+            q = rng.normal(size=(5, 8)).astype(np.float32)
+            return FLVMI.build(S, np.asarray(create_kernel(x, q, "euclidean")))
+        if kind == "gcmi":
+            q = rng.normal(size=(5, 8)).astype(np.float32)
+            return GCMI.build(
+                np.asarray(create_kernel(x, q, "euclidean")), lam=0.4)
+        return LogDet.from_kernel(
+            S + 0.5 * np.eye(n, dtype=np.float32), max_select=10)
+
+    mesh = jax.make_mesh((2, 2), ("batch", "data"))
+    assert len(jax.devices()) == 4
+    budgets = [6, 3, 5, 4]
+
+    for kind in ["sc", "sc_kernel", "psc", "flqmi", "flvmi", "gcmi", "logdet"]:
+        fns = [build(kind) for _ in range(4)]
+        res = batched_maximize(fns, budgets, mesh=mesh, return_result=True)
+        for fn, b, r in zip(fns, budgets, res):
+            ref = naive_greedy(fn, b)
+            assert list(np.asarray(ref.order)) == list(np.asarray(r.order)), kind
+            assert np.array_equal(np.asarray(ref.gains), np.asarray(r.gains)), kind
+            assert int(ref.n_evals) == int(r.n_evals), kind
+            assert float(ref.value) == float(r.value), kind
+
+    for kind in ["dsum", "dmin"]:  # empty-set gain is 0: stopping disabled
+        fns = [build(kind) for _ in range(4)]
+        res = batched_maximize(fns, budgets, mesh=mesh, return_result=True,
+                               stopIfZeroGain=False, stopIfNegativeGain=False)
+        for fn, b, r in zip(fns, budgets, res):
+            ref = naive_greedy(fn, b, False, False)
+            assert list(np.asarray(ref.order)) == list(np.asarray(r.order)), kind
+            assert np.array_equal(np.asarray(ref.gains), np.asarray(r.gains)), kind
+
+    server = SelectionServer(mesh=mesh)
+    requests = _random_requests(
+        12, seed=2, families=("sc", "psc", "flqmi", "gcmi", "logdet", "fl"))
+    for (fn, budget), resp in zip(requests, server.select(requests)):
+        ref = maximize(fn, budget)
+        assert [i for i, _ in ref] == [i for i, _ in resp.selection]
+        assert [g for _, g in ref] == [g for _, g in resp.selection]
+    print("SHARDED_BREADTH_OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_serving_breadth_four_devices():
+    """The full function x backend matrix on a real 2x2 mesh: SetCover family
+    (incl. the per-shard Pallas sweep), Disparity, the FL/GC MI combinators
+    and LogDet all serve bit-identically with live collectives.  @slow: ~9
+    compiled programs; the fast tier covers the same families on the (1,1)
+    in-process mesh."""
+    r = subprocess.run(
+        [sys.executable, "-c", _MULTIDEV_BREADTH_SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo",
+    )
+    assert "SHARDED_BREADTH_OK" in r.stdout, r.stdout + r.stderr

@@ -3,16 +3,24 @@
 Extracts fenced code blocks from README.md and docs/*.md and executes every
 block tagged ```python as a standalone script (PYTHONPATH=src, 8 forced host
 devices so mesh examples work).  Blocks tagged ```python no-run are checked
-for syntax only; other languages are ignored.
+for syntax only; other languages are ignored.  Blocks run concurrently
+(they are independent subprocesses), so wall time is roughly the slowest
+block, not the sum.
 
-    python tools/check_docs.py            # all docs
-    python tools/check_docs.py README.md  # one file
+Also asserts that the README's function x backend coverage matrix matches
+the live registries (``tools/gen_matrix.py --check``), so a new kernel /
+padder / ShardRule registration cannot land without the front door
+advertising it.
+
+    python tools/check_docs.py            # all docs + the matrix check
+    python tools/check_docs.py README.md  # one file (skips the matrix check)
 
 Exit status is non-zero if any block fails — `make docs-check` gates on it,
 and tests/test_docs_examples.py runs it in the fast tier.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import pathlib
 import re
 import subprocess
@@ -21,6 +29,14 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 FENCE = re.compile(r"^```(\S+)([^\n]*)\n(.*?)^```\s*$", re.M | re.S)
 TIMEOUT_S = 240
+MAX_WORKERS = 8
+
+_ENV = {
+    "PYTHONPATH": "src",
+    "PATH": "/usr/bin:/bin:/usr/local/bin",
+    "JAX_PLATFORMS": "cpu",
+    "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+}
 
 
 def doc_files(args: list[str]) -> list[pathlib.Path]:
@@ -39,19 +55,13 @@ def blocks(path: pathlib.Path):
 
 def run_block(path: pathlib.Path, body: str, line: int) -> str | None:
     """Run one python block; returns an error string or None."""
-    env = {
-        "PYTHONPATH": "src",
-        "PATH": "/usr/bin:/bin:/usr/local/bin",
-        "JAX_PLATFORMS": "cpu",
-        "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
-    }
     try:
         r = subprocess.run(
             [sys.executable, "-c", body],
             capture_output=True,
             text=True,
             timeout=TIMEOUT_S,
-            env=env,
+            env=_ENV,
             cwd=ROOT,
         )
     except subprocess.TimeoutExpired:
@@ -62,8 +72,25 @@ def run_block(path: pathlib.Path, body: str, line: int) -> str | None:
     return None
 
 
+def check_matrix() -> str | None:
+    """README coverage matrix must match the registries (gen_matrix --check)."""
+    r = subprocess.run(
+        [sys.executable, "tools/gen_matrix.py", "--check"],
+        capture_output=True,
+        text=True,
+        timeout=TIMEOUT_S,
+        env=_ENV,
+        cwd=ROOT,
+    )
+    if r.returncode != 0:
+        tail = (r.stderr or r.stdout).strip().splitlines()[-6:]
+        return "README.md: coverage matrix stale\n  " + "\n  ".join(tail)
+    return None
+
+
 def main(argv: list[str]) -> int:
-    failures, ran, skipped = [], 0, 0
+    failures, skipped = [], 0
+    jobs = []  # (label, callable)
     for path in doc_files(argv):
         if not path.exists():
             failures.append(f"{path} does not exist")
@@ -78,13 +105,24 @@ def main(argv: list[str]) -> int:
                     failures.append(f"{path.name}:{line}: syntax error: {e}")
                 skipped += 1
                 continue
-            err = run_block(path, body, line)
-            ran += 1
+            jobs.append(
+                (f"{path.name}:{line}", lambda p=path, b=body, l=line: run_block(p, b, l))
+            )
+    if not argv:
+        jobs.append(("README.md:matrix", check_matrix))
+
+    with concurrent.futures.ThreadPoolExecutor(
+        max_workers=min(MAX_WORKERS, max(1, len(jobs)))
+    ) as pool:
+        futures = {pool.submit(fn): label for label, fn in jobs}
+        for fut in concurrent.futures.as_completed(futures):
+            err = fut.result()
             if err:
                 failures.append(err)
             else:
-                print(f"ok: {path.name}:{line}")
-    print(f"\n{ran} blocks run, {skipped} syntax-checked, {len(failures)} failed")
+                print(f"ok: {futures[fut]}")
+
+    print(f"\n{len(jobs)} checks run, {skipped} syntax-checked, {len(failures)} failed")
     for f in failures:
         print(f"FAIL {f}", file=sys.stderr)
     return 1 if failures else 0

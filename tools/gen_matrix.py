@@ -1,0 +1,191 @@
+"""Generate the README function x backend coverage matrix from the registries.
+
+The table is derived from the LIVE plug-in points — ``gain_backend()`` /
+``backend_name`` (core/optimizers/backends.py), the coalescer padder registry
+(launch/coalesce.py), and the ShardRule registry
+(core/optimizers/distributed.py) — by building a tiny instance of every
+family and asking each layer whether it serves it.  A hand-maintained table
+goes stale the moment a registration lands; this one cannot.
+
+    PYTHONPATH=src python tools/gen_matrix.py            # print the table
+    PYTHONPATH=src python tools/gen_matrix.py --write    # rewrite README.md
+    PYTHONPATH=src python tools/gen_matrix.py --check    # exit 1 on drift
+
+The README block between the BEGIN/END markers below is the generated
+region; ``tools/check_docs.py`` runs ``--check`` so `make docs-check` (and
+the fast test tier) fail when the README drifts from the registries.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+README = ROOT / "README.md"
+BEGIN = "<!-- BEGIN GENERATED: function-backend-matrix (tools/gen_matrix.py) -->"
+END = "<!-- END GENERATED: function-backend-matrix -->"
+
+_N = 8  # tiny probe instances
+
+
+def _families():
+    """Ordered (display name, plain instance, use_kernel instance | None)."""
+    from repro.core import (
+        GCMI,
+        FLCG,
+        FLCMI,
+        FLQMI,
+        FLVMI,
+        ConcaveOverModular,
+        DisparityMin,
+        DisparityMinSum,
+        DisparitySum,
+        FacilityLocation,
+        FeatureBased,
+        GraphCut,
+        LogDet,
+        ProbabilisticSetCover,
+        SetCover,
+        generic_mi,
+        sc_mi,
+    )
+
+    rng = np.random.default_rng(0)
+    S = rng.uniform(0.1, 1.0, size=(_N, _N)).astype(np.float32)
+    S = (S + S.T) / 2
+    Sq = rng.uniform(0.1, 1.0, size=(3, _N)).astype(np.float32)
+    D = 1.0 - S
+    cover = rng.integers(0, 2, size=(_N, 5)).astype(np.float32)
+    probs = rng.uniform(0, 0.9, size=(_N, 5)).astype(np.float32)
+    feats = rng.uniform(0, 1, size=(_N, 5)).astype(np.float32)
+
+    sc_measure = sc_mi(cover, np.ones(5, np.float32), cover[:2])
+    generic = generic_mi(SetCover.from_cover(cover), [0, 1], _N)
+
+    return [
+        ("FacilityLocation", FacilityLocation.from_kernel(S),
+         FacilityLocation.from_kernel(S, use_kernel=True)),
+        ("GraphCut", GraphCut.from_kernel(S, lam=0.3),
+         GraphCut.from_kernel(S, lam=0.3, use_kernel=True)),
+        ("FeatureBased", FeatureBased.from_features(feats),
+         FeatureBased.from_features(feats, use_kernel=True)),
+        ("SetCover", SetCover.from_cover(cover),
+         SetCover.from_cover(cover, use_kernel=True)),
+        ("ProbabilisticSetCover", ProbabilisticSetCover.from_probs(probs),
+         ProbabilisticSetCover.from_probs(probs, use_kernel=True)),
+        ("DisparitySum", DisparitySum.from_distance(D),
+         DisparitySum.from_distance(D, use_kernel=True)),
+        ("DisparityMin", DisparityMin.from_distance(D),
+         DisparityMin.from_distance(D, use_kernel=True)),
+        ("DisparityMinSum", DisparityMinSum.from_distance(D), None),
+        ("LogDet", LogDet.from_kernel(S + 0.5 * np.eye(_N, dtype=np.float32)),
+         None),
+        ("FLVMI", FLVMI.build(S, Sq.T), None),
+        ("FLQMI", FLQMI.build(Sq), None),
+        ("FLCG", FLCG.build(S, Sq.T), None),
+        ("FLCMI", FLCMI.build(S, Sq.T, Sq.T), None),
+        ("GCMI", GCMI.build(Sq.T, lam=0.4), None),
+        ("ConcaveOverModular", ConcaveOverModular.build(Sq.T), None),
+        ("SC/PSC/GC/LogDet MI-CG measures (base-class instances)",
+         sc_measure, None),
+        ("generic MI/CG/CMI combinators", generic, None),
+    ]
+
+
+def _probe(fn, fn_kernel):
+    """(pallas cell, padder cell, shard-rule cell) for one family."""
+    from repro.core.optimizers.backends import backend_name
+    from repro.core.optimizers.distributed import shard_rule
+    from repro.launch.coalesce import bucket_size, pad_function
+
+    pallas = "—"
+    if fn_kernel is not None:
+        name = backend_name(fn_kernel)
+        if name != "xla":
+            pallas = f"`{name}`"
+
+    try:
+        pad_function(fn, bucket_size(fn.n + 1))
+        padder = "yes"
+    except NotImplementedError:
+        padder = "—"
+
+    try:
+        shard_rule(fn)
+        rule = "yes"
+    except NotImplementedError:
+        rule = "—"
+    if rule == "yes" and fn_kernel is not None:
+        try:
+            shard_rule(fn_kernel)
+        except ValueError:
+            rule = "yes \\*"  # memoized form only: use_kernel=True rejected
+    return pallas, padder, rule
+
+
+def build_table() -> str:
+    rows = [
+        "| Function family | Fused Pallas sweep (`use_kernel=True`) | "
+        "Generic XLA sweep | Served waves (padder) | Sharded serving "
+        "(`ShardRule`) |",
+        "|---|---|---|---|---|",
+    ]
+    for name, fn, fn_kernel in _families():
+        pallas, padder, rule = _probe(fn, fn_kernel)
+        rows.append(f"| {name} | {pallas} | yes | {padder} | {rule} |")
+    rows.append("")
+    rows.append(
+        "\\* the mesh ShardRule keeps the bit-identical contract with the "
+        "*memoized* sweep only, so it rejects `use_kernel=True` instances "
+        "(the stateless Pallas recompute is a different float reduction); "
+        "serve those single-device, or build with `use_kernel=False`."
+    )
+    return "\n".join(rows)
+
+
+def render(readme_text: str, table: str) -> str:
+    try:
+        head, rest = readme_text.split(BEGIN, 1)
+        _, tail = rest.split(END, 1)
+    except ValueError:
+        raise SystemExit(
+            f"README.md is missing the {BEGIN!r} / {END!r} markers"
+        )
+    return f"{head}{BEGIN}\n{table}\n{END}{tail}"
+
+
+def main(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--write", action="store_true", help="rewrite README.md")
+    mode.add_argument(
+        "--check", action="store_true", help="exit 1 if README.md is stale"
+    )
+    a = ap.parse_args(argv)
+
+    table = build_table()
+    current = README.read_text()
+    updated = render(current, table)
+    if a.write:
+        README.write_text(updated)
+        print("README.md matrix regenerated")
+        return 0
+    if a.check:
+        if current != updated:
+            print(
+                "README.md function x backend matrix is stale; run\n"
+                "  PYTHONPATH=src python tools/gen_matrix.py --write",
+                file=sys.stderr,
+            )
+            return 1
+        print("README.md matrix matches the registries")
+        return 0
+    print(table)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
