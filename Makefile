@@ -5,6 +5,8 @@
 #   make test-all    everything, including multi-device + heavy-arch tests
 #   make bench       benchmark driver (paper tables) + batched-engine bench
 #   make bench-serve serving throughput sweep (wave size x mesh shape)
+#   make bench-diff  re-run the batched bench and flag >20% throughput
+#                    regressions vs the committed BENCH_batched.json snapshot
 #   make docs-check  execute the code blocks in README.md and docs/*.md,
 #                    and assert the README coverage matrix matches the
 #                    registries (tools/gen_matrix.py --check)
@@ -12,7 +14,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test-fast test-all bench bench-batched bench-serve docs-check
+.PHONY: verify test-fast test-all bench bench-batched bench-serve bench-diff docs-check
 
 verify: test-fast docs-check
 
@@ -32,6 +34,11 @@ bench-batched:
 # own process: it must set --xla_force_host_platform_device_count pre-import
 bench-serve:
 	$(PYTHON) -m benchmarks.serve_bench
+
+# fresh snapshot to /tmp, then diff against the committed baseline
+bench-diff:
+	$(PYTHON) -m benchmarks.batched_bench --json /tmp/BENCH_batched_new.json >/dev/null
+	$(PYTHON) tools/bench_diff.py benchmarks/BENCH_batched.json /tmp/BENCH_batched_new.json
 
 docs-check:
 	$(PYTHON) tools/check_docs.py

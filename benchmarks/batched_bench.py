@@ -14,10 +14,25 @@ Reported: wall time per wave, queries/sec, and speedup over the sequential
 loop.  The batched paths must return identical per-instance selections,
 asserted before timing.
 
+A second table compares batched **NaiveGreedy vs LazyGreedy** (the
+eval-sparse bucketed lazy engine): gain-evaluation counts AND wall clock,
+on both flat and peaked gain distributions.  Flat gains are lazy greedy's
+documented worst case (bound screens keep missing); peaked gains — the
+regime Minoux '78 targets and real dedup/coreset kernels live in — is where
+the [acceptance] >=2x wall-clock win over batched naive shows up on CPU.
+
+``--json PATH`` dumps every row for trend tracking
+(``benchmarks/BENCH_batched.json`` is the committed snapshot; diff two
+snapshots with ``tools/bench_diff.py`` / ``make bench-diff``).
+
     PYTHONPATH=src python -m benchmarks.batched_bench
+    PYTHONPATH=src python -m benchmarks.batched_bench --json benchmarks/BENCH_batched.json
 """
 from __future__ import annotations
 
+import argparse
+import json
+import platform
 import time
 
 import jax
@@ -28,16 +43,23 @@ from repro.core import (
     FacilityLocation,
     batched_maximize,
     create_kernel,
+    lazy_greedy,
     naive_greedy,
 )
 
 
-def make_instances(B=64, n=64, d=8, seed=0):
+def make_instances(B=64, n=64, d=8, seed=0, peaked=False):
+    """B FacilityLocation instances.  ``peaked=True`` scales each candidate
+    column by a decaying factor, giving the head-heavy gain distribution
+    lazy greedy targets (flat euclidean-kernel gains are its worst case)."""
     rng = np.random.default_rng(seed)
     fns = []
     for _ in range(B):
         x = rng.normal(size=(n, d)).astype(np.float32)
         S = np.asarray(create_kernel(x, metric="euclidean"))
+        if peaked:
+            scale = (0.99 ** np.arange(n))[rng.permutation(n)].astype(np.float32)
+            S = S * scale[None, :]
         fns.append(FacilityLocation.from_kernel(S))
     return fns
 
@@ -146,7 +168,56 @@ def run_family(family: str, B: int = 32, n: int = 64, budget: int = 8, reps: int
     }
 
 
-def main():
+def run_lazy(
+    B: int,
+    n: int,
+    budget: int,
+    screen_k: int = 32,
+    peaked: bool = True,
+    reps: int = 3,
+):
+    """Batched NaiveGreedy vs batched LazyGreedy on one resident engine:
+    wall clock AND total gain-evaluation counts (the hardware-independent
+    cost metric).  Correctness gate: the lazy wave must be bit-identical to
+    a loop of sequential ``lazy_greedy`` calls, including n_evals."""
+    fns = make_instances(B, n, peaked=peaked)
+    engine = BatchedEngine(fns)
+
+    def naive():
+        return engine.maximize(budget, return_result=True)
+
+    def lazy():
+        return engine.maximize(
+            budget, optimizer="LazyGreedy", screen_k=screen_k, return_result=True
+        )
+
+    naive_res, lazy_res = naive(), lazy()
+    for i, (fn, r) in enumerate(zip(fns, lazy_res)):  # correctness gate
+        seq = lazy_greedy(fn, budget, screen_k)
+        assert list(np.asarray(seq.order)) == list(np.asarray(r.order)), i
+        assert int(seq.n_evals) == int(r.n_evals), i
+
+    naive_evals = sum(int(r.n_evals) for r in naive_res)
+    lazy_evals = sum(int(r.n_evals) for r in lazy_res)
+    t_naive = _time(naive, reps)
+    t_lazy = _time(lazy, reps)
+    return {
+        "B": B,
+        "n": n,
+        "budget": budget,
+        "screen_k": screen_k,
+        "gains": "peaked" if peaked else "flat",
+        "naive_ms": t_naive * 1e3,
+        "lazy_ms": t_lazy * 1e3,
+        "naive_evals": naive_evals,
+        "lazy_evals": lazy_evals,
+        "eval_ratio": naive_evals / lazy_evals,
+        "lazy_qps": B / t_lazy,
+        "lazy_speedup": t_naive / t_lazy,
+    }
+
+
+def main(json_path: str | None = None):
     rows = [
         run(B=8, n=64, budget=8),
         run(B=64, n=64, budget=8),
@@ -181,8 +252,53 @@ def main():
             f"{r['sequential_ms']:8.1f} {r['engine_ms']:9.1f} "
             f"{r['engine_qps']:10.0f} {r['engine_speedup']:7.2f}x"
         )
-    return rows + fam_rows
+
+    lazy_rows = [
+        run_lazy(8, 256, 16, peaked=False),
+        run_lazy(8, 1024, 24, peaked=False),
+        run_lazy(8, 1024, 24, peaked=True),
+        run_lazy(16, 1024, 24, peaked=True),
+        run_lazy(8, 2048, 32, peaked=True),
+    ]
+    print("\n# Batched NaiveGreedy vs LazyGreedy (bucketed lazy engine)")
+    print(
+        f"{'B':>4s} {'n':>5s} {'k':>3s} {'sk':>4s} {'gains':>7s} "
+        f"{'naive ms':>9s} {'lazy ms':>8s} {'lazy x':>7s} "
+        f"{'naive evals':>11s} {'lazy evals':>10s} {'eval x':>7s}"
+    )
+    for r in lazy_rows:
+        print(
+            f"{r['B']:4d} {r['n']:5d} {r['budget']:3d} {r['screen_k']:4d} "
+            f"{r['gains']:>7s} {r['naive_ms']:9.1f} {r['lazy_ms']:8.1f} "
+            f"{r['lazy_speedup']:6.2f}x {r['naive_evals']:11d} "
+            f"{r['lazy_evals']:10d} {r['eval_ratio']:6.1f}x"
+        )
+    best_lazy = max(r["lazy_speedup"] for r in lazy_rows)
+    print(f"\nbest lazy speedup over batched naive: {best_lazy:.2f}x")
+
+    for r in rows:
+        r["section"] = "engine_vs_sequential"
+    for r in fam_rows:
+        r["section"] = "family_breadth"
+    for r in lazy_rows:
+        r["section"] = "naive_vs_lazy"
+    all_rows = rows + fam_rows + lazy_rows
+    if json_path:
+        snapshot = {
+            "bench": "batched_bench",
+            "host": platform.machine(),
+            "backend": jax.default_backend(),
+            "devices": len(jax.devices()),
+            "jax": jax.__version__,
+            "rows": all_rows,
+        }
+        with open(json_path, "w") as f:
+            json.dump(snapshot, f, indent=1)
+        print(f"wrote {len(all_rows)} rows to {json_path}")
+    return all_rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="dump rows to this path")
+    main(json_path=ap.parse_args().json)

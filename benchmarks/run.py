@@ -34,13 +34,21 @@ def main() -> None:
 
     t0 = time.perf_counter()
     bat_rows = batched_bench.main()
+    eng_rows = [r for r in bat_rows if "engine_speedup" in r]
     csv.append(("batched_bench(engine)", (time.perf_counter() - t0) * 1e6,
-                f"best_speedup={max(r['engine_speedup'] for r in bat_rows):.2f}x"))
-    for r in bat_rows:
+                f"best_speedup={max(r['engine_speedup'] for r in eng_rows):.2f}x"))
+    for r in eng_rows:
         csv.append(
             (f"batched/B={r['B']},n={r['n']}", r["engine_ms"] * 1e3,
              f"qps={r['engine_qps']:.0f};speedup={r['engine_speedup']:.2f}x")
         )
+    for r in bat_rows:
+        if r.get("section") == "naive_vs_lazy":
+            csv.append(
+                (f"batched_lazy/B={r['B']},n={r['n']},{r['gains']}",
+                 r["lazy_ms"] * 1e3,
+                 f"speedup={r['lazy_speedup']:.2f}x;evals={r['lazy_evals']}")
+            )
 
     t0 = time.perf_counter()
     tim_rows = timing_bench.main()

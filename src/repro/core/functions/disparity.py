@@ -89,7 +89,9 @@ class DisparitySum(SetFunction):
         return state.selsum[idxs]
 
     def gain_backend(self) -> DSumPallasSweep | None:
-        return DSumPallasSweep() if self.use_kernel else None
+        from repro.core.optimizers.backends import kernel_enabled
+
+        return DSumPallasSweep() if kernel_enabled(self.use_kernel, self.n) else None
 
     def update(self, state: DSumState, j: jax.Array) -> DSumState:
         return DSumState(
@@ -150,8 +152,14 @@ class DisparityMin(SetFunction):
         surrogate = jnp.where(state.count == 0, 0.0, state.mind)
         return jnp.minimum(surrogate, _BIG) - state.curmin
 
+    def gains_at(self, state: DMinState, idxs: jax.Array) -> jax.Array:
+        surrogate = jnp.where(state.count == 0, 0.0, state.mind[idxs])
+        return jnp.minimum(surrogate, _BIG) - state.curmin
+
     def gain_backend(self) -> DMinPallasSweep | None:
-        return DMinPallasSweep() if self.use_kernel else None
+        from repro.core.optimizers.backends import kernel_enabled
+
+        return DMinPallasSweep() if kernel_enabled(self.use_kernel, self.n) else None
 
     def update(self, state: DMinState, j: jax.Array) -> DMinState:
         newmin = jnp.where(
@@ -214,6 +222,17 @@ class DisparityMinSum(SetFunction):
         delta = jnp.where(
             state.selected[:, None],
             jnp.minimum(state.t[:, None], self.dist) - state.t[:, None],
+            0.0,
+        ).sum(axis=0)
+        gains = t_cand + delta
+        gains = jnp.where(state.count == 1, 2.0 * t_cand, gains)
+        return jnp.where(state.count == 0, 0.0, gains)
+
+    def gains_at(self, state: DMinSumState, idxs: jax.Array) -> jax.Array:
+        t_cand = jnp.minimum(state.t[idxs], _BIG)
+        delta = jnp.where(
+            state.selected[:, None],
+            jnp.minimum(state.t[:, None], self.dist[:, idxs]) - state.t[:, None],
             0.0,
         ).sum(axis=0)
         gains = t_cand + delta

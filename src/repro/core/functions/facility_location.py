@@ -24,7 +24,8 @@ class FLState:
 
 
 class FLPallasSweep:
-    """GainBackend: fused relu-reduce sweep over the similarity matrix."""
+    """GainBackend: fused relu-reduce sweep over the similarity matrix (full
+    and gathered-subset entry points; see kernels/fl_gains.py)."""
 
     name = "pallas-fl"
 
@@ -33,15 +34,26 @@ class FLPallasSweep:
 
         return ops.fl_gains(fn.sim, state.curmax)
 
+    def partial_sweep(
+        self, fn: "FacilityLocation", state: FLState, idx: jax.Array
+    ) -> jax.Array:
+        from repro.kernels import ops
+
+        return ops.fl_gains_at(fn.sim, state.curmax, idx)
+
 
 @pytree_dataclass(meta_fields=("n", "use_kernel"))
 class FacilityLocation(SetFunction):
     sim: jax.Array  # (|U|, n) similarity, rows = represented set, cols = ground set
     n: int
-    use_kernel: bool = False  # route the gain sweep through the Pallas kernel
+    # True/False routes the gain sweeps through the Pallas kernel / XLA;
+    # None defers to the trace-time choose_backend heuristic (backends.py)
+    use_kernel: bool | None = False
 
     @staticmethod
-    def from_kernel(sim: jax.Array, use_kernel: bool = False) -> "FacilityLocation":
+    def from_kernel(
+        sim: jax.Array, use_kernel: bool | None = False
+    ) -> "FacilityLocation":
         sim = jnp.asarray(sim)
         return FacilityLocation(sim=sim, n=int(sim.shape[1]), use_kernel=use_kernel)
 
@@ -61,7 +73,9 @@ class FacilityLocation(SetFunction):
         return jnp.maximum(self.sim - state.curmax[:, None], 0.0).sum(axis=0)
 
     def gain_backend(self) -> FLPallasSweep | None:
-        return FLPallasSweep() if self.use_kernel else None
+        from repro.core.optimizers.backends import kernel_enabled
+
+        return FLPallasSweep() if kernel_enabled(self.use_kernel, self.n) else None
 
     def gains_at(self, state: FLState, idxs: jax.Array) -> jax.Array:
         cols = self.sim[:, idxs]  # (|U|, k)

@@ -30,6 +30,13 @@ class FBPallasSweep:
 
         return ops.fb_gains(fn.feats, state.acc, fn.w, fn.concave)
 
+    def partial_sweep(
+        self, fn: "FeatureBased", state: FBState, idx: jax.Array
+    ) -> jax.Array:
+        from repro.kernels import ops
+
+        return ops.fb_gains_at(fn.feats, state.acc, fn.w, idx, fn.concave)
+
 
 @pytree_dataclass(meta_fields=("n", "concave", "use_kernel"))
 class FeatureBased(SetFunction):
@@ -37,14 +44,16 @@ class FeatureBased(SetFunction):
     w: jax.Array  # (F,)
     n: int
     concave: str = "sqrt"
-    use_kernel: bool = False  # route full sweeps through the Pallas kernel
+    # True/False routes sweeps through the Pallas kernel / XLA; None defers
+    # to the trace-time choose_backend heuristic (backends.py)
+    use_kernel: bool | None = False
 
     @staticmethod
     def from_features(
         feats: jax.Array,
         w: jax.Array | None = None,
         concave: str = "sqrt",
-        use_kernel: bool = False,
+        use_kernel: bool | None = False,
     ) -> "FeatureBased":
         feats = jnp.maximum(jnp.asarray(feats, jnp.float32), 0.0)
         F = feats.shape[1]
@@ -82,7 +91,9 @@ class FeatureBased(SetFunction):
         return FBState(acc=state.acc + self.feats[j])
 
     def gain_backend(self) -> FBPallasSweep | None:
-        return FBPallasSweep() if self.use_kernel else None
+        from repro.core.optimizers.backends import kernel_enabled
+
+        return FBPallasSweep() if kernel_enabled(self.use_kernel, self.n) else None
 
     def evaluate(self, mask: jax.Array) -> jax.Array:
         g = get_concave(self.concave)

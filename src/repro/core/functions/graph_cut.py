@@ -39,6 +39,13 @@ class GCPallasSweep:
 
         return ops.gc_gains(fn.sim_ground, state.selmask, fn.total, fn.lam)
 
+    def partial_sweep(
+        self, fn: "GraphCut", state: GCState, idx: jax.Array
+    ) -> jax.Array:
+        from repro.kernels import ops
+
+        return ops.gc_gains_at(fn.sim_ground, state.selmask, fn.total, fn.lam, idx)
+
 
 @pytree_dataclass(meta_fields=("n", "use_kernel"))
 class GraphCut(SetFunction):
@@ -46,14 +53,16 @@ class GraphCut(SetFunction):
     total: jax.Array  # (n,) sum_{i in U} S_ij  (modular representation term)
     lam: jax.Array  # scalar trade-off
     n: int
-    use_kernel: bool = False  # route full sweeps through the Pallas kernel
+    # True/False routes sweeps through the Pallas kernel / XLA; None defers
+    # to the trace-time choose_backend heuristic (backends.py)
+    use_kernel: bool | None = False
 
     @staticmethod
     def from_kernel(
         sim_ground: jax.Array,
         lam: float = 0.5,
         sim_rep: jax.Array | None = None,
-        use_kernel: bool = False,
+        use_kernel: bool | None = False,
     ) -> "GraphCut":
         """``sim_rep`` is the (|U|, n) represented-set kernel; defaults to the
         ground kernel itself (U == V), matching the paper's default."""
@@ -92,7 +101,9 @@ class GraphCut(SetFunction):
         )
 
     def gain_backend(self) -> GCPallasSweep | None:
-        return GCPallasSweep() if self.use_kernel else None
+        from repro.core.optimizers.backends import kernel_enabled
+
+        return GCPallasSweep() if kernel_enabled(self.use_kernel, self.n) else None
 
     def evaluate(self, mask: jax.Array) -> jax.Array:
         m = mask.astype(self.sim_ground.dtype)

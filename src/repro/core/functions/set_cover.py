@@ -86,7 +86,9 @@ class SetCover(SetFunction):
         return (new * self.w[None, :]).sum(axis=-1)
 
     def gain_backend(self) -> SCPallasSweep | None:
-        return SCPallasSweep() if self.use_kernel else None
+        from repro.core.optimizers.backends import kernel_enabled
+
+        return SCPallasSweep() if kernel_enabled(self.use_kernel, self.n) else None
 
     def update(self, state: SCState, j: jax.Array) -> SCState:
         return SCState(covered=jnp.maximum(state.covered, self.cover[j]))
@@ -154,7 +156,9 @@ class ProbabilisticSetCover(SetFunction):
         return (self.probs[idxs] * (self.w * state.miss)[None, :]).sum(axis=-1)
 
     def gain_backend(self) -> PSCPallasSweep | None:
-        return PSCPallasSweep() if self.use_kernel else None
+        from repro.core.optimizers.backends import kernel_enabled
+
+        return PSCPallasSweep() if kernel_enabled(self.use_kernel, self.n) else None
 
     def update(self, state: PSCState, j: jax.Array) -> PSCState:
         return PSCState(miss=state.miss * jnp.exp(self.log_miss[j]))

@@ -126,6 +126,14 @@ class FLCG(SetFunction):
         )
         return (new - cur[:, None]).sum(axis=0)
 
+    def gains_at(self, state: FLState, idxs) -> jax.Array:
+        cur = jnp.maximum(state.curmax - self.pmax, 0.0)
+        cols = self.sim[:, idxs]
+        new = jnp.maximum(
+            jnp.maximum(state.curmax[:, None], cols) - self.pmax[:, None], 0.0
+        )
+        return (new - cur[:, None]).sum(axis=0)
+
     def update(self, state: FLState, j) -> FLState:
         return FLState(
             curmax=jnp.maximum(state.curmax, self.sim[:, j]), n_rows=state.n_rows
@@ -174,6 +182,16 @@ class FLCMI(SetFunction):
             jnp.minimum(
                 jnp.maximum(state.curmax[:, None], self.sim), self.qmax[:, None]
             )
+            - self.pmax[:, None],
+            0.0,
+        )
+        return (new - cur[:, None]).sum(axis=0)
+
+    def gains_at(self, state: FLState, idxs) -> jax.Array:
+        cur = self._contrib(state.curmax)
+        cols = self.sim[:, idxs]
+        new = jnp.maximum(
+            jnp.minimum(jnp.maximum(state.curmax[:, None], cols), self.qmax[:, None])
             - self.pmax[:, None],
             0.0,
         )

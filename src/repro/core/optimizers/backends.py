@@ -5,28 +5,40 @@ greedy submodular maximization spends its time (paper §5, Table 3; apricot
 reports the same).  This module decouples *which implementation computes the
 sweep* from *which optimizer consumes it*:
 
-- :class:`GainBackend` is the protocol: ``full_sweep(fn, state) -> (n,)``.
+- :class:`GainBackend` is the protocol: ``full_sweep(fn, state) -> (n,)``
+  plus the optional ``partial_sweep(fn, state, idx) -> (k,)`` gathered form.
 - Each :class:`~repro.core.functions.base.SetFunction` may advertise a fused
   implementation by overriding ``gain_backend()`` (e.g. the Pallas kernels
   behind FacilityLocation / GraphCut / FeatureBased).
 - :func:`register_gain_backend` lets callers plug in a backend for a function
   class from the outside (profilers, alternative accelerators) without
   touching the function's code; registry entries win over ``gain_backend()``.
-- Optimizers call :func:`full_sweep`, which resolves at trace time (backend
-  choice rides on static meta fields, so it is jit/vmap-transparent) and
-  falls back to the function's plain ``gains()`` XLA path.
+- Optimizers call :func:`full_sweep` / :func:`partial_sweep`, which resolve
+  at trace time (backend choice rides on static meta fields, so it is
+  jit/vmap-transparent) and fall back to the function's plain ``gains()`` /
+  ``gains_at()`` XLA paths.
 
-Partial sweeps (``gains_at``) stay on the function: they are gather-shaped,
-not kernel-shaped.
+Partial sweeps are the contract behind the bucketed lazy engines
+(``optimizers/greedy.py`` / ``optimizers/batched.py``): each lazy step
+re-evaluates only the top-K stalest upper bounds through ONE gathered
+``partial_sweep`` call, so per-step work is O(K * stat) instead of
+O(n * stat).  Every family has a jnp reference implementation (its
+``gains_at``); the Pallas families additionally expose fused gather-sweep
+kernels (``kernels/*_gains.py`` masked-subset entry points) wired through
+their backend's ``partial_sweep``.
 
 Shard-local reuse contract (distributed batched serving): backends must be
 pure functions of the ``fn`` pytree they are handed — no hidden global-shape
 assumptions — because ``optimizers/distributed.py`` applies them to
 *candidate-sliced local instances* inside shard_map + vmap.  A backend that
-honors this serves single queries, vmap-ed waves, and per-shard sweeps from
-the one implementation (the Pallas FL/FB sweeps do; GraphCut's stateless
-full-matrix sweep reads the global diagonal, so its shard rule uses the
-memoized form instead — see ``GCShardRule``).
+honors this serves single queries, vmap-ed waves, and per-shard sweeps (full
+AND gathered) from the one implementation (the Pallas FL/FB sweeps do;
+GraphCut's stateless full-matrix sweep reads the global diagonal, so its
+shard rule uses the memoized form instead — see ``GCShardRule``).
+
+Backend *choice* is also pluggable: functions built with ``use_kernel=None``
+defer to :func:`choose_backend`, a trace-time decision table over
+(ground-set size, budget, device) — an explicit True/False flag always wins.
 """
 from __future__ import annotations
 
@@ -37,7 +49,7 @@ import jax
 
 @runtime_checkable
 class GainBackend(Protocol):
-    """A fused full-sweep implementation for one function family."""
+    """A fused sweep implementation for one function family."""
 
     name: str
 
@@ -45,14 +57,23 @@ class GainBackend(Protocol):
         """Marginal gains f(j | A) for every ground element j, shape (n,)."""
         ...
 
+    # Optional protocol extension (resolved via getattr, so plain full-sweep
+    # backends keep working):
+    #
+    # def partial_sweep(self, fn, state, idx) -> jax.Array:
+    #     """Gains only for the gathered candidate subset ``idx`` (k,)."""
+
 
 class XlaSweep:
-    """Default backend: the function's own vectorized ``gains()``."""
+    """Default backend: the function's own vectorized ``gains()``/``gains_at``."""
 
     name = "xla"
 
     def full_sweep(self, fn, state) -> jax.Array:
         return fn.gains(state)
+
+    def partial_sweep(self, fn, state, idx) -> jax.Array:
+        return fn.gains_at(state, idx)
 
 
 _XLA = XlaSweep()
@@ -70,7 +91,7 @@ def register_gain_backend(
 
 
 def resolve_backend(fn) -> GainBackend:
-    """The backend serving ``fn``'s full sweeps: registry entry, else the
+    """The backend serving ``fn``'s sweeps: registry entry, else the
     function's own ``gain_backend()``, else the XLA fallback."""
     for klass in type(fn).__mro__:
         factory = _REGISTRY.get(klass)
@@ -91,8 +112,80 @@ def full_sweep(fn, state) -> jax.Array:
     return resolve_backend(fn).full_sweep(fn, state)
 
 
+def partial_sweep(fn, state, idx) -> jax.Array:
+    """Marginal gains for the gathered candidate subset ``idx`` only.
+
+    Routed through the resolved backend's ``partial_sweep`` when it has one
+    (the fused gather-sweep Pallas kernels), else the function's ``gains_at``
+    jnp reference path.  Shape follows ``idx``; entries must be valid
+    candidate indices (the kernel entry points additionally treat idx < 0 as
+    padding and return NEG_INF there)."""
+    backend = resolve_backend(fn)
+    impl = getattr(backend, "partial_sweep", None)
+    if impl is None:
+        return fn.gains_at(state, idx)
+    return impl(fn, state, idx)
+
+
 def backend_name(fn) -> str:
     """Name of the backend serving ``fn``'s full sweeps ("xla", "pallas-fl",
     ...).  Serving uses this to report which implementation answered a wave;
     the README's function x backend matrix is generated from the same hook."""
     return getattr(resolve_backend(fn), "name", "xla")
+
+
+# ---------------------------------------------------------------------------
+# Trace-time backend choice for use_kernel=None ("auto").
+# ---------------------------------------------------------------------------
+
+# Below this ground-set size the fused kernels lose to plain XLA: the sweep
+# fits in cache and kernel launch / grid overhead dominates (interpret-mode
+# CPU numbers in benchmarks/; compile-mode TPU validation is a ROADMAP item).
+KERNEL_MIN_N = 4096
+
+# A stateless O(n^2)-streamed sweep (GraphCut / Disparity style) recomputes
+# the full matrix every step; past this many selection steps the memoized
+# O(n)-per-step XLA form wins even on TPU.  NOTE: the built-in gain_backend()
+# hooks resolve with budget=None — a function object does not know the budget
+# it will be maximized under — so this leg only fires for callers that do
+# know it: registry factories plugged in via register_gain_backend, or
+# schedulers resolving a (fn, budget) pair before dispatch.
+KERNEL_MAX_BUDGET_FRACTION = 0.25
+
+
+def choose_backend(
+    n: int, budget: int | None = None, device: str | None = None
+) -> str:
+    """Decision table: "kernel" or "xla" for a function built with
+    ``use_kernel=None``.
+
+    - non-TPU devices (CPU interpret mode, GPU) -> "xla": the Pallas sweeps
+      only pay off compiled on TPU;
+    - small ground sets (n < KERNEL_MIN_N) -> "xla": launch overhead
+      dominates a cache-resident sweep;
+    - very large budgets relative to n -> "xla": the stateless streamed
+      kernels recompute O(n^2) per step, so long greedy loops favor the
+      memoized XLA path (pass budget=None for memoized-state kernels).
+
+    Static inputs only — the choice is resolved at trace time and is part of
+    the jit cache key via the function's meta fields.
+    """
+    device = device if device is not None else jax.default_backend()
+    if device != "tpu":
+        return "xla"
+    if n < KERNEL_MIN_N:
+        return "xla"
+    if budget is not None and budget > KERNEL_MAX_BUDGET_FRACTION * n:
+        return "xla"
+    return "kernel"
+
+
+def kernel_enabled(
+    use_kernel: bool | None, n: int, budget: int | None = None
+) -> bool:
+    """Resolve a family's ``use_kernel`` flag: an explicit True/False always
+    wins; None defers to :func:`choose_backend` (manual flag beats heuristic).
+    """
+    if use_kernel is None:
+        return choose_backend(n, budget) == "kernel"
+    return bool(use_kernel)

@@ -23,11 +23,17 @@ function family's fused Pallas sweep is used inside the batch too.
 Passing ``mesh=`` (a 2-D jax Mesh) promotes the engine to the **distributed
 batched** form: the batch axis shards over ``batch_axis`` and every
 instance's candidate axis over ``data_axis``, running the shard_map
-partition-greedy sweep from ``optimizers/distributed.py`` under a vmap over
-the local batch slice.  Results keep the same bit-identical contract
-(``tests/test_serving.py`` pins it on a >=4-device host mesh); only
-"NaiveGreedy" is supported sharded — under vmap/SPMD the lazy screen's
-branches both execute, so it cannot win there (see ROADMAP).
+engines from ``optimizers/distributed.py`` — the partition-greedy sweep for
+"NaiveGreedy" and the bucketed lazy engine (gathered-subset partial sweeps
++ merged stale-bound prefixes) for "LazyGreedy".  Results keep the same
+bit-identical contract (``tests/test_serving.py`` pins it on a >=4-device
+host mesh).
+
+LazyGreedy's eval savings survive batching because its screen levels branch
+on *scalar* ``lax.cond`` predicates shared by the wave, instead of the old
+per-instance ``lax.cond`` that vmap lowers to select (both branches
+executing, i.e. a full sweep every step — the ROADMAP "Lazy batched engine
+efficiency" item this module closed).
 """
 from __future__ import annotations
 
@@ -38,7 +44,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.optimizers.greedy import GreedyResult, _lazy_impl, _naive_impl
+from repro.core.optimizers.greedy import (
+    GreedyResult,
+    _lazy_bucketed_impl,
+    _naive_impl,
+)
 
 
 def stack_functions(fns: Sequence) -> object:
@@ -82,17 +92,14 @@ def _batched_naive(fns, max_budget, budgets, valid, stop_if_zero, stop_if_negati
 def _batched_lazy(
     fns, max_budget, budgets, valid, screen_k, stop_if_zero, stop_if_negative
 ):
-    return jax.vmap(
-        lambda fn, b, v: _lazy_impl(
-            fn,
-            max_budget,
-            screen_k,
-            stop_if_zero,
-            stop_if_negative,
-            budget_i=b,
-            valid=v,
-        )
-    )(fns, budgets, valid)
+    # the bucketed lazy sweep IS the sequential lazy_greedy (B=1) run with an
+    # explicit batch dimension, so bit-identity holds by construction — and,
+    # unlike the old vmap(_lazy_impl) form, its screen levels gate on SCALAR
+    # lax.cond predicates, so an all-accept step costs O(B * screen_k)
+    # gathered evals instead of the O(B * n) select-lowered full sweep
+    return _lazy_bucketed_impl(
+        fns, max_budget, budgets, valid, screen_k, stop_if_zero, stop_if_negative
+    )
 
 
 class BatchedEngine:
@@ -189,26 +196,42 @@ class BatchedEngine:
         stop_zero = kwargs.get("stopIfZeroGain", True)
         stop_neg = kwargs.get("stopIfNegativeGain", True)
         if self.mesh is not None:
-            if optimizer != "NaiveGreedy":
-                raise ValueError(
-                    f"sharded BatchedEngine supports only 'NaiveGreedy', got "
-                    f"{optimizer!r} (the lazy screen's branches both execute "
-                    "under vmap/SPMD, so it cannot help there)"
-                )
-            from repro.core.optimizers.distributed import sharded_batched_greedy
+            if optimizer == "NaiveGreedy":
+                from repro.core.optimizers.distributed import sharded_batched_greedy
 
-            order, gains, evals, value = sharded_batched_greedy(
-                self.rule,
-                self.parts,
-                b_arr,
-                self.valid,
-                max_budget=max_budget,
-                mesh=self.mesh,
-                batch_axes=(self.batch_axis,),
-                col_axes=(self.data_axis,),
-                stop_if_zero=stop_zero,
-                stop_if_negative=stop_neg,
-            )
+                order, gains, evals, value = sharded_batched_greedy(
+                    self.rule,
+                    self.parts,
+                    b_arr,
+                    self.valid,
+                    max_budget=max_budget,
+                    mesh=self.mesh,
+                    batch_axes=(self.batch_axis,),
+                    col_axes=(self.data_axis,),
+                    stop_if_zero=stop_zero,
+                    stop_if_negative=stop_neg,
+                )
+            elif optimizer == "LazyGreedy":
+                from repro.core.optimizers.distributed import sharded_batched_lazy
+
+                order, gains, evals, value = sharded_batched_lazy(
+                    self.rule,
+                    self.parts,
+                    b_arr,
+                    self.valid,
+                    max_budget=max_budget,
+                    mesh=self.mesh,
+                    batch_axes=(self.batch_axis,),
+                    col_axes=(self.data_axis,),
+                    screen_k=int(kwargs.get("screen_k", 8)),
+                    stop_if_zero=stop_zero,
+                    stop_if_negative=stop_neg,
+                )
+            else:
+                raise ValueError(
+                    f"unknown optimizer {optimizer!r}; the sharded engine "
+                    "supports 'NaiveGreedy' and 'LazyGreedy'"
+                )
             res = GreedyResult(order=order, gains=gains, n_evals=evals, value=value)
         elif optimizer == "NaiveGreedy":
             res = _batched_naive(
@@ -262,7 +285,7 @@ def batched_maximize(
     Args:
       fns: B same-family SetFunction instances (identical static meta).
       budget: shared int or per-instance sequence of ints.
-      optimizer: "NaiveGreedy" or "LazyGreedy" ("NaiveGreedy" only with mesh).
+      optimizer: "NaiveGreedy" or "LazyGreedy" (both also run sharded).
       valid: optional (B, n) bool — False marks padded candidates.
       return_result: True -> list of per-instance :class:`GreedyResult`
         (order/gains sliced to that instance's budget), False -> list of

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common import NEG_INF, pytree_dataclass
-from repro.core.optimizers.backends import full_sweep
+from repro.core.optimizers.backends import full_sweep, partial_sweep
 
 
 @pytree_dataclass
@@ -105,71 +105,150 @@ def naive_greedy(
     return _naive_impl(fn, budget, stop_if_zero, stop_if_negative)
 
 
-def _lazy_impl(
-    fn,
-    budget: int,
+def _screen_levels(n: int, screen_k: int) -> tuple[tuple[int, int], ...]:
+    """Static (lo, hi) slices of the per-step stale-bound sort: cumulative
+    screen widths screen_k, 2*screen_k, 4*screen_k, ..., capped at n.
+
+    The last level always reaches n, so every step resolves within the
+    schedule and each candidate is evaluated at most once per step — the
+    per-step eval cost is <= n (a naive sweep) with equality only on a full
+    bound-screen miss."""
+    levels, lo = [], 0
+    hi = min(max(int(screen_k), 1), n)
+    while True:
+        levels.append((lo, hi))
+        if hi >= n:
+            return tuple(levels)
+        lo, hi = hi, min(2 * hi, n)
+
+
+def _where_rows(pred, a, b):
+    """Per-row select on (B, ...) pytrees: ``pred`` is (B,)."""
+    return jax.tree.map(
+        lambda x, y: jnp.where(pred.reshape(pred.shape + (1,) * (x.ndim - 1)), x, y),
+        a,
+        b,
+    )
+
+
+def _lazy_bucketed_impl(
+    fns,
+    max_budget: int,
+    budgets,
+    valid,
     screen_k: int,
     stop_if_zero: bool,
     stop_if_negative: bool,
-    budget_i=None,
-    valid=None,
 ) -> GreedyResult:
-    """Single implementation behind :func:`lazy_greedy` AND the batched
-    engine (see :func:`_naive_impl` for the budget_i / valid contract)."""
-    n = fn.n
-    k = min(screen_k, n)
-    state = fn.init_state()
-    ub0 = full_sweep(fn, state)
+    """Bucketed lazy greedy over a B-stacked batch — the ONE implementation
+    behind sequential :func:`lazy_greedy` (B = 1) and the batched engine's
+    LazyGreedy path, so their ids/gains/``n_evals`` agree bit-for-bit by
+    construction.
+
+    Per step, candidates are sorted by stale upper bound (descending, ties
+    broken by lowest index — exactly ``lax.top_k``'s order) and evaluated in
+    doubling *levels* of that order (``_screen_levels``): every wave member
+    re-evaluates its top-K stalest bounds through ONE gathered
+    ``partial_sweep`` call, and a level only executes if some instance is
+    still unresolved — a *scalar* ``lax.cond`` predicate, which is what the
+    old vmap-of-``lax.cond`` formulation could not give us (under vmap cond
+    lowers to select, so both branches ran and batched LazyGreedy paid the
+    full O(B*n) sweep every step; see ROADMAP "Lazy batched engine
+    efficiency").  An instance accepts once the best true gain seen beats
+    every remaining stale bound; the last level spans all n, so a full miss
+    degenerates to exactly one evaluation per candidate (cost n, all bounds
+    refreshed) — per-step cost never exceeds the naive sweep.
+
+    The winner is the first-index argmax over evaluated true gains
+    (unevaluated entries held at NEG_INF), matching naive_greedy's tie rule.
+    ``n_evals`` counts, per instance, the widths of the levels that instance
+    was still unresolved for (plus the initial bound sweep) — instances that
+    accept early stop accruing even when the wave digs deeper for others.
+    """
+    B, n = valid.shape
+    levels = _screen_levels(n, screen_k)
+    rows = jnp.arange(B)
+    state0 = jax.vmap(lambda f: f.init_state())(fns)
+    ub0 = jax.vmap(full_sweep)(fns, state0)
 
     def body(i, carry):
         state, selected, ub, order, gains, evals, done = carry
-        blocked = selected if valid is None else selected | ~valid
+        blocked = selected | ~valid
         ubm = jnp.where(blocked, NEG_INF, ub)
-        top_vals, top_idx = jax.lax.top_k(ubm, k)
-        # mask screened gains of blocked entries: when fewer than k eligible
-        # candidates remain, top_k spills into blocked indices whose true
-        # gain may be positive — without this they could be (re)selected
-        true_g = jnp.where(blocked[top_idx], NEG_INF, fn.gains_at(state, top_idx))
-        ub2 = ubm.at[top_idx].set(true_g)
-        best_i = jnp.argmax(true_g)
-        j_screen, g_screen = top_idx[best_i], true_g[best_i]
-        rest_max = jnp.max(ub2.at[top_idx].set(NEG_INF))
-        ok = g_screen >= rest_max - 1e-6
+        # descending stale-bound order, ties by lowest index (lax.sort over
+        # (-value, index) — identical on one device and in the sharded
+        # engine's gathered merge, unlike raw top_k whose cross-shard merge
+        # would reorder equal bounds)
+        iota = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (B, n))
+        neg_sv, si = jax.lax.sort((-ubm, iota), dimension=-1, num_keys=2)
+        sv = -neg_sv
 
-        def fallback_sweep(_):
-            g_all = jnp.where(blocked, NEG_INF, full_sweep(fn, state))
-            j = jnp.argmax(g_all)
-            return j, g_all[j], g_all, jnp.int32(n)
+        def level(lo, hi, c):
+            resolved, geval, evaluated, cost = c
+            idx = jax.lax.slice_in_dim(si, lo, hi, axis=1)  # (B, hi-lo)
+            g = jax.vmap(partial_sweep)(fns, state, idx)
+            blk = jnp.take_along_axis(blocked, idx, axis=1)
+            g = jnp.where(blk, NEG_INF, g.astype(geval.dtype))
+            live = ~resolved  # instances this level still works for
+            geval = jnp.where(
+                live[:, None], geval.at[rows[:, None], idx].set(g), geval
+            )
+            evaluated = jnp.where(
+                live[:, None], evaluated.at[rows[:, None], idx].set(True), evaluated
+            )
+            cost = cost + jnp.where(live, hi - lo, 0)
+            best = jnp.max(geval, axis=1)
+            rest = (
+                sv[:, hi] if hi < n else jnp.full((B,), NEG_INF, sv.dtype)
+            )  # largest stale bound not yet evaluated
+            resolved = resolved | (best >= rest - 1e-6)
+            return resolved, geval, evaluated, cost
 
-        def accept(_):
-            return j_screen, g_screen, ub2, jnp.int32(k)
+        c = (
+            jnp.zeros((B,), bool),
+            jnp.full((B, n), NEG_INF, ubm.dtype),
+            jnp.zeros((B, n), bool),
+            jnp.zeros((B,), jnp.int32),
+        )
+        for lo, hi in levels:
+            # scalar predicate: the whole wave skips the level once everyone
+            # has resolved (level 0 always runs)
+            c = jax.lax.cond(
+                jnp.all(c[0]),
+                lambda c: c,
+                partial(level, lo, hi),
+                c,
+            )
+        _, geval, evaluated, cost = c
 
-        j, gj, ub_new, cost = jax.lax.cond(ok, accept, fallback_sweep, None)
-        past = jnp.zeros((), bool) if budget_i is None else i >= budget_i
+        j = jnp.argmax(geval, axis=1)  # first-index tie-break, like naive
+        gj = jnp.take_along_axis(geval, j[:, None], axis=1)[:, 0]
+        past = i >= budgets
         stop = done | past | _should_stop(gj, stop_if_zero, stop_if_negative)
         take = ~stop
-        new_state = fn.update(state, j)
-        state = _tree_where(take, new_state, state)
-        selected = selected.at[j].set(selected[j] | take)
-        blocked = selected if valid is None else selected | ~valid
-        ub = jnp.where(blocked, NEG_INF, ub_new)
-        order = order.at[i].set(jnp.where(take, j, -1))
-        gains = gains.at[i].set(jnp.where(take, gj, 0.0))
+        new_state = jax.vmap(lambda f, s, jj: f.update(s, jj))(fns, state, j)
+        state = _where_rows(take, new_state, state)
+        selected = selected.at[rows, j].set(selected[rows, j] | take)
+        ub = jnp.where(evaluated, geval, ubm)  # refreshed bounds stay valid
+        order = order.at[:, i].set(jnp.where(take, j, -1))
+        gains = gains.at[:, i].set(jnp.where(take, gj, 0.0))
         evals = evals + jnp.where(done | past, 0, cost)
         return state, selected, ub, order, gains, evals, stop
 
     carry = (
-        state,
-        jnp.zeros((n,), bool),
+        state0,
+        jnp.zeros((B, n), bool),
         ub0,
-        jnp.full((budget,), -1, jnp.int32),
-        jnp.zeros((budget,), jnp.float32),
-        jnp.asarray(n, jnp.int32),  # the initial bound sweep
-        jnp.zeros((), bool),
+        jnp.full((B, max_budget), -1, jnp.int32),
+        jnp.zeros((B, max_budget), jnp.float32),
+        jnp.full((B,), n, jnp.int32),  # the initial bound sweep
+        jnp.zeros((B,), bool),
     )
-    out = jax.lax.fori_loop(0, budget, body, carry)
+    out = jax.lax.fori_loop(0, max_budget, body, carry)
     state, selected, ub, order, gains, evals, _ = out
-    return GreedyResult(order=order, gains=gains, n_evals=evals, value=gains.sum())
+    return GreedyResult(
+        order=order, gains=gains, n_evals=evals, value=gains.sum(axis=1)
+    )
 
 
 @partial(jax.jit, static_argnums=(1, 2, 3, 4))
@@ -185,13 +264,34 @@ def lazy_greedy(
 
     A dense vector ``ub`` of stale upper bounds replaces the priority queue
     (valid by submodularity: gains only shrink as A grows).  Each step
-    re-evaluates the true gain for only the ``screen_k`` candidates with the
-    largest stale bounds; the winner is accepted iff it beats every other
-    stale bound, otherwise the step falls back to a full sweep (which also
-    refreshes all bounds).  Identical output to naive_greedy, far fewer gain
-    evaluations on peaked gain distributions.
+    re-evaluates true gains for the candidates with the largest stale bounds
+    in doubling screen levels (screen_k, 2*screen_k, ... — see
+    ``_lazy_bucketed_impl``), accepting as soon as the best evaluated gain
+    beats every remaining stale bound; a full miss degenerates to one
+    evaluation per candidate, so a step never costs more than a naive sweep.
+    Identical output to naive_greedy, far fewer gain evaluations on peaked
+    gain distributions.
+
+    This is literally the B = 1 instantiation of the bucketed batched lazy
+    engine, which is what makes batched/served LazyGreedy waves bit-identical
+    to this function (ids, gains AND ``n_evals``).
     """
-    return _lazy_impl(fn, budget, screen_k, stop_if_zero, stop_if_negative)
+    fns = jax.tree.map(lambda x: jnp.asarray(x)[None], fn)
+    res = _lazy_bucketed_impl(
+        fns,
+        budget,
+        jnp.full((1,), budget, jnp.int32),
+        jnp.ones((1, fn.n), bool),
+        screen_k,
+        stop_if_zero,
+        stop_if_negative,
+    )
+    return GreedyResult(
+        order=res.order[0],
+        gains=res.gains[0],
+        n_evals=res.n_evals[0],
+        value=res.value[0],
+    )
 
 
 def _sample_unselected(key, selected, size):
@@ -226,7 +326,7 @@ def stochastic_greedy(
         state, selected, order, gains, evals, done = carry
         subkey = jax.random.fold_in(key, i)
         cand = _sample_unselected(subkey, selected, s)
-        g = fn.gains_at(state, cand)
+        g = partial_sweep(fn, state, cand)
         # guard: sampled entries that are actually selected (when fewer than s
         # unselected remain) are masked out
         g = jnp.where(selected[cand], NEG_INF, g)
@@ -286,7 +386,7 @@ def lazier_than_lazy_greedy(
         ub_cand = jnp.where(selected[cand], NEG_INF, ub[cand])
         top_vals, top_pos = jax.lax.top_k(ub_cand, k)
         top_idx = cand[top_pos]
-        true_g = fn.gains_at(state, top_idx)
+        true_g = partial_sweep(fn, state, top_idx)
         true_g = jnp.where(selected[top_idx], NEG_INF, true_g)
         bi = jnp.argmax(true_g)
         j_screen, g_screen = top_idx[bi], true_g[bi]
@@ -294,7 +394,7 @@ def lazier_than_lazy_greedy(
         ok = g_screen >= rest_max - 1e-6
 
         def sample_sweep(_):
-            g = fn.gains_at(state, cand)
+            g = partial_sweep(fn, state, cand)
             g = jnp.where(selected[cand], NEG_INF, g)
             b = jnp.argmax(g)
             return cand[b], g[b], g, jnp.int32(s)

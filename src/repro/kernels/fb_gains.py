@@ -12,6 +12,13 @@ row-reduce in-register on the VPU, accumulating the F strips into a (1, BN)
 output block.
 
 grid = (n/BN, F/BF), F innermost; the concave name is a static kernel param.
+
+``fb_gains_at_pallas`` is the masked-subset entry point (the lazy engines'
+``partial_sweep`` contract): an XLA gather of the K requested feature rows
+feeds the same fused add -> concave -> weighted-reduce tile stream, sized to
+the subset.  Per-row F-strip accumulation is independent of the other rows,
+so subset values are bit-identical to the full sweep's at the same indices.
+Slots with idx < 0 are padding and return NEG_INF.
 """
 from __future__ import annotations
 
@@ -21,7 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.common import get_concave
+from repro.common import NEG_INF, get_concave
 
 BN = 256  # candidates per tile
 BF = 256  # features per tile
@@ -73,3 +80,25 @@ def fb_gains_pallas(
         interpret=interpret,
     )(xp, ap, wp)
     return out[0, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("concave", "interpret"))
+def fb_gains_at_pallas(
+    feats: jax.Array,
+    acc: jax.Array,
+    w: jax.Array,
+    idx: jax.Array,
+    concave: str = "sqrt",
+    interpret: bool = False,
+) -> jax.Array:
+    """Masked-subset sweep: feats (n, F), acc (F,), w (F,), idx (k,) int32 ->
+    gains (k,) fp32; slots with idx < 0 are padding and return NEG_INF."""
+    from repro.kernels.fl_gains import _subset_tile
+
+    (k,) = idx.shape
+    safe = jnp.clip(idx, 0, feats.shape[0] - 1)
+    rows = jnp.take(feats, safe, axis=0)  # (k, F) gather feeding the fused sweep
+    out = fb_gains_pallas(
+        rows, acc, w, concave=concave, interpret=interpret, bn=_subset_tile(k, BN)
+    )
+    return jnp.where(idx >= 0, out, NEG_INF)

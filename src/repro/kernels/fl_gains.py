@@ -10,6 +10,14 @@ roofline of S itself.
 
 grid = (N/BN, U/BU) with U innermost; the (1, BN) output block is revisited
 across U steps and used as the fp32 accumulator.
+
+``fl_gains_at_pallas`` is the masked-subset entry point (the lazy engines'
+``partial_sweep`` contract): an XLA gather of the K requested columns feeds
+the SAME fused subtract->relu->reduce tile stream, sized to the subset, so a
+bucketed lazy step touches O(U * K) of S instead of O(U * N).  Slots with
+idx < 0 are padding and return NEG_INF.  Because each output column's
+accumulation order over U tiles is independent of the other columns, the
+subset values are bit-identical to the full sweep's at the same indices.
 """
 from __future__ import annotations
 
@@ -18,6 +26,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.common import NEG_INF
 
 BU = 256  # represented-set rows per tile
 BN = 512  # candidates per tile
@@ -68,3 +78,29 @@ def fl_gains_pallas(
         interpret=interpret,
     )(sp, cmp_)
     return out[0, :n]
+
+
+def _subset_tile(k: int, cap: int) -> int:
+    """Candidate-tile width for a K-subset sweep: one lane-width-aligned tile
+    when the subset is small, the full-sweep tiling otherwise."""
+    b = 128
+    while b < min(k, cap):
+        b *= 2
+    return min(b, cap)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bu"))
+def fl_gains_at_pallas(
+    sim: jax.Array,
+    curmax: jax.Array,
+    idx: jax.Array,
+    interpret: bool = False,
+    bu: int = BU,
+) -> jax.Array:
+    """Masked-subset sweep: sim (u, n), curmax (u,), idx (k,) int32 ->
+    gains (k,) fp32; slots with idx < 0 are padding and return NEG_INF."""
+    (k,) = idx.shape
+    safe = jnp.clip(idx, 0, sim.shape[1] - 1)
+    cols = jnp.take(sim, safe, axis=1)  # (u, k) gather feeding the fused sweep
+    out = fl_gains_pallas(cols, curmax, interpret=interpret, bu=bu, bn=_subset_tile(k, BN))
+    return jnp.where(idx >= 0, out, NEG_INF)

@@ -10,9 +10,9 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.disp_gains import dmin_gains_pallas, dsum_gains_pallas
-from repro.kernels.fb_gains import fb_gains_pallas
-from repro.kernels.fl_gains import fl_gains_pallas
-from repro.kernels.gc_gains import gc_gains_pallas
+from repro.kernels.fb_gains import fb_gains_at_pallas, fb_gains_pallas
+from repro.kernels.fl_gains import fl_gains_at_pallas, fl_gains_pallas
+from repro.kernels.gc_gains import gc_gains_at_pallas, gc_gains_pallas
 from repro.kernels.sc_gains import psc_gains_pallas, sc_gains_pallas
 from repro.kernels.similarity_kernel import similarity_pallas
 
@@ -31,12 +31,26 @@ def fl_gains(sim, curmax):
     return fl_gains_pallas(sim, curmax, interpret=_interpret())
 
 
+def fl_gains_at(sim, curmax, idx):
+    return fl_gains_at_pallas(sim, curmax, idx, interpret=_interpret())
+
+
 def gc_gains(sim, selmask, total, lam):
     return gc_gains_pallas(sim, selmask, total, lam, interpret=_interpret())
 
 
+def gc_gains_at(sim, selmask, total, lam, idx):
+    return gc_gains_at_pallas(sim, selmask, total, lam, idx, interpret=_interpret())
+
+
 def fb_gains(feats, acc, w, concave: str = "sqrt"):
     return fb_gains_pallas(feats, acc, w, concave=concave, interpret=_interpret())
+
+
+def fb_gains_at(feats, acc, w, idx, concave: str = "sqrt"):
+    return fb_gains_at_pallas(
+        feats, acc, w, idx, concave=concave, interpret=_interpret()
+    )
 
 
 def sc_gains(cover, covered, w):
@@ -60,6 +74,9 @@ similarity_ref = ref.similarity_ref
 fl_gains_ref = ref.fl_gains_ref
 gc_gains_ref = ref.gc_gains_ref
 fb_gains_ref = ref.fb_gains_ref
+fl_gains_at_ref = ref.fl_gains_at_ref
+gc_gains_at_ref = ref.gc_gains_at_ref
+fb_gains_at_ref = ref.fb_gains_at_ref
 sc_gains_ref = ref.sc_gains_ref
 psc_gains_ref = ref.psc_gains_ref
 dsum_gains_ref = ref.dsum_gains_ref

@@ -116,6 +116,30 @@ def dmin_gains_ref(
     return jnp.minimum(surrogate, big) - jnp.asarray(curmin, jnp.float32)
 
 
+def _subset(full: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather a full-sweep oracle at ``idx``; idx < 0 slots return NEG_INF
+    (the masked-subset entry-point contract)."""
+    from repro.common import NEG_INF
+
+    safe = jnp.clip(idx, 0, full.shape[0] - 1)
+    return jnp.where(idx >= 0, full[safe], NEG_INF)
+
+
+def fl_gains_at_ref(sim, curmax, idx) -> jax.Array:
+    """Subset oracle: ``fl_gains_ref`` gathered at ``idx`` (k,) -> (k,)."""
+    return _subset(fl_gains_ref(sim, curmax), idx)
+
+
+def gc_gains_at_ref(sim, selmask, total, lam, idx) -> jax.Array:
+    """Subset oracle: ``gc_gains_ref`` gathered at ``idx`` (k,) -> (k,)."""
+    return _subset(gc_gains_ref(sim, selmask, total, lam), idx)
+
+
+def fb_gains_at_ref(feats, acc, w, idx, concave: str = "sqrt") -> jax.Array:
+    """Subset oracle: ``fb_gains_ref`` gathered at ``idx`` (k,) -> (k,)."""
+    return _subset(fb_gains_ref(feats, acc, w, concave), idx)
+
+
 def fl_gains_update_ref(
     sim: jax.Array, curmax: jax.Array, winner: jax.Array
 ) -> tuple[jax.Array, jax.Array]:

@@ -143,17 +143,34 @@ class SelectionServer:
         stopIfNegativeGain / screen_k (LazyGreedy only) — anything else
         raises, so a misspelled flag cannot silently serve a request under
         the wrong stopping semantics.
+
+        ``optimizer`` may be "NaiveGreedy" or "LazyGreedy", on and off mesh
+        (sharded lazy waves run the bucketed engine in
+        ``optimizers/distributed.py``).
+
+        Dispersion default: DisparitySum / DisparityMin have an empty-set
+        gain of exactly 0, so the library-wide ``stopIfZeroGain=True``
+        default would silently return an EMPTY selection for every such
+        request.  Unless the caller passes ``stopIfZeroGain`` explicitly,
+        it defaults to False for these two families (an explicit flag
+        always wins).
         """
+        from repro.core.functions.disparity import DisparityMin, DisparitySum
         from repro.launch.coalesce import resolve_padder
 
         resolve_padder(type(fn))  # raises NotImplementedError if unsupported
-        if self.mesh is not None and optimizer != "NaiveGreedy":
+        if optimizer not in ("NaiveGreedy", "LazyGreedy"):
+            # reject at submit time: an unknown optimizer surfacing from the
+            # engine mid-flush would abort the flush AFTER the pending queue
+            # was cleared, dropping everyone else's requests
             raise ValueError(
-                f"sharded serving supports only 'NaiveGreedy', got {optimizer!r}"
+                f"unknown optimizer {optimizer!r}; served waves support "
+                "'NaiveGreedy' and 'LazyGreedy'"
             )
         unknown = set(kwargs) - {"stopIfZeroGain", "stopIfNegativeGain", "screen_k"}
         if unknown:
             raise TypeError(f"submit() got unknown option(s): {sorted(unknown)}")
+        dispersion = isinstance(fn, (DisparitySum, DisparityMin))
         if rid is None:
             rid = self._next_rid
             self._next_rid += 1
@@ -163,7 +180,7 @@ class SelectionServer:
                 fn=fn,
                 budget=int(budget),
                 optimizer=optimizer,
-                stop_if_zero=kwargs.get("stopIfZeroGain", True),
+                stop_if_zero=kwargs.get("stopIfZeroGain", not dispersion),
                 stop_if_negative=kwargs.get("stopIfNegativeGain", True),
                 screen_k=int(kwargs.get("screen_k", 8)),
             )
@@ -245,8 +262,10 @@ class SelectionServer:
 # CLI: serve a random mixed workload and report throughput.
 # ---------------------------------------------------------------------------
 
-# dispersion families: the empty-set gain is 0, so their requests must run
-# with stopping disabled or every selection silently comes back empty
+# dispersion families: the empty-set gain is 0.  submit() already defaults
+# stopIfZeroGain=False for them; the CLI additionally disables
+# stopIfNegativeGain so long-budget requests keep selecting past the point
+# where adding an element shrinks the dispersion objective
 DISPERSION_FAMILIES = frozenset({"dsum", "dmin"})
 
 
@@ -313,8 +332,8 @@ def _random_requests(
     """A mixed workload with varying n, cycling through ``families`` (any of
     fl / gc / fb / sc / psc / dsum / dmin / flqmi / gcmi / logdet — every
     family here has a padder AND a ShardRule, so the workload serves on and
-    off mesh; note dsum/dmin requests need stopIfZeroGain=False to select
-    anything, so keep them out of default-flag request mixes)."""
+    off mesh; dsum/dmin requests get stopIfZeroGain=False by default at
+    submit time, see :meth:`SelectionServer.submit`)."""
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n_requests):

@@ -1,0 +1,111 @@
+"""Gain-backend layer: the trace-time kernel-vs-XLA decision table
+(``choose_backend`` / ``kernel_enabled``) and the ``use_kernel=None`` wiring
+through the function families."""
+import numpy as np
+import pytest
+
+from repro.core.optimizers.backends import (
+    KERNEL_MAX_BUDGET_FRACTION,
+    KERNEL_MIN_N,
+    backend_name,
+    choose_backend,
+    kernel_enabled,
+    partial_sweep,
+)
+
+
+def test_choose_backend_decision_table():
+    big = 4 * KERNEL_MIN_N
+    cases = [
+        # (n, budget, device) -> expected
+        (big, None, "cpu", "xla"),  # interpret mode never wins
+        (big, None, "gpu", "xla"),  # Pallas sweeps are TPU-targeted
+        (KERNEL_MIN_N - 1, None, "tpu", "xla"),  # launch overhead dominates
+        (KERNEL_MIN_N, None, "tpu", "kernel"),  # threshold is inclusive
+        (big, None, "tpu", "kernel"),
+        (big, 16, "tpu", "kernel"),  # small budget: streamed sweep wins
+        # long greedy loops favor the memoized XLA path for the stateless
+        # O(n^2)-streamed kernels
+        (big, int(KERNEL_MAX_BUDGET_FRACTION * big) + 1, "tpu", "xla"),
+        (big, int(KERNEL_MAX_BUDGET_FRACTION * big), "tpu", "kernel"),
+    ]
+    for n, budget, device, want in cases:
+        assert choose_backend(n, budget, device) == want, (n, budget, device)
+
+
+def test_choose_backend_defaults_to_current_device():
+    # this container is CPU-only, so the deviceless call must resolve "xla"
+    assert choose_backend(10 * KERNEL_MIN_N) == "xla"
+
+
+def test_kernel_enabled_manual_flag_wins():
+    # explicit flags ignore n / budget / device entirely
+    assert kernel_enabled(True, n=2) is True
+    assert kernel_enabled(False, n=10 * KERNEL_MIN_N) is False
+    # None defers to the table (CPU here -> False even at huge n)
+    assert kernel_enabled(None, n=10 * KERNEL_MIN_N) is False
+
+
+@pytest.mark.parametrize("family", ["fl", "gc", "fb", "sc", "psc"])
+def test_use_kernel_none_resolves_via_heuristic(family):
+    """use_kernel=None instances resolve their backend at trace time: on this
+    CPU container the table picks XLA, and the selections are identical to
+    an explicit use_kernel=False build."""
+    from repro.core import (
+        FacilityLocation,
+        FeatureBased,
+        GraphCut,
+        ProbabilisticSetCover,
+        SetCover,
+        create_kernel,
+        naive_greedy,
+    )
+
+    # local generator: keep the session rng fixture's sequence untouched
+    rng = np.random.default_rng(3)
+    n = 24
+    x = rng.normal(size=(n, 6)).astype(np.float32)
+    S = np.asarray(create_kernel(x, metric="euclidean"))
+    build = {
+        "fl": lambda uk: FacilityLocation.from_kernel(S, use_kernel=uk),
+        "gc": lambda uk: GraphCut.from_kernel(S, lam=0.3, use_kernel=uk),
+        "fb": lambda uk: FeatureBased.from_features(
+            np.abs(S[:, :8]), use_kernel=uk
+        ),
+        "sc": lambda uk: SetCover.from_cover(
+            (S[:, :12] > 0.5).astype(np.float32), use_kernel=uk
+        ),
+        "psc": lambda uk: ProbabilisticSetCover.from_probs(
+            0.9 * S[:, :12], use_kernel=uk
+        ),
+    }[family]
+    auto, plain = build(None), build(False)
+    assert backend_name(auto) == "xla"  # CPU: the table declines the kernel
+    r_auto = naive_greedy(auto, 5)
+    r_plain = naive_greedy(plain, 5)
+    assert list(np.asarray(r_auto.order)) == list(np.asarray(r_plain.order))
+    np.testing.assert_array_equal(
+        np.asarray(r_auto.gains), np.asarray(r_plain.gains)
+    )
+
+
+def test_partial_sweep_falls_back_to_gains_at():
+    """Backends without a partial_sweep method (and the XLA default) serve
+    gathered subsets through the function's gains_at reference."""
+    import jax.numpy as jnp
+
+    from repro.core import LogDet, create_kernel
+
+    rng = np.random.default_rng(3)
+    n = 16
+    x = rng.normal(size=(n, 5)).astype(np.float32)
+    S = np.asarray(create_kernel(x, metric="euclidean")) + 0.5 * np.eye(
+        n, dtype=np.float32
+    )
+    fn = LogDet.from_kernel(S, max_select=8)
+    st = fn.init_state()
+    idx = jnp.asarray([7, 0, 3], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(partial_sweep(fn, st, idx)),
+        np.asarray(fn.gains_at(st, idx)),
+    )

@@ -1,0 +1,77 @@
+"""tools/bench_diff.py: snapshot matching + regression flagging semantics."""
+import json
+import sys
+
+import pytest
+
+sys.path.insert(0, "tools")
+import bench_diff  # noqa: E402
+
+
+def _snap(tmp_path, name, rows):
+    path = tmp_path / name
+    path.write_text(json.dumps({"bench": "batched_bench", "rows": rows}))
+    return str(path)
+
+
+ROW = {"family": "fl", "B": 8, "n": 1024, "budget": 24,
+       "section": "naive_vs_lazy", "lazy_ms": 100.0, "lazy_qps": 80.0,
+       "lazy_speedup": 2.5, "lazy_evals": 17440}
+
+
+def test_identical_snapshots_pass(tmp_path, capsys):
+    old = _snap(tmp_path, "old.json", [ROW])
+    assert bench_diff.diff(old, old) == 0
+    assert "no throughput regressions" in capsys.readouterr().out
+
+
+def test_regression_flagged_and_exit_1(tmp_path, capsys):
+    old = _snap(tmp_path, "old.json", [ROW])
+    worse = dict(ROW, lazy_ms=130.0)  # +30% wall clock > 20% threshold
+    new = _snap(tmp_path, "new.json", [worse])
+    assert bench_diff.diff(old, new) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION" in out and "lazy_ms" in out
+
+
+def test_qps_drop_is_a_regression_but_gain_is_not(tmp_path):
+    old = _snap(tmp_path, "old.json", [ROW])
+    assert bench_diff.diff(old, _snap(tmp_path, "a.json", [dict(ROW, lazy_qps=50.0)])) == 1
+    assert bench_diff.diff(old, _snap(tmp_path, "b.json", [dict(ROW, lazy_qps=200.0)])) == 0
+
+
+def test_threshold_is_respected(tmp_path):
+    old = _snap(tmp_path, "old.json", [ROW])
+    new = _snap(tmp_path, "new.json", [dict(ROW, lazy_ms=115.0)])  # +15%
+    assert bench_diff.diff(old, new) == 0  # under the 20% default
+    assert bench_diff.diff(old, new, threshold=0.1) == 1
+
+
+def test_eval_count_drift_is_a_note_not_a_regression(tmp_path, capsys):
+    """Eval counts are hardware-independent: a change means the ALGORITHM
+    changed. That is the test suite's jurisdiction, so bench_diff only
+    surfaces it as a note."""
+    old = _snap(tmp_path, "old.json", [ROW])
+    new = _snap(tmp_path, "new.json", [dict(ROW, lazy_evals=99)])
+    assert bench_diff.diff(old, new) == 0
+    assert "algorithmic change" in capsys.readouterr().out
+
+
+def test_rows_matched_by_identity_fields(tmp_path, capsys):
+    """A row whose identifying fields changed is 'dropped + new', never
+    silently compared against a different configuration."""
+    old = _snap(tmp_path, "old.json", [ROW])
+    new = _snap(tmp_path, "new.json", [dict(ROW, n=2048, lazy_ms=500.0)])
+    assert bench_diff.diff(old, new) == 0
+    out = capsys.readouterr().out
+    assert "row dropped" in out and "new row" in out
+
+
+def test_eval_ratio_is_skipped_entirely(tmp_path, capsys):
+    """eval_ratio is derived from the note-only eval counts — it must not be
+    flagged as a throughput regression for the same underlying change."""
+    row = dict(ROW, eval_ratio=11.3)
+    old = _snap(tmp_path, "old.json", [row])
+    new = _snap(tmp_path, "new.json", [dict(row, eval_ratio=5.0)])
+    assert bench_diff.diff(old, new) == 0
+    assert "eval_ratio" not in capsys.readouterr().out

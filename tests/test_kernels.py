@@ -443,3 +443,110 @@ def test_fused_fl_sweep_dtypes(dtype, rng):
     got = np.asarray(fused_fl_sweep_pallas(x, y, cm, interpret=True))
     want = np.asarray(fused_fl_sweep_ref(x, y, cm))
     np.testing.assert_allclose(got, want, rtol=1e-3, atol=5e-2)
+
+
+# -- masked-subset (gather-sweep) entry points --------------------------------
+#
+# The partial_sweep contract behind the bucketed lazy engines: gains for a
+# gathered candidate subset only, idx < 0 slots padded to NEG_INF.  Validated
+# two ways per family: allclose against the jnp subset oracle, and EXACT
+# equality against the full-sweep kernel gathered at the same indices (the
+# per-candidate accumulation order is identical by construction, which is
+# what lets lazy screens mix stale full-sweep bounds with subset refreshes).
+
+from repro.common import NEG_INF
+from repro.kernels.fb_gains import fb_gains_at_pallas, fb_gains_pallas
+from repro.kernels.fl_gains import fl_gains_at_pallas
+from repro.kernels.gc_gains import gc_gains_at_pallas, gc_gains_pallas
+
+SUBSET_IDX = [
+    np.array([0], np.int32),
+    np.array([5, 3, 3, 17], np.int32),  # duplicates allowed
+    np.array([2, -1, 40, -1, 7, 0], np.int32),  # padded slots
+    np.arange(48, dtype=np.int32)[::-1].copy(),  # everything, reversed
+]
+
+
+@pytest.mark.parametrize("idx", SUBSET_IDX)
+def test_fl_gains_at_matches_ref_and_full(idx):
+    rng = np.random.default_rng(11)
+    u, n = 70, 48
+    sim = rng.uniform(0, 1, size=(u, n)).astype(np.float32)
+    cm = rng.uniform(0, 0.8, size=(u,)).astype(np.float32)
+    got = np.asarray(fl_gains_at_pallas(sim, cm, idx, interpret=True))
+    want = np.asarray(ref.fl_gains_at_ref(sim, cm, jnp.asarray(idx)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    full = np.asarray(fl_gains_pallas(sim, cm, interpret=True))
+    mask = idx >= 0
+    np.testing.assert_array_equal(got[mask], full[idx[mask]])
+    assert (got[~mask] == NEG_INF).all()
+
+
+@pytest.mark.parametrize("idx", SUBSET_IDX)
+def test_gc_gains_at_matches_ref_and_full(idx):
+    rng = np.random.default_rng(11)
+    n = 48
+    sim = rng.uniform(0, 1, size=(n, n)).astype(np.float32)
+    sim = (sim + sim.T) / 2
+    total = sim.sum(axis=0).astype(np.float32)
+    selmask = (rng.uniform(size=n) < 0.3).astype(np.float32)
+    lam = jnp.float32(0.4)
+    got = np.asarray(
+        gc_gains_at_pallas(sim, selmask, total, lam, idx, interpret=True)
+    )
+    want = np.asarray(
+        ref.gc_gains_at_ref(sim, selmask, total, lam, jnp.asarray(idx))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    full = np.asarray(gc_gains_pallas(sim, selmask, total, lam, interpret=True))
+    mask = idx >= 0
+    np.testing.assert_array_equal(got[mask], full[idx[mask]])
+    assert (got[~mask] == NEG_INF).all()
+
+
+@pytest.mark.parametrize("idx", SUBSET_IDX)
+@pytest.mark.parametrize("concave", ["sqrt", "log"])
+def test_fb_gains_at_matches_ref_and_full(idx, concave):
+    rng = np.random.default_rng(11)
+    n, F = 48, 33
+    feats = rng.uniform(0, 1, size=(n, F)).astype(np.float32)
+    acc = rng.uniform(0, 3, size=(F,)).astype(np.float32)
+    w = rng.uniform(0.2, 1.5, size=(F,)).astype(np.float32)
+    got = np.asarray(
+        fb_gains_at_pallas(feats, acc, w, idx, concave=concave, interpret=True)
+    )
+    want = np.asarray(
+        ref.fb_gains_at_ref(feats, acc, w, jnp.asarray(idx), concave=concave)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    full = np.asarray(
+        fb_gains_pallas(feats, acc, w, concave=concave, interpret=True)
+    )
+    mask = idx >= 0
+    np.testing.assert_array_equal(got[mask], full[idx[mask]])
+    assert (got[~mask] == NEG_INF).all()
+
+
+def test_partial_sweep_routes_through_kernel_backends():
+    """backends.partial_sweep uses the family's Pallas subset kernel when
+    use_kernel=True and the jnp gains_at reference otherwise — and the lazy
+    screens agree between the two, which the batched lazy engine relies on."""
+    from repro.core import FacilityLocation, create_kernel, lazy_greedy
+    from repro.core.optimizers.backends import partial_sweep
+
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(40, 6)).astype(np.float32)
+    S = np.asarray(create_kernel(x, metric="euclidean"))
+    plain = FacilityLocation.from_kernel(S)
+    fused = FacilityLocation.from_kernel(S, use_kernel=True)
+    st = plain.init_state()
+    idx = jnp.asarray([3, 11, 0, 25], jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(partial_sweep(plain, st, idx)),
+        np.asarray(partial_sweep(fused, st, idx)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+    r1 = lazy_greedy(plain, 6)
+    r2 = lazy_greedy(fused, 6)
+    assert list(np.asarray(r1.order)) == list(np.asarray(r2.order))

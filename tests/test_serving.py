@@ -298,11 +298,23 @@ def test_server_stop_flags_ride_the_wave_key(rng):
     )
 
 
-def test_server_rejects_lazy_on_mesh(rng):
-    mesh = jax.make_mesh((1, 1), ("batch", "data"))
-    server = SelectionServer(mesh=mesh)
-    with pytest.raises(ValueError, match="NaiveGreedy"):
-        server.submit(_build("fl", rng, 16), 3, optimizer="LazyGreedy")
+def test_server_disparity_stop_default():
+    """Regression for the Disparity* serving footgun: the empty-set gain is
+    0, so the library-wide stopIfZeroGain=True default used to silently
+    serve EMPTY selections for dsum/dmin requests.  submit() now defaults
+    stopIfZeroGain=False for those families — and an explicit flag wins."""
+    rng = np.random.default_rng(13)  # local: keep the session rng sequence
+    server = SelectionServer()
+    fns = {k: _build(k, rng, 24) for k in ("dsum", "dmin")}
+    rids = {k: server.submit(f, 5) for k, f in fns.items()}
+    explicit = server.submit(fns["dsum"], 5, stopIfZeroGain=True)
+    out = server.flush()
+    for k, f in fns.items():
+        resp = out[rids[k]]
+        assert resp.selection, k  # non-empty: the footgun is closed
+        ref = maximize(f, 5, stopIfZeroGain=False)
+        assert resp.selection == ref, k
+    assert out[explicit].selection == []  # manual flag still wins
 
 
 # -- the sharded engine, in-process (1,1) mesh --------------------------------
@@ -350,6 +362,62 @@ def test_sharded_engine_unit_mesh_new_families(kind, rng):
         np.testing.assert_array_equal(np.asarray(ref.gains), np.asarray(r.gains))
         assert int(ref.n_evals) == int(r.n_evals)
         assert float(ref.value) == float(r.value)
+
+
+@pytest.mark.parametrize(
+    "kind", ["fl", "fl_kernel", "gc", "fb", "sc", "psc", "dsum", "dmin",
+             "flqmi", "flvmi", "gcmi", "logdet"]
+)
+def test_sharded_engine_unit_mesh_lazy_bit_identical(kind):
+    """LazyGreedy on a (1,1) mesh: the full bucketed sharded-lazy program
+    (sorted-prefix merge + gathered partial sweeps + level conds, collectives
+    degenerate) is bit-identical to sequential lazy_greedy — ids, gains,
+    n_evals, value — for every servable family."""
+    from repro.core import lazy_greedy
+
+    rng = np.random.default_rng(13)  # local: keep the session rng sequence
+    mesh = jax.make_mesh((1, 1), ("batch", "data"))
+    stop_zero, stop_neg = _stop_args(kind)
+    fns = [_build(kind, rng, 32) for _ in range(3)]
+    budgets = [5, 3, 6]
+    res = batched_maximize(
+        fns,
+        budgets,
+        mesh=mesh,
+        optimizer="LazyGreedy",
+        return_result=True,
+        screen_k=6,
+        stopIfZeroGain=stop_zero,
+        stopIfNegativeGain=stop_neg,
+    )
+    for fn, b, r in zip(fns, budgets, res):
+        ref = lazy_greedy(fn, b, 6, stop_zero, stop_neg)
+        assert list(np.asarray(ref.order)) == list(np.asarray(r.order))
+        np.testing.assert_array_equal(np.asarray(ref.gains), np.asarray(r.gains))
+        assert int(ref.n_evals) == int(r.n_evals)
+        assert float(ref.value) == float(r.value)
+
+
+def test_server_lazy_on_mesh_bit_identical():
+    """optimizer="LazyGreedy" through the whole serving stack on a mesh
+    (formerly the pinned NaiveGreedy-only error path).  Padded waves keep
+    ids/gains bit-identical; the n=32 requests sit at their bucket, so their
+    n_evals compare exactly too."""
+    from repro.core import lazy_greedy
+
+    rng = np.random.default_rng(13)  # local: keep the session rng sequence
+    mesh = jax.make_mesh((1, 1), ("batch", "data"))
+    server = SelectionServer(mesh=mesh)
+    fns = [_build("fl", rng, 32) for _ in range(3)] + [_build("gc", rng, 24)]
+    rids = [server.submit(fn, 5, optimizer="LazyGreedy") for fn in fns]
+    out = server.flush()
+    for fn, rid in zip(fns, rids):
+        ref = maximize(fn, 5, optimizer="LazyGreedy", return_result=True)
+        assert out[rid].selection == [
+            (int(i), float(g)) for i, g in zip(ref.order, ref.gains) if i >= 0
+        ]
+        if fn.n == 32:
+            assert int(out[rid].result.n_evals) == int(ref.n_evals)
 
 
 def test_server_new_families_bit_identical(rng):
@@ -447,8 +515,8 @@ _MULTIDEV_SCRIPT = textwrap.dedent(
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import numpy as np, jax
     from repro.core import (FacilityLocation, GraphCut, FeatureBased,
-                            create_kernel, naive_greedy, batched_maximize,
-                            maximize)
+                            create_kernel, naive_greedy, lazy_greedy,
+                            batched_maximize, maximize)
     from repro.launch.serve import SelectionServer, _random_requests
 
     rng = np.random.default_rng(0)
@@ -464,10 +532,11 @@ _MULTIDEV_SCRIPT = textwrap.dedent(
     mesh = jax.make_mesh((2, 2), ("batch", "data"))
     assert len(jax.devices()) == 4
 
-    # engine-level: ids, gains, n_evals, value all bit-identical
+    # engine-level: ids, gains, n_evals, value all bit-identical, for both
+    # the naive partition sweep and the bucketed sharded-lazy engine
+    budgets = [6, 3, 5, 4]
     for kind in ["fl", "gc", "fb"]:
         fns = [build(kind, 32) for _ in range(4)]
-        budgets = [6, 3, 5, 4]
         res = batched_maximize(fns, budgets, mesh=mesh, return_result=True)
         for fn, b, r in zip(fns, budgets, res):
             ref = naive_greedy(fn, b)
@@ -475,6 +544,15 @@ _MULTIDEV_SCRIPT = textwrap.dedent(
             assert np.array_equal(np.asarray(ref.gains), np.asarray(r.gains)), kind
             assert int(ref.n_evals) == int(r.n_evals), kind
             assert float(ref.value) == float(r.value), kind
+    for kind in ["fl", "gc"]:
+        fns = [build(kind, 32) for _ in range(4)]
+        res = batched_maximize(fns, budgets, mesh=mesh, optimizer="LazyGreedy",
+                               return_result=True, screen_k=6)
+        for fn, b, r in zip(fns, budgets, res):
+            ref = lazy_greedy(fn, b, 6)
+            assert list(np.asarray(ref.order)) == list(np.asarray(r.order)), kind
+            assert np.array_equal(np.asarray(ref.gains), np.asarray(r.gains)), kind
+            assert int(ref.n_evals) == int(r.n_evals), kind
 
     # server-level: mixed workload, padding + batch pads on the mesh
     server = SelectionServer(mesh=mesh)
@@ -484,6 +562,17 @@ _MULTIDEV_SCRIPT = textwrap.dedent(
         assert [i for i, _ in ref] == [i for i, _ in resp.selection]
         assert [g for _, g in ref] == [g for _, g in resp.selection]
     assert server.stats.requests == 10
+
+    # server-level LazyGreedy on the mesh (the former pinned error path)
+    fns_lazy = [build("fl", 32) for _ in range(3)]
+    rids = [server.submit(fn, b, optimizer="LazyGreedy")
+            for fn, b in zip(fns_lazy, [4, 6, 5])]
+    out = server.flush()
+    for fn, b, rid in zip(fns_lazy, [4, 6, 5], rids):
+        ref = maximize(fn, b, optimizer="LazyGreedy", return_result=True)
+        assert out[rid].selection == [
+            (int(i), float(g)) for i, g in zip(ref.order, ref.gains) if i >= 0]
+        assert int(out[rid].result.n_evals) == int(ref.n_evals)
     print("SHARDED_SERVE_OK")
     """
 )
@@ -598,3 +687,17 @@ def test_sharded_serving_breadth_four_devices():
         cwd="/root/repo",
     )
     assert "SHARDED_BREADTH_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_server_rejects_unknown_optimizer_at_submit():
+    """A typo'd optimizer must fail at submit() — surfacing from the engine
+    mid-flush would abort the flush after the pending queue was cleared,
+    dropping every co-pending request."""
+    rng = np.random.default_rng(13)  # local: keep the session rng sequence
+    server = SelectionServer()
+    fn = _build("fl", rng, 16)
+    rid_ok = server.submit(fn, 3)
+    with pytest.raises(ValueError, match="unknown optimizer"):
+        server.submit(fn, 3, optimizer="lazygreedy")
+    out = server.flush()  # the valid request is unaffected by the rejection
+    assert out[rid_ok].selection == maximize(fn, 3)

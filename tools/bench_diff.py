@@ -1,0 +1,138 @@
+"""Compare two BENCH_*.json snapshots and flag throughput regressions.
+
+Snapshots are what ``benchmarks/serve_bench.py --json`` and
+``benchmarks/batched_bench.py --json`` write: ``{"bench": ..., "rows":
+[...]}`` with each row a flat dict of identifying fields (family, B, n,
+budget, mesh, gains, section, ...) plus metric fields.  Rows are matched
+across snapshots by their identifying fields; for every matched row the
+throughput-style metrics are compared and a drop of more than
+``--threshold`` (default 20%) is a REGRESSION:
+
+- higher-is-better metrics: ``qps`` / ``*_qps``, ``*_speedup``
+- lower-is-better metrics:  ``*_ms`` / ``wave_ms``
+
+Eval *counts* are compared exactly (they are hardware-independent: a change
+means the algorithm changed, not the machine) but reported as NOTEs, not
+regressions — bit-level behaviour is the test suite's job.  ``eval_ratio``
+is derived from those counts, so it is skipped entirely rather than flagged
+twice under a throughput label.
+
+Exit status: 1 if any regression was flagged, else 0.  Benchmark timings on
+shared CPU boxes are noisy (±2x run-to-run is common here — see the verify
+notes), so treat a flag as "re-run and look", not proof.
+
+    PYTHONPATH=src python tools/bench_diff.py benchmarks/BENCH_batched.json new.json
+    make bench-diff   # re-runs batched_bench and diffs against the snapshot
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+def _metric_kind(name: str) -> str | None:
+    if name == "eval_ratio":
+        return "skip"  # derived from the exact-compared eval counts
+    if name == "qps" or name.endswith("_qps") or name.endswith("speedup"):
+        return "higher"
+    if name.endswith("_ms") or name == "wave_ms":
+        return "lower"
+    if name.endswith("_evals"):
+        return "exact"
+    return None
+
+
+def _row_key(row: dict) -> tuple:
+    ident = {
+        k: v for k, v in row.items() if _metric_kind(k) is None
+    }
+    return tuple(sorted(ident.items()))
+
+
+def load_rows(path: str) -> dict[tuple, dict]:
+    with open(path) as f:
+        snap = json.load(f)
+    rows = snap["rows"] if isinstance(snap, dict) else snap
+    out = {}
+    for row in rows:
+        out[_row_key(row)] = row
+    return out
+
+
+def _fmt_key(key: tuple) -> str:
+    return " ".join(f"{k}={v}" for k, v in key)
+
+
+def diff(old_path: str, new_path: str, threshold: float = 0.2) -> int:
+    old_rows = load_rows(old_path)
+    new_rows = load_rows(new_path)
+    regressions, improvements, notes = [], [], []
+
+    for key, old in old_rows.items():
+        new = new_rows.get(key)
+        if new is None:
+            notes.append(f"row dropped: {_fmt_key(key)}")
+            continue
+        for name, old_v in old.items():
+            kind = _metric_kind(name)
+            if kind is None or kind == "skip" or name not in new:
+                continue
+            new_v = new[name]
+            if kind == "exact":
+                if new_v != old_v:
+                    notes.append(
+                        f"{_fmt_key(key)} :: {name} {old_v} -> {new_v} "
+                        "(algorithmic change?)"
+                    )
+                continue
+            if not old_v:
+                continue
+            rel = (new_v - old_v) / old_v
+            worse = rel < -threshold if kind == "higher" else rel > threshold
+            better = rel > threshold if kind == "higher" else rel < -threshold
+            line = (
+                f"{_fmt_key(key)} :: {name} {old_v:.2f} -> {new_v:.2f} "
+                f"({rel:+.0%})"
+            )
+            if worse:
+                regressions.append(line)
+            elif better:
+                improvements.append(line)
+    for key in new_rows:
+        if key not in old_rows:
+            notes.append(f"new row: {_fmt_key(key)}")
+
+    if improvements:
+        print(f"# {len(improvements)} improvement(s) > {threshold:.0%}")
+        for line in improvements:
+            print(f"  + {line}")
+    if notes:
+        print(f"# {len(notes)} note(s)")
+        for line in notes:
+            print(f"  * {line}")
+    if regressions:
+        print(f"# {len(regressions)} REGRESSION(S) > {threshold:.0%}")
+        for line in regressions:
+            print(f"  - {line}")
+        return 1
+    print(f"# no throughput regressions > {threshold:.0%} "
+          f"({len(old_rows)} rows compared)")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("old", help="baseline snapshot (the committed BENCH_*.json)")
+    ap.add_argument("new", help="candidate snapshot")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.2,
+        help="relative change that counts as a regression (default 0.2 = 20%%)",
+    )
+    a = ap.parse_args()
+    return diff(a.old, a.new, a.threshold)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
