@@ -10,13 +10,16 @@
 #   make docs-check  execute the code blocks in README.md and docs/*.md,
 #                    and assert the README coverage matrix matches the
 #                    registries (tools/gen_matrix.py --check)
+#   make shims-check assert no internal caller uses the deprecated entry
+#                    points (maximize/batched_maximize/legacy submit) —
+#                    everything internal routes through SelectionSpec/solve
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test-fast test-all bench bench-batched bench-serve bench-diff docs-check
+.PHONY: verify test-fast test-all bench bench-batched bench-serve bench-diff docs-check shims-check
 
-verify: test-fast docs-check
+verify: test-fast docs-check shims-check
 
 test-fast:
 	$(PYTHON) -m pytest -x -q
@@ -42,3 +45,6 @@ bench-diff:
 
 docs-check:
 	$(PYTHON) tools/check_docs.py
+
+shims-check:
+	$(PYTHON) tools/check_shims.py

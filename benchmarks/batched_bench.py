@@ -6,9 +6,10 @@ FacilityLocation queries:
 
   - sequential: a Python loop of single jitted ``naive_greedy`` calls
     (one compile shared across instances, B dispatches per wave)
-  - batched (one-shot): ``batched_maximize`` — stack + one vmap-ed dispatch
+  - batched (one-shot): ``solve([SelectionSpec(...), ...], mode="batched")``
+    — spec + stack + one vmap-ed dispatch per call
   - engine (resident): :class:`BatchedEngine` stacked once at ingest, each
-    wave is a single dispatch (how a server actually runs)
+    wave is a single ``run`` dispatch (how a server actually runs)
 
 Reported: wall time per wave, queries/sec, and speedup over the sequential
 loop.  The batched paths must return identical per-instance selections,
@@ -41,10 +42,12 @@ import numpy as np
 from repro.core import (
     BatchedEngine,
     FacilityLocation,
-    batched_maximize,
+    OptimizerSpec,
+    SelectionSpec,
     create_kernel,
     lazy_greedy,
     naive_greedy,
+    solve,
 )
 
 
@@ -104,18 +107,16 @@ def run(B: int = 64, n: int = 64, budget: int = 8, reps: int = 10):
 
     # correctness gate: batched selections identical to the sequential loop
     seq_res = [jax.block_until_ready(naive_greedy(f, budget)) for f in fns]
-    for i, (a, b) in enumerate(
-        zip(seq_res, engine.maximize(budget, return_result=True))
-    ):
+    for i, (a, b) in enumerate(zip(seq_res, engine.run(budget))):
         assert list(np.asarray(a.order)) == list(b.order), i
 
     t_seq = _time(
         lambda: [jax.block_until_ready(naive_greedy(f, budget)) for f in fns], reps
     )
-    t_oneshot = _time(
-        lambda: batched_maximize(fns, budget, return_result=True), reps
-    )
-    t_engine = _time(lambda: engine.maximize(budget, return_result=True), reps)
+    # one-shot: spec construction + engine build + dispatch, every call
+    specs = [SelectionSpec(f, budget) for f in fns]
+    t_oneshot = _time(lambda: solve(specs, mode="batched"), reps)
+    t_engine = _time(lambda: engine.run(budget), reps)
 
     return {
         "B": B,
@@ -138,11 +139,8 @@ def run_family(family: str, B: int = 32, n: int = 64, budget: int = 8, reps: int
     engine = BatchedEngine(fns)
 
     def dispatch():
-        return engine.maximize(
-            budget,
-            return_result=True,
-            stopIfZeroGain=stop_zero,
-            stopIfNegativeGain=stop_neg,
+        return engine.run(
+            budget, stop_if_zero=stop_zero, stop_if_negative=stop_neg
         )
 
     def sequential():
@@ -183,13 +181,13 @@ def run_lazy(
     fns = make_instances(B, n, peaked=peaked)
     engine = BatchedEngine(fns)
 
+    lazy_spec = OptimizerSpec("LazyGreedy", screen_k=screen_k)
+
     def naive():
-        return engine.maximize(budget, return_result=True)
+        return engine.run(budget)
 
     def lazy():
-        return engine.maximize(
-            budget, optimizer="LazyGreedy", screen_k=screen_k, return_result=True
-        )
+        return engine.run(budget, lazy_spec)
 
     naive_res, lazy_res = naive(), lazy()
     for i, (fn, r) in enumerate(zip(fns, lazy_res)):  # correctness gate

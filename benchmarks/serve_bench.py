@@ -83,11 +83,8 @@ def run_cell(B, n, budget, mesh_shape, family="fl"):
         engine = BatchedEngine(fns, mesh=mesh)
 
     def dispatch():
-        return engine.maximize(
-            budget,
-            return_result=True,
-            stopIfZeroGain=stop_zero,
-            stopIfNegativeGain=stop_neg,
+        return engine.run(
+            budget, stop_if_zero=stop_zero, stop_if_negative=stop_neg
         )
 
     # correctness gate before timing: bit-identical to the sequential loop

@@ -1,10 +1,13 @@
-"""Quickstart — the submodlib-style two-step API (paper §7).
+"""Quickstart — the typed front door (paper §7, redesigned).
+
+One request object, ``SelectionSpec``, travels unchanged through every
+execution route; ``solve()`` is the single entry point.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import FacilityLocation, create_kernel, maximize
+from repro.core import FacilityLocation, SelectionSpec, create_kernel, solve
 
 # 1. some data (rows = items to select from)
 rng = np.random.default_rng(0)
@@ -14,18 +17,26 @@ ground_data = rng.normal(size=(43, 16)).astype(np.float32)
 kernel = create_kernel(ground_data, metric="euclidean", mode="dense")
 obj_fl = FacilityLocation.from_kernel(kernel)
 
-# 3. ...and call maximize on it — exactly submodlib's usage pattern
-greedy_list = maximize(obj_fl, budget=10, optimizer="NaiveGreedy")
+# 3. ...build a typed request and solve it — validation (optimizer name,
+#    hyperparameters, stop rules) happens at SelectionSpec construction
+result = solve(SelectionSpec(obj_fl, budget=10, optimizer="NaiveGreedy"))
 print("selected (index, gain):")
-for idx, gain in greedy_list:
+for idx, gain in result.as_list():
     print(f"  {idx:3d}  {gain:8.4f}")
 
-# the other optimizers, same decoupled function/optimizer paradigm
+# the other optimizers, same decoupled function/optimizer paradigm —
+# hyperparameters ride the spec (misspelled ones raise at construction)
 for opt in ("LazyGreedy", "StochasticGreedy", "LazierThanLazyGreedy"):
-    sel = maximize(obj_fl, budget=10, optimizer=opt)
+    sel = solve(SelectionSpec(obj_fl, 10, opt)).as_list()
     print(f"{opt:22s} -> {[i for i, _ in sel]}")
+
+# B requests = one vmap-ed wave: pass a list of specs
+specs = [SelectionSpec(obj_fl, b, "LazyGreedy", screen_k=4) for b in (4, 6, 8)]
+for spec, res in zip(specs, solve(specs, mode="batched")):
+    print(f"batched budget={spec.budget}   -> {[i for i, _ in res.as_list()]}")
 
 # sparse kernel mode (top-k neighbours), paper §8
 sparse = create_kernel(ground_data, metric="euclidean", mode="sparse", num_neighbors=8)
 obj_sparse = FacilityLocation.from_kernel(sparse)
-print("sparse mode          ->", [i for i, _ in maximize(obj_sparse, budget=10)])
+sel = solve(SelectionSpec(obj_sparse, 10)).as_list()
+print("sparse mode          ->", [i for i, _ in sel])

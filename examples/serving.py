@@ -1,10 +1,11 @@
 """Serving a mixed selection workload — the three-family request wave.
 
-Submits FacilityLocation, GraphCut and FeatureBased selection requests with
-heterogeneous ground-set sizes and budgets to a :class:`SelectionServer`,
-which coalesces them into padded per-(family, n-bucket) waves, answers each
-wave with ONE batched-engine dispatch, and demultiplexes the responses.
-Every selection is verified bit-identical to a direct ``maximize`` call.
+Builds FacilityLocation, GraphCut and FeatureBased ``SelectionSpec``
+requests with heterogeneous ground-set sizes and budgets and submits them
+to a :class:`SelectionServer`, which coalesces them into padded
+per-(family, n-bucket) waves, answers each wave with ONE batched-engine
+dispatch, and demultiplexes the responses.  Every selection is verified
+bit-identical to solving the same spec sequentially — the serving contract.
 
     PYTHONPATH=src python examples/serving.py
 
@@ -12,6 +13,10 @@ Add a 2-D device mesh to shard the waves (batch x data axes):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python examples/serving.py --mesh 2x2
+
+Add ``--async-serve`` to route the same specs through the
+:class:`AsyncSelectionServer` futures front end (timer + queue-depth flush
+triggers) instead of a manual flush.
 """
 import argparse
 
@@ -21,13 +26,19 @@ from repro.core import (
     FacilityLocation,
     FeatureBased,
     GraphCut,
+    SelectionSpec,
     create_kernel,
-    maximize,
+    solve,
 )
 from repro.launch.serve import SelectionServer
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--mesh", default=None, help="BATCHxDATA grid, e.g. 2x2")
+ap.add_argument(
+    "--async-serve",
+    action="store_true",
+    help="submit through AsyncSelectionServer futures instead of flush()",
+)
 args = ap.parse_args()
 
 rng = np.random.default_rng(0)
@@ -39,16 +50,18 @@ def embeddings(n):
 
 # a mixed workload: 2 coverage queries, 2 representation+diversity queries,
 # 2 feature-coverage queries — different ground-set sizes and budgets
-requests = []
+specs = []
 for n, budget in ((40, 6), (64, 8)):
     S = np.asarray(create_kernel(embeddings(n), metric="euclidean"))
-    requests.append((FacilityLocation.from_kernel(S), budget))
+    specs.append(SelectionSpec(FacilityLocation.from_kernel(S), budget))
 for n, budget in ((40, 5), (48, 7)):
     S = np.asarray(create_kernel(embeddings(n), metric="euclidean"))
-    requests.append((GraphCut.from_kernel(S, lam=0.3), budget))
+    specs.append(SelectionSpec(GraphCut.from_kernel(S, lam=0.3), budget))
 for n, budget in ((40, 6), (56, 4)):
     feats = rng.uniform(0, 1, size=(n, 24)).astype(np.float32)
-    requests.append((FeatureBased.from_features(feats, concave="sqrt"), budget))
+    specs.append(
+        SelectionSpec(FeatureBased.from_features(feats, concave="sqrt"), budget)
+    )
 
 mesh = None
 if args.mesh:
@@ -58,18 +71,25 @@ if args.mesh:
     mesh = jax.make_mesh((b, d), ("batch", "data"))
 
 server = SelectionServer(mesh=mesh)
-responses = server.select(requests)
+if args.async_serve:
+    from repro.launch.async_serve import AsyncSelectionServer
 
-print(f"{len(requests)} requests -> {server.stats.waves} waves\n")
-for (fn, budget), resp in zip(requests, responses):
+    with AsyncSelectionServer(server, max_pending=len(specs)) as front:
+        futures = [front.submit(s) for s in specs]  # depth-triggered flush
+        responses = [f.result(timeout=600) for f in futures]
+else:
+    responses = server.select(specs)
+
+print(f"{len(specs)} requests -> {server.stats.waves} waves\n")
+for spec, resp in zip(specs, responses):
     ids = [i for i, _ in resp.selection]
     print(
-        f"{type(fn).__name__:>16s} n={fn.n:3d} k={budget}  "
+        f"{type(spec.fn).__name__:>16s} n={spec.fn.n:3d} k={spec.budget}  "
         f"wave(B={resp.wave_size}, n_bucket={resp.n_bucket}, "
         f"backend={resp.backend})  -> {ids}"
     )
-    # the serving contract: identical to a direct single maximize call
-    assert resp.selection == maximize(fn, budget), "serving must be exact"
+    # the serving contract: identical to solving the spec sequentially
+    assert resp.selection == solve(spec).as_list(), "serving must be exact"
 
-print(f"\nall selections bit-identical to direct maximize calls")
+print(f"\nall selections bit-identical to sequential solve(spec)")
 print(f"server stats: {server.stats.summary()}")

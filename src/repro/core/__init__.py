@@ -22,6 +22,17 @@ from repro.core.info.gc import GCMI, gccg, gccmi
 from repro.core.info.logdet import logdet_cg, logdet_cmi, logdet_mi
 from repro.core.info.sc import psc_cg, psc_cmi, psc_mi, sc_cg, sc_cmi, sc_mi
 from repro.core.optimizers.api import maximize
+from repro.core.optimizers.spec import (
+    OptimizerSpec,
+    SelectionSpec,
+    family_defaults,
+    optimizer_names,
+    register_family_defaults,
+    register_optimizer,
+    resolve_optimizer,
+    solve,
+    wave_capable_names,
+)
 from repro.core.optimizers.backends import (
     GainBackend,
     full_sweep,
@@ -92,6 +103,15 @@ __all__ = [
     "generic_cmi",
     "ConditionedFunction",
     "DifferenceFunction",
+    "SelectionSpec",
+    "OptimizerSpec",
+    "solve",
+    "register_optimizer",
+    "register_family_defaults",
+    "optimizer_names",
+    "resolve_optimizer",
+    "wave_capable_names",
+    "family_defaults",
     "maximize",
     "batched_maximize",
     "BatchedEngine",

@@ -267,3 +267,16 @@ class DisparityMinSum(SetFunction):
 
     def evaluate_state(self, state: DMinSumState) -> jax.Array:
         return state.value
+
+
+# The dispersion footgun, closed at the one resolution point: every
+# Disparity* empty-set gain is exactly 0, so the library-wide
+# stopIfZeroGain=True default would silently return an EMPTY selection.
+# Registering stopIfZeroGain=False here makes SelectionSpec (and therefore
+# sequential solve(), batched waves, AND serving) agree on the dispersion
+# default — an explicit flag always wins.
+from repro.core.optimizers.spec import register_family_defaults  # noqa: E402
+
+for _cls in (DisparitySum, DisparityMin, DisparityMinSum):
+    register_family_defaults(_cls, stopIfZeroGain=False)
+del _cls

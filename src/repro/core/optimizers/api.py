@@ -1,52 +1,39 @@
-"""submodlib-style ``maximize`` entry point (paper §7).
+"""Deprecated submodlib-style ``maximize`` entry point (paper §7).
 
     greedy_list = maximize(fn, budget=10, optimizer="NaiveGreedy")
 
-returns [(index, gain), ...] exactly like submodlib's f.maximize().
+``maximize`` is now a thin shim over the typed front door::
+
+    from repro.core import SelectionSpec, solve
+    result = solve(SelectionSpec(fn, 10, "NaiveGreedy"))
+    greedy_list = result.as_list()
+
+The shim keeps the bit-identical contract (ids, gains, ``n_evals``) and the
+submodlib-style ``[(index, gain), ...]`` return value, but emits a single
+``DeprecationWarning`` per call — see docs/api.md for the migration table.
+Unlike the old implementation, unknown or misspelled options (e.g.
+``stopIfZeroGian``) now raise ``TypeError`` naming the valid set instead of
+being silently dropped, and stop-rule defaults resolve against the
+per-family table (Disparity* defaults to ``stopIfZeroGain=False``, matching
+serving).
 """
 from __future__ import annotations
 
-import jax
+import warnings
 
-from repro.core.optimizers.greedy import (
-    GreedyResult,
-    lazier_than_lazy_greedy,
-    lazy_greedy,
-    naive_greedy,
-    stochastic_greedy,
-)
+from repro.core.optimizers.greedy import GreedyResult
+from repro.core.optimizers.spec import SelectionSpec, solve
 
-_OPTIMIZERS = {
-    "NaiveGreedy": lambda fn, b, kw: naive_greedy(
-        fn, b, kw.get("stopIfZeroGain", True), kw.get("stopIfNegativeGain", True)
-    ),
-    "LazyGreedy": lambda fn, b, kw: lazy_greedy(
-        fn,
-        b,
-        kw.get("screen_k", 8),
-        kw.get("stopIfZeroGain", True),
-        kw.get("stopIfNegativeGain", True),
-    ),
-    "StochasticGreedy": lambda fn, b, kw: stochastic_greedy(
-        fn,
-        b,
-        kw.get("key", jax.random.PRNGKey(kw.get("seed", 0))),
-        kw.get("epsilon", 0.01),
-        kw.get("sample_size", None),
-        kw.get("stopIfZeroGain", True),
-        kw.get("stopIfNegativeGain", True),
-    ),
-    "LazierThanLazyGreedy": lambda fn, b, kw: lazier_than_lazy_greedy(
-        fn,
-        b,
-        kw.get("key", jax.random.PRNGKey(kw.get("seed", 0))),
-        kw.get("epsilon", 0.01),
-        kw.get("sample_size", None),
-        kw.get("screen_k", 8),
-        kw.get("stopIfZeroGain", True),
-        kw.get("stopIfNegativeGain", True),
-    ),
-}
+
+def _warn_shim(old: str, new: str) -> None:
+    """One DeprecationWarning per legacy call (shims never chain, so a
+    legacy call emits exactly one)."""
+    warnings.warn(
+        f"{old} is deprecated; use {new} (see docs/api.md for the migration "
+        "table)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 def maximize(
@@ -56,9 +43,24 @@ def maximize(
     return_result: bool = False,
     **kwargs,
 ) -> list | GreedyResult:
-    if optimizer not in _OPTIMIZERS:
-        raise ValueError(
-            f"unknown optimizer {optimizer!r}; choose from {sorted(_OPTIMIZERS)}"
-        )
-    result = _OPTIMIZERS[optimizer](fn, budget, kwargs)
+    """Deprecated: delegate to ``solve(SelectionSpec(...))``.
+
+    kwargs are split exactly as the spec constructor does: stop rules go to
+    the :class:`SelectionSpec`, everything else is validated as optimizer
+    hyperparameters — so ``maximize(fn, 5, stopIfZeroGian=False)`` raises a
+    ``TypeError`` naming the valid options instead of silently running under
+    the wrong stopping semantics.
+    """
+    _warn_shim(
+        "maximize()", "solve(SelectionSpec(fn, budget, optimizer, ...))"
+    )
+    spec = SelectionSpec(
+        fn,
+        budget,
+        optimizer,
+        stopIfZeroGain=kwargs.pop("stopIfZeroGain", None),
+        stopIfNegativeGain=kwargs.pop("stopIfNegativeGain", None),
+        **kwargs,
+    )
+    result = solve(spec)
     return result if return_result else result.as_list()

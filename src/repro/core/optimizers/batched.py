@@ -49,6 +49,11 @@ from repro.core.optimizers.greedy import (
     _lazy_bucketed_impl,
     _naive_impl,
 )
+from repro.core.optimizers.spec import (
+    OptimizerSpec,
+    resolve_optimizer,
+    wave_capable_names,
+)
 
 
 def stack_functions(fns: Sequence) -> object:
@@ -165,17 +170,28 @@ class BatchedEngine:
                 f"got {self.valid.shape}"
             )
 
-    def maximize(
+    def run(
         self,
         budget: int | Sequence[int],
-        optimizer: str = "NaiveGreedy",
-        return_result: bool = False,
+        optimizer: OptimizerSpec | str = "NaiveGreedy",
+        *,
+        stop_if_zero: bool = True,
+        stop_if_negative: bool = True,
         max_budget: int | None = None,
-        **kwargs,
-    ) -> list:
-        """Solve the resident batch.  ``max_budget`` optionally raises the
-        static loop bound above max(budgets) — serving uses bucketed bounds so
-        waves with different budget mixes share one compiled program."""
+    ) -> list[GreedyResult]:
+        """Solve the resident batch through the optimizer registry.
+
+        This is the typed engine path behind ``solve()`` and the serving
+        dispatch: the optimizer (an :class:`OptimizerSpec`, or a name built
+        into one) carries its validated hyperparameters, and the registry
+        supplies the batched / sharded execution hook — an optimizer without
+        one is rejected here with the batched-capable set named, never
+        mid-trace.  ``max_budget`` optionally raises the static loop bound
+        above max(budgets) — serving uses bucketed bounds so waves with
+        different budget mixes share one compiled program.
+        """
+        opt = OptimizerSpec(optimizer) if not isinstance(optimizer, OptimizerSpec) else optimizer
+        defn = resolve_optimizer(opt.name)
         B = self.batch_size
         budgets = (
             [int(budget)] * B
@@ -193,71 +209,44 @@ class BatchedEngine:
                 f"{max(budgets)}"
             )
         b_arr = jnp.asarray(budgets, jnp.int32)
-        stop_zero = kwargs.get("stopIfZeroGain", True)
-        stop_neg = kwargs.get("stopIfNegativeGain", True)
-        if self.mesh is not None:
-            if optimizer == "NaiveGreedy":
-                from repro.core.optimizers.distributed import sharded_batched_greedy
-
-                order, gains, evals, value = sharded_batched_greedy(
-                    self.rule,
-                    self.parts,
-                    b_arr,
-                    self.valid,
-                    max_budget=max_budget,
-                    mesh=self.mesh,
-                    batch_axes=(self.batch_axis,),
-                    col_axes=(self.data_axis,),
-                    stop_if_zero=stop_zero,
-                    stop_if_negative=stop_neg,
-                )
-            elif optimizer == "LazyGreedy":
-                from repro.core.optimizers.distributed import sharded_batched_lazy
-
-                order, gains, evals, value = sharded_batched_lazy(
-                    self.rule,
-                    self.parts,
-                    b_arr,
-                    self.valid,
-                    max_budget=max_budget,
-                    mesh=self.mesh,
-                    batch_axes=(self.batch_axis,),
-                    col_axes=(self.data_axis,),
-                    screen_k=int(kwargs.get("screen_k", 8)),
-                    stop_if_zero=stop_zero,
-                    stop_if_negative=stop_neg,
-                )
-            else:
-                raise ValueError(
-                    f"unknown optimizer {optimizer!r}; the sharded engine "
-                    "supports 'NaiveGreedy' and 'LazyGreedy'"
-                )
-            res = GreedyResult(order=order, gains=gains, n_evals=evals, value=value)
-        elif optimizer == "NaiveGreedy":
-            res = _batched_naive(
-                self.stacked, max_budget, b_arr, self.valid, stop_zero, stop_neg
+        hook = defn.sharded_run if self.mesh is not None else defn.batched_run
+        if hook is None:
+            raise ValueError(
+                f"optimizer {opt.name!r} does not support "
+                f"{'sharded' if self.mesh is not None else 'batched'} "
+                f"execution; batched-capable optimizers: {wave_capable_names()}"
             )
-        elif optimizer == "LazyGreedy":
-            res = _batched_lazy(
+        if self.mesh is not None:
+            order, gains, evals, value = hook(
+                self.rule,
+                self.parts,
+                b_arr,
+                self.valid,
+                max_budget,
+                self.mesh,
+                (self.batch_axis,),
+                (self.data_axis,),
+                stop_if_zero,
+                stop_if_negative,
+                **opt.params,
+            )
+            res = GreedyResult(order=order, gains=gains, n_evals=evals, value=value)
+        else:
+            res = hook(
                 self.stacked,
                 max_budget,
                 b_arr,
                 self.valid,
-                kwargs.get("screen_k", 8),
-                stop_zero,
-                stop_neg,
-            )
-        else:
-            raise ValueError(
-                f"unknown optimizer {optimizer!r}; batched engine supports "
-                "'NaiveGreedy' and 'LazyGreedy'"
+                stop_if_zero,
+                stop_if_negative,
+                **opt.params,
             )
         # one transfer for the whole batch, then host-side slicing — B tiny
         # device slices would dominate small-query serving latency
         order, gains, evals, value = jax.device_get(
             (res.order, res.gains, res.n_evals, res.value)
         )
-        results = [
+        return [
             GreedyResult(
                 order=order[i, :b],
                 gains=gains[i, :b],
@@ -266,7 +255,46 @@ class BatchedEngine:
             )
             for i, b in enumerate(budgets)
         ]
+
+    def maximize(
+        self,
+        budget: int | Sequence[int],
+        optimizer: str = "NaiveGreedy",
+        return_result: bool = False,
+        max_budget: int | None = None,
+        **kwargs,
+    ) -> list:
+        """Deprecated: delegate to :meth:`run` with an :class:`OptimizerSpec`
+        built from ``optimizer`` + kwargs (unknown options now raise)."""
+        from repro.core.optimizers.api import _warn_shim
+
+        _warn_shim(
+            "BatchedEngine.maximize()",
+            "BatchedEngine.run(budgets, OptimizerSpec(...))",
+        )
+        opt, stop_zero, stop_neg = _legacy_optimizer_spec(optimizer, kwargs)
+        results = self.run(
+            budget,
+            opt,
+            stop_if_zero=stop_zero,
+            stop_if_negative=stop_neg,
+            max_budget=max_budget,
+        )
         return results if return_result else [r.as_list() for r in results]
+
+
+def _legacy_optimizer_spec(optimizer: str, kwargs: dict):
+    """Split legacy ``**kwargs`` into (OptimizerSpec, stop_zero, stop_neg).
+
+    Shared by the deprecated engine entry points: stop rules keep their old
+    engine-level ``True`` defaults (family defaults are a spec-layer
+    concern), everything else is validated as optimizer hyperparameters —
+    so a misspelled flag raises instead of being silently dropped.
+    """
+    kwargs = dict(kwargs)
+    stop_zero = bool(kwargs.pop("stopIfZeroGain", True))
+    stop_neg = bool(kwargs.pop("stopIfNegativeGain", True))
+    return OptimizerSpec(optimizer, **kwargs), stop_zero, stop_neg
 
 
 def batched_maximize(
@@ -280,7 +308,10 @@ def batched_maximize(
     data_axis: str = "data",
     **kwargs,
 ) -> list:
-    """Solve B selection problems in one jitted program.
+    """Deprecated one-shot wrapper: solve B selection problems in one jitted
+    program.  Use ``solve([SelectionSpec(...), ...], mode="batched")`` (or
+    ``mesh=`` for the sharded route); for a padded batch with a ``valid``
+    mask, build a :class:`BatchedEngine` and call :meth:`BatchedEngine.run`.
 
     Args:
       fns: B same-family SetFunction instances (identical static meta).
@@ -292,18 +323,23 @@ def batched_maximize(
         submodlib-style [(index, gain), ...] lists.
       mesh: optional 2-D mesh — shard the batch axis over ``batch_axis`` and
         the candidate axis over ``data_axis`` (the distributed batched form).
-      kwargs: stopIfZeroGain / stopIfNegativeGain / screen_k, as `maximize`.
-
-    For repeated selections over the same instances, build a
-    :class:`BatchedEngine` once and call its ``maximize`` — that skips the
-    per-call restacking of the B kernels.
+      kwargs: stopIfZeroGain / stopIfNegativeGain / optimizer
+        hyperparameters (screen_k); unknown options raise ``TypeError``.
     """
+    from repro.core.optimizers.api import _warn_shim
+
+    _warn_shim(
+        "batched_maximize()",
+        'solve([SelectionSpec(...), ...], mode="batched")',
+    )
     fns = list(fns)
     if not fns:
         return []
+    opt, stop_zero, stop_neg = _legacy_optimizer_spec(optimizer, kwargs)
     engine = BatchedEngine(
         fns, valid=valid, mesh=mesh, batch_axis=batch_axis, data_axis=data_axis
     )
-    return engine.maximize(
-        budget, optimizer=optimizer, return_result=return_result, **kwargs
+    results = engine.run(
+        budget, opt, stop_if_zero=stop_zero, stop_if_negative=stop_neg
     )
+    return results if return_result else [r.as_list() for r in results]

@@ -1,0 +1,788 @@
+"""Typed selection specs and the ``solve()`` front door.
+
+The paper's headline is a *rich, flexible API* over one optimization engine
+(§7: ``f.maximize(budget, optimizer, stopIfZeroGain, ...)``).  This module is
+that API, redesigned so ONE request object travels unchanged through every
+execution route the library has grown:
+
+- :class:`OptimizerSpec` — an optimizer name plus validated, defaulted
+  hyperparameters, backed by the first-class :func:`register_optimizer`
+  registry (which replaced the old ``_OPTIMIZERS`` lambda table in
+  ``optimizers/api.py``).  Unknown names raise ``ValueError`` naming the
+  registered set; unknown or ill-typed hyperparameters raise ``TypeError``
+  naming the valid set — at construction, before any trace or flush.
+- :class:`SelectionSpec` — function + budget + optimizer spec + stop rules +
+  backend choice.  Stop-rule defaults resolve against the per-family table
+  (:func:`register_family_defaults`) in exactly one place, so sequential,
+  batched, sharded, and served execution agree (the Disparity*
+  ``stopIfZeroGain=False`` default lives here now, not in the server).
+- :func:`solve` — the single front door:
+
+      solve(spec)                          # sequential
+      solve([s1, s2, ...], mode="batched") # B specs -> one vmap-ed wave
+      solve(specs, mesh=mesh)              # sharded over a 2-D device mesh
+      solve(specs, mode="served")          # coalesced heterogeneous waves
+      solve(specs, mode="async")           # futures via AsyncSelectionServer
+
+  Every route returns :class:`~repro.core.optimizers.greedy.GreedyResult`
+  objects that are bit-identical across modes (ids, gains, ``n_evals``) —
+  the serving contract the repo pins everywhere.
+
+Both specs are **pytree-serializable**: ``OptimizerSpec`` flattens to zero
+leaves (it is pure static metadata, hashable, so it rides jit cache keys);
+``SelectionSpec`` flattens to its function pytree with everything else as
+static aux data — a spec passes through ``jax.jit`` / ``jax.vmap``
+boundaries and round-trips ``to_dict()`` / ``from_dict()``.
+
+The legacy entry points — ``maximize``, ``batched_maximize``,
+``BatchedEngine.maximize``, ``SelectionServer.submit(fn, budget, ...)`` —
+are deprecated shims over this module (see docs/api.md for the migration
+table); ``tools/check_shims.py`` gates that no internal caller uses them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.functions.base import SetFunction
+from repro.core.optimizers.greedy import (
+    GreedyResult,
+    lazier_than_lazy_greedy,
+    lazy_greedy,
+    naive_greedy,
+    stochastic_greedy,
+)
+
+__all__ = [
+    "OptimizerSpec",
+    "SelectionSpec",
+    "solve",
+    "register_optimizer",
+    "register_family_defaults",
+    "optimizer_names",
+    "resolve_optimizer",
+    "wave_capable_names",
+    "family_defaults",
+]
+
+
+# ---------------------------------------------------------------------------
+# Hyperparameter validation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """One optimizer hyperparameter: its default and a coercing validator.
+
+    ``convert`` receives the user value and returns the normalized form, or
+    raises ``TypeError`` / ``ValueError`` with an actionable message.
+    """
+
+    default: object
+    convert: Callable[[object], object]
+    doc: str = ""
+
+
+def _int_min(lo: int) -> Callable:
+    def convert(v):
+        i = int(v)
+        if i < lo:
+            raise ValueError(f"must be an int >= {lo}, got {v!r}")
+        return i
+
+    return convert
+
+
+def _opt_int_min(lo: int) -> Callable:
+    base = _int_min(lo)
+
+    def convert(v):
+        return None if v is None else base(v)
+
+    return convert
+
+
+def _unit_float(v) -> float:
+    f = float(v)
+    if not 0.0 < f <= 1.0:
+        raise ValueError(f"must be a float in (0, 1], got {v!r}")
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Optimizer registry (replaces the api.py _OPTIMIZERS lambda table)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerDef:
+    """A registered optimizer: hyperparameter schema + execution hooks.
+
+    ``run`` answers a single sequential query.  ``batched_run`` /
+    ``sharded_run`` are the wave-shaped hooks consumed by
+    :class:`~repro.core.optimizers.batched.BatchedEngine`; ``None`` means the
+    optimizer cannot ride batched / sharded / served waves (it is rejected at
+    spec-routing or submit time, never mid-flush).
+    """
+
+    name: str
+    params: Mapping[str, Param]
+    run: Callable  # (fn, budget, stop_zero, stop_neg, **params) -> GreedyResult
+    batched_run: Optional[Callable] = None
+    sharded_run: Optional[Callable] = None
+
+    @property
+    def batched_capable(self) -> bool:
+        return self.batched_run is not None and self.sharded_run is not None
+
+
+_OPTIMIZERS: dict[str, OptimizerDef] = {}
+
+
+def register_optimizer(
+    name: str,
+    run: Callable,
+    *,
+    params: Mapping[str, Param] | None = None,
+    batched_run: Callable | None = None,
+    sharded_run: Callable | None = None,
+) -> OptimizerDef:
+    """Register (or replace) an optimizer under ``name``.
+
+    ``params`` maps hyperparameter names to :class:`Param` (default +
+    validator); :class:`OptimizerSpec` construction validates against it, so
+    a misspelled option fails with a ``TypeError`` naming the valid set
+    instead of being silently dropped (the old ``kw.get`` behaviour).
+    """
+    defn = OptimizerDef(
+        name=name,
+        params=dict(params or {}),
+        run=run,
+        batched_run=batched_run,
+        sharded_run=sharded_run,
+    )
+    _OPTIMIZERS[name] = defn
+    return defn
+
+
+def optimizer_names() -> list[str]:
+    """The registered optimizer names, sorted."""
+    return sorted(_OPTIMIZERS)
+
+
+def resolve_optimizer(name: str) -> OptimizerDef:
+    """The :class:`OptimizerDef` registered under ``name``, or a
+    ``ValueError`` naming the registered set."""
+    defn = _OPTIMIZERS.get(name)
+    if defn is None:
+        raise ValueError(
+            f"unknown optimizer {name!r}; choose from {optimizer_names()} "
+            "(register new ones via repro.core.register_optimizer)"
+        )
+    return defn
+
+
+def wave_capable_names() -> list[str]:
+    """Optimizers with BOTH batched and sharded execution hooks — the set a
+    wave route (batched / sharded / served / async) can accept.  The single
+    source for every 'batched-capable optimizers: [...]' rejection."""
+    return [n for n in optimizer_names() if _OPTIMIZERS[n].batched_capable]
+
+
+# ---------------------------------------------------------------------------
+# OptimizerSpec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, init=False)
+class OptimizerSpec:
+    """A validated (optimizer name, hyperparameters) pair.
+
+        OptimizerSpec("LazyGreedy", screen_k=16)
+
+    Unspecified hyperparameters are filled with their registered defaults at
+    construction, so ``spec.params`` is always the complete resolved set.
+    Instances are hashable static metadata: as a pytree they flatten to zero
+    leaves (the spec itself is the treedef aux), so they ride jit cache keys
+    and wave-coalescing group keys directly.
+    """
+
+    name: str
+    _params: tuple  # sorted ((name, value), ...), fully defaulted
+
+    def __init__(self, name: str, **params):
+        if isinstance(name, OptimizerSpec):  # idempotent copy-construction
+            if params:
+                raise TypeError(
+                    "cannot pass hyperparameters alongside an existing "
+                    "OptimizerSpec; build a new one instead"
+                )
+            object.__setattr__(self, "name", name.name)
+            object.__setattr__(self, "_params", name._params)
+            return
+        defn = resolve_optimizer(name)
+        unknown = set(params) - set(defn.params)
+        if unknown:
+            raise TypeError(
+                f"{defn.name} got unknown option(s) {sorted(unknown)}; "
+                f"valid options: {sorted(defn.params)}"
+            )
+        resolved = {}
+        for pname, p in defn.params.items():
+            value = params.get(pname, p.default)
+            try:
+                resolved[pname] = p.convert(value)
+            except (TypeError, ValueError) as e:
+                raise TypeError(
+                    f"invalid value for {defn.name} option {pname!r}: {e}"
+                ) from None
+        object.__setattr__(self, "name", defn.name)
+        object.__setattr__(self, "_params", tuple(sorted(resolved.items())))
+
+    @property
+    def params(self) -> dict:
+        """The fully-resolved hyperparameters as a plain dict."""
+        return dict(self._params)
+
+    def to_dict(self) -> dict:
+        """JSON-able form: ``{"name": ..., "params": {...}}``."""
+        return {"name": self.name, "params": self.params}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "OptimizerSpec":
+        return cls(d["name"], **dict(d.get("params", {})))
+
+    def __repr__(self) -> str:
+        args = ", ".join(f"{k}={v!r}" for k, v in self._params)
+        return f"OptimizerSpec({self.name!r}{', ' if args else ''}{args})"
+
+
+jax.tree_util.register_pytree_node(
+    OptimizerSpec,
+    lambda s: ((), s),  # zero leaves; the spec IS the (hashable) aux data
+    lambda aux, _: aux,
+)
+
+
+# ---------------------------------------------------------------------------
+# Per-family stop-rule defaults (the one resolution point)
+# ---------------------------------------------------------------------------
+
+_LIBRARY_STOP_DEFAULTS = {"stopIfZeroGain": True, "stopIfNegativeGain": True}
+
+# class -> partial overrides of the library defaults; resolved along the MRO
+# (most-derived class wins).  The dispersion families register
+# stopIfZeroGain=False here (their empty-set gain is exactly 0, so the
+# library default silently returns an empty selection) — see
+# core/functions/disparity.py.
+_FAMILY_DEFAULTS: dict[type, dict[str, bool]] = {}
+
+
+def register_family_defaults(cls: type, **defaults: bool) -> None:
+    """Override stop-rule defaults for a function family (and subclasses).
+
+    Accepted keys: ``stopIfZeroGain`` / ``stopIfNegativeGain``.  Consumed by
+    :class:`SelectionSpec` when the caller leaves a stop rule unset, so every
+    execution route — sequential, batched, sharded, served — agrees on the
+    family's default stopping semantics.
+    """
+    unknown = set(defaults) - set(_LIBRARY_STOP_DEFAULTS)
+    if unknown:
+        raise TypeError(
+            f"unknown stop-rule default(s) {sorted(unknown)}; "
+            f"valid: {sorted(_LIBRARY_STOP_DEFAULTS)}"
+        )
+    _FAMILY_DEFAULTS.setdefault(cls, {}).update(
+        {k: bool(v) for k, v in defaults.items()}
+    )
+
+
+def family_defaults(cls: type) -> dict[str, bool]:
+    """The resolved stop-rule defaults for ``cls`` (library defaults merged
+    with registered per-family overrides, most-derived class winning)."""
+    out = dict(_LIBRARY_STOP_DEFAULTS)
+    for klass in reversed(cls.__mro__):
+        out.update(_FAMILY_DEFAULTS.get(klass, {}))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SelectionSpec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, init=False, eq=False)
+class SelectionSpec:
+    """One selection request: select ``budget`` items under ``fn``.
+
+        SelectionSpec(fn, budget=8, optimizer="LazyGreedy", screen_k=16)
+
+    Validation happens HERE, at construction — unknown optimizers, unknown
+    or ill-typed hyperparameters, non-function ``fn`` objects, and backend
+    overrides the family cannot honor all raise before anything is traced,
+    dispatched, or flushed.  Stop rules left as ``None`` resolve against the
+    per-family default table exactly once (:func:`family_defaults`), so the
+    same spec means the same thing on every execution route.
+
+    ``use_kernel`` is the backend choice: ``None`` leaves the function as
+    built; ``True`` / ``False`` rebuilds it with the fused-Pallas sweep
+    forced on / off at solve time (only for families exposing the flag).
+
+    As a pytree, the function is the only leaf-bearing child; budget,
+    optimizer spec, stop rules and backend choice are static aux data — so a
+    spec crosses ``jit`` / ``vmap`` boundaries and its static half rides the
+    compilation cache key.
+    """
+
+    fn: object
+    budget: int
+    optimizer: OptimizerSpec
+    stop_if_zero: bool
+    stop_if_negative: bool
+    use_kernel: Optional[bool]
+
+    def __init__(
+        self,
+        fn,
+        budget: int,
+        optimizer: str | OptimizerSpec = "NaiveGreedy",
+        *,
+        stopIfZeroGain: bool | None = None,
+        stopIfNegativeGain: bool | None = None,
+        use_kernel: bool | None = None,
+        **optimizer_params,
+    ):
+        if not isinstance(fn, SetFunction):
+            raise TypeError(
+                "SelectionSpec needs a SetFunction instance (e.g. "
+                "FacilityLocation.from_kernel(...)); got "
+                f"{type(fn).__name__!r} — see docs/functions.md for the "
+                "function families"
+            )
+        if isinstance(optimizer, OptimizerSpec):
+            if optimizer_params:
+                raise TypeError(
+                    "cannot pass optimizer hyperparameters "
+                    f"{sorted(optimizer_params)} alongside an OptimizerSpec; "
+                    "set them on the OptimizerSpec itself"
+                )
+            opt = optimizer
+        else:
+            defn = resolve_optimizer(optimizer)
+            unknown = set(optimizer_params) - set(defn.params)
+            if unknown:
+                valid = sorted(defn.params) + [
+                    "stopIfZeroGain",
+                    "stopIfNegativeGain",
+                    "use_kernel",
+                ]
+                raise TypeError(
+                    f"{defn.name} got unknown option(s) {sorted(unknown)}; "
+                    f"valid options: {valid}"
+                )
+            opt = OptimizerSpec(optimizer, **optimizer_params)
+        budget = int(budget)
+        if budget < 1:
+            raise ValueError(f"budget must be a positive int, got {budget}")
+        if use_kernel is not None:
+            names = {f.name for f in dataclasses.fields(fn)}
+            if "use_kernel" not in names:
+                raise TypeError(
+                    f"{type(fn).__name__} has no use_kernel backend flag; "
+                    "leave use_kernel=None for this family (see the README "
+                    "coverage matrix for the fused-sweep families)"
+                )
+            use_kernel = bool(use_kernel)
+        defaults = family_defaults(type(fn))
+        stop_zero = (
+            defaults["stopIfZeroGain"]
+            if stopIfZeroGain is None
+            else bool(stopIfZeroGain)
+        )
+        stop_neg = (
+            defaults["stopIfNegativeGain"]
+            if stopIfNegativeGain is None
+            else bool(stopIfNegativeGain)
+        )
+        object.__setattr__(self, "fn", fn)
+        object.__setattr__(self, "budget", budget)
+        object.__setattr__(self, "optimizer", opt)
+        object.__setattr__(self, "stop_if_zero", stop_zero)
+        object.__setattr__(self, "stop_if_negative", stop_neg)
+        object.__setattr__(self, "use_kernel", use_kernel)
+
+    # -- execution-facing helpers -------------------------------------------
+
+    def resolved_fn(self):
+        """The function with the spec's backend choice applied (identity when
+        ``use_kernel`` is None or already matches)."""
+        if self.use_kernel is None or self.use_kernel == self.fn.use_kernel:
+            return self.fn
+        return dataclasses.replace(self.fn, use_kernel=self.use_kernel)
+
+    @property
+    def static_key(self) -> tuple:
+        """The non-function half, as one hashable tuple (wave-group keys)."""
+        return (
+            self.budget,
+            self.optimizer,
+            self.stop_if_zero,
+            self.stop_if_negative,
+            self.use_kernel,
+        )
+
+    # -- serialization -------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        """Dict form mirroring the constructor keywords.  ``fn`` stays the
+        live pytree (functions carry device arrays; serialize those with your
+        checkpointing layer) — everything else is JSON-able."""
+        return {
+            "fn": self.fn,
+            "budget": self.budget,
+            "optimizer": self.optimizer.to_dict(),
+            "stopIfZeroGain": self.stop_if_zero,
+            "stopIfNegativeGain": self.stop_if_negative,
+            "use_kernel": self.use_kernel,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "SelectionSpec":
+        opt = d.get("optimizer", "NaiveGreedy")
+        if isinstance(opt, Mapping):
+            opt = OptimizerSpec.from_dict(opt)
+        return cls(
+            d["fn"],
+            d["budget"],
+            opt,
+            stopIfZeroGain=d.get("stopIfZeroGain"),
+            stopIfNegativeGain=d.get("stopIfNegativeGain"),
+            use_kernel=d.get("use_kernel"),
+        )
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, SelectionSpec):
+            return NotImplemented
+        if self.static_key != other.static_key:
+            return False
+        if jax.tree.structure(self.fn) != jax.tree.structure(other.fn):
+            return False
+        return all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(self.fn), jax.tree.leaves(other.fn))
+        )
+
+    __hash__ = None  # function leaves are arrays; use static_key for hashing
+
+    def __repr__(self) -> str:
+        return (
+            f"SelectionSpec({type(self.fn).__name__}(n={self.fn.n}), "
+            f"budget={self.budget}, optimizer={self.optimizer!r}, "
+            f"stopIfZeroGain={self.stop_if_zero}, "
+            f"stopIfNegativeGain={self.stop_if_negative}, "
+            f"use_kernel={self.use_kernel})"
+        )
+
+
+def _spec_flatten(s: SelectionSpec):
+    return (s.fn,), s.static_key
+
+
+def _spec_unflatten(aux, children):
+    budget, optimizer, stop_zero, stop_neg, use_kernel = aux
+    obj = object.__new__(SelectionSpec)
+    object.__setattr__(obj, "fn", children[0])
+    object.__setattr__(obj, "budget", budget)
+    object.__setattr__(obj, "optimizer", optimizer)
+    object.__setattr__(obj, "stop_if_zero", stop_zero)
+    object.__setattr__(obj, "stop_if_negative", stop_neg)
+    object.__setattr__(obj, "use_kernel", use_kernel)
+    return obj
+
+
+jax.tree_util.register_pytree_node(SelectionSpec, _spec_flatten, _spec_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# solve(): the one front door
+# ---------------------------------------------------------------------------
+
+_MODES = ("sequential", "batched", "sharded", "served", "async")
+
+
+def solve(
+    spec: SelectionSpec | Sequence[SelectionSpec],
+    *,
+    mode: str | None = None,
+    mesh=None,
+    batch_axis: str = "batch",
+    data_axis: str = "data",
+    server=None,
+):
+    """Solve one spec, or a batch of specs, through one execution route.
+
+    Args:
+      spec: a :class:`SelectionSpec` (returns one
+        :class:`~repro.core.optimizers.greedy.GreedyResult`) or a sequence of
+        them (returns a list in the same order).
+      mode: ``"sequential"`` (default for one spec; a Python loop for
+        several), ``"batched"`` (default for several specs: one vmap-ed wave
+        — the specs must agree on family, shapes, optimizer and stop rules;
+        heterogeneous workloads belong in ``"served"``), ``"sharded"``
+        (batched over a 2-D ``mesh``), ``"served"`` (heterogeneous specs
+        coalesced into padded waves by a
+        :class:`~repro.launch.serve.SelectionServer`), or ``"async"``
+        (submitted to an :class:`~repro.launch.async_serve.AsyncSelectionServer`
+        and awaited — the futures route, driven synchronously).
+      mesh: a 2-D jax Mesh for the sharded route (passing one with
+        mode unset/batched implies ``"sharded"``; served/async servers built
+        here also shard over it).
+      server: an existing ``SelectionServer`` (served) or
+        ``AsyncSelectionServer`` (async) to route through; one is built — and
+        torn down — internally when omitted.
+
+    Every route returns results bit-identical to the sequential one (ids,
+    gains, and — when a served request's n sits at its padding bucket —
+    ``n_evals``); ``tests/test_spec.py`` pins this, including on a real
+    2x2 device mesh.
+    """
+    single = isinstance(spec, SelectionSpec)
+    specs = [spec] if single else list(spec)
+    for i, s in enumerate(specs):
+        if not isinstance(s, SelectionSpec):
+            raise TypeError(
+                f"solve() takes SelectionSpec objects; item {i} is "
+                f"{type(s).__name__!r}"
+            )
+    if mode is None:
+        mode = "sequential" if single and mesh is None else "batched"
+    if mode == "batched" and mesh is not None:
+        mode = "sharded"
+    if mode not in _MODES:
+        raise ValueError(f"unknown mode {mode!r}; choose from {list(_MODES)}")
+    if not specs:
+        return []
+
+    if mode == "sequential":
+        results = [_run_sequential(s) for s in specs]
+    elif mode in ("batched", "sharded"):
+        if mode == "sharded" and mesh is None:
+            raise ValueError('mode="sharded" needs a 2-D mesh= (batch x data)')
+        results = _run_batched(
+            specs, mesh=mesh, batch_axis=batch_axis, data_axis=data_axis
+        )
+    elif mode == "served":
+        results = _run_served(
+            specs, server, mesh=mesh, batch_axis=batch_axis, data_axis=data_axis
+        )
+    else:  # async
+        results = _run_async(
+            specs, server, mesh=mesh, batch_axis=batch_axis, data_axis=data_axis
+        )
+    return results[0] if single else results
+
+
+def _run_sequential(spec: SelectionSpec) -> GreedyResult:
+    defn = resolve_optimizer(spec.optimizer.name)
+    return defn.run(
+        spec.resolved_fn(),
+        spec.budget,
+        spec.stop_if_zero,
+        spec.stop_if_negative,
+        **spec.optimizer.params,
+    )
+
+
+def _check_uniform(specs: Sequence[SelectionSpec], what: str) -> None:
+    head = specs[0]
+    for s in specs[1:]:
+        if (
+            s.optimizer != head.optimizer
+            or s.stop_if_zero != head.stop_if_zero
+            or s.stop_if_negative != head.stop_if_negative
+        ):
+            raise ValueError(
+                f"mode={what!r} runs one wave, so every spec must share the "
+                "optimizer spec and stop rules; mixed workloads belong in "
+                'mode="served" (the coalescer groups them into waves)'
+            )
+
+
+def _run_batched(specs, *, mesh, batch_axis, data_axis) -> list[GreedyResult]:
+    from repro.core.optimizers.batched import BatchedEngine
+
+    _check_uniform(specs, "sharded" if mesh is not None else "batched")
+    head = specs[0]
+    engine = BatchedEngine(
+        [s.resolved_fn() for s in specs],
+        mesh=mesh,
+        batch_axis=batch_axis,
+        data_axis=data_axis,
+    )
+    return engine.run(
+        [s.budget for s in specs],
+        head.optimizer,
+        stop_if_zero=head.stop_if_zero,
+        stop_if_negative=head.stop_if_negative,
+    )
+
+
+def _run_served(specs, server, *, mesh, batch_axis, data_axis):
+    from repro.launch.serve import SelectionServer
+
+    if server is None:
+        server = SelectionServer(
+            mesh=mesh, batch_axis=batch_axis, data_axis=data_axis
+        )
+    # select() (not a bare flush) so responses to requests the caller
+    # enqueued earlier on their own server are re-held for THEIR next
+    # flush() instead of being dropped here
+    return [resp.result for resp in server.select(specs)]
+
+
+def _run_async(specs, server, *, mesh, batch_axis, data_axis):
+    from repro.launch.async_serve import AsyncSelectionServer
+
+    owned = server is None
+    if owned:
+        server = AsyncSelectionServer(
+            mesh=mesh, batch_axis=batch_axis, data_axis=data_axis
+        )
+    try:
+        futures = [server.submit(s) for s in specs]
+        server.flush_now()
+        return [f.result().result for f in futures]
+    finally:
+        if owned:
+            server.close()
+
+
+# ---------------------------------------------------------------------------
+# Built-in optimizer registrations
+# ---------------------------------------------------------------------------
+# The batched/sharded hooks import lazily: batched.py and distributed.py both
+# import THIS module for OptimizerSpec/resolve_optimizer, so the engine side
+# must not be a module-level dependency here.
+
+def _naive_run(fn, budget, stop_zero, stop_neg):
+    return naive_greedy(fn, budget, stop_zero, stop_neg)
+
+
+def _naive_batched(stacked, max_budget, budgets, valid, stop_zero, stop_neg):
+    from repro.core.optimizers.batched import _batched_naive
+
+    return _batched_naive(stacked, max_budget, budgets, valid, stop_zero, stop_neg)
+
+
+def _naive_sharded(
+    rule, parts, budgets, valid, max_budget, mesh, batch_axes, col_axes,
+    stop_zero, stop_neg,
+):
+    from repro.core.optimizers.distributed import sharded_batched_greedy
+
+    return sharded_batched_greedy(
+        rule,
+        parts,
+        budgets,
+        valid,
+        max_budget=max_budget,
+        mesh=mesh,
+        batch_axes=batch_axes,
+        col_axes=col_axes,
+        stop_if_zero=stop_zero,
+        stop_if_negative=stop_neg,
+    )
+
+
+def _lazy_run(fn, budget, stop_zero, stop_neg, *, screen_k):
+    return lazy_greedy(fn, budget, screen_k, stop_zero, stop_neg)
+
+
+def _lazy_batched(
+    stacked, max_budget, budgets, valid, stop_zero, stop_neg, *, screen_k
+):
+    from repro.core.optimizers.batched import _batched_lazy
+
+    return _batched_lazy(
+        stacked, max_budget, budgets, valid, screen_k, stop_zero, stop_neg
+    )
+
+
+def _lazy_sharded(
+    rule, parts, budgets, valid, max_budget, mesh, batch_axes, col_axes,
+    stop_zero, stop_neg, *, screen_k,
+):
+    from repro.core.optimizers.distributed import sharded_batched_lazy
+
+    return sharded_batched_lazy(
+        rule,
+        parts,
+        budgets,
+        valid,
+        max_budget=max_budget,
+        mesh=mesh,
+        batch_axes=batch_axes,
+        col_axes=col_axes,
+        screen_k=screen_k,
+        stop_if_zero=stop_zero,
+        stop_if_negative=stop_neg,
+    )
+
+
+def _stochastic_run(
+    fn, budget, stop_zero, stop_neg, *, seed, epsilon, sample_size
+):
+    return stochastic_greedy(
+        fn,
+        budget,
+        jax.random.PRNGKey(seed),
+        epsilon,
+        sample_size,
+        stop_zero,
+        stop_neg,
+    )
+
+
+def _ltl_run(
+    fn, budget, stop_zero, stop_neg, *, seed, epsilon, sample_size, screen_k
+):
+    return lazier_than_lazy_greedy(
+        fn,
+        budget,
+        jax.random.PRNGKey(seed),
+        epsilon,
+        sample_size,
+        screen_k,
+        stop_zero,
+        stop_neg,
+    )
+
+
+_SCREEN_K = Param(8, _int_min(1), "lazy screen width (doubling levels)")
+_SAMPLING = {
+    "seed": Param(0, _int_min(0), "PRNG seed for the per-step subsample"),
+    "epsilon": Param(0.01, _unit_float, "approximation slack in (0, 1]"),
+    "sample_size": Param(
+        None, _opt_int_min(1), "per-step subsample size (None: from epsilon)"
+    ),
+}
+
+register_optimizer(
+    "NaiveGreedy",
+    _naive_run,
+    batched_run=_naive_batched,
+    sharded_run=_naive_sharded,
+)
+register_optimizer(
+    "LazyGreedy",
+    _lazy_run,
+    params={"screen_k": _SCREEN_K},
+    batched_run=_lazy_batched,
+    sharded_run=_lazy_sharded,
+)
+register_optimizer("StochasticGreedy", _stochastic_run, params=dict(_SAMPLING))
+register_optimizer(
+    "LazierThanLazyGreedy",
+    _ltl_run,
+    params={**_SAMPLING, "screen_k": _SCREEN_K},
+)

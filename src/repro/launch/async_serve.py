@@ -1,0 +1,202 @@
+"""Async selection serving: futures over the synchronous coalescer.
+
+:class:`AsyncSelectionServer` wraps a :class:`~repro.launch.serve.SelectionServer`
+with the two flush triggers a latency-bounded deployment needs:
+
+- **queue depth**: the moment ``max_pending`` requests are waiting, a flush
+  dispatches them as coalesced waves (throughput trigger);
+- **timer**: a request never waits longer than ``flush_interval`` seconds
+  for co-travellers — a lone request is dispatched when its deadline hits
+  (latency trigger).
+
+``submit(spec)`` returns a ``concurrent.futures.Future`` that resolves to
+the request's :class:`~repro.launch.serve.SelectionResponse` (await it from
+asyncio via ``asyncio.wrap_future``).  Because requests are already
+:class:`~repro.core.optimizers.spec.SelectionSpec` objects, the wrapper
+reuses ``coalesce()`` and the batched engines **unchanged** — same waves,
+same padding, same bit-identical results as synchronous serving and
+sequential ``solve()``.
+
+    server = AsyncSelectionServer(max_pending=16, flush_interval=0.02)
+    fut = server.submit(SelectionSpec(fn, budget))
+    response = fut.result()          # [(index, gain), ...] in .selection
+    server.close()                   # or use it as a context manager
+
+Thread-safety: all SelectionServer state is touched under one lock, by the
+submitting thread (validation) and the flush thread (dispatch).  Dispatch
+holds the lock — submissions arriving mid-flush enqueue as soon as it
+completes and ride the next wave, which is the coalescing behaviour a
+synchronous flush loop would give them anyway.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+
+from repro.core.optimizers.spec import SelectionSpec
+from repro.launch.serve import SelectionServer
+
+
+class AsyncSelectionServer:
+    """Timer / queue-depth triggered flush wrapper around ``SelectionServer``.
+
+    Args:
+      server: an existing :class:`SelectionServer` to drive, or None to
+        build one from ``mesh`` / ``max_wave`` / axis names.
+      max_pending: flush as soon as this many requests are waiting.
+      flush_interval: flush whenever the OLDEST pending request has waited
+        this many seconds (so a lone request is never stranded).
+      mesh, batch_axis, data_axis, max_wave: forwarded to the internal
+        ``SelectionServer`` when ``server`` is None.
+    """
+
+    def __init__(
+        self,
+        server: SelectionServer | None = None,
+        *,
+        max_pending: int = 16,
+        flush_interval: float = 0.05,
+        mesh=None,
+        batch_axis: str = "batch",
+        data_axis: str = "data",
+        max_wave: int = 64,
+    ):
+        if max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        if flush_interval <= 0:
+            raise ValueError(
+                f"flush_interval must be positive, got {flush_interval}"
+            )
+        self._server = (
+            server
+            if server is not None
+            else SelectionServer(
+                mesh=mesh,
+                batch_axis=batch_axis,
+                data_axis=data_axis,
+                max_wave=max_wave,
+            )
+        )
+        self.max_pending = int(max_pending)
+        self.flush_interval = float(flush_interval)
+        self._cv = threading.Condition()
+        self._futures: dict = {}  # rid -> Future, for the NEXT flush
+        self._oldest: float | None = None  # monotonic enqueue time
+        self._closed = False
+        self.flushes = 0  # completed flush count (observability / tests)
+        self._thread = threading.Thread(
+            target=self._loop, name="AsyncSelectionServer", daemon=True
+        )
+        self._thread.start()
+
+    # -- client API ----------------------------------------------------------
+
+    def submit(self, spec: SelectionSpec, rid=None) -> Future:
+        """Enqueue one :class:`SelectionSpec`; returns a Future resolving to
+        its :class:`~repro.launch.serve.SelectionResponse`.
+
+        Validation is synchronous and immediate (unsupported family /
+        non-batched optimizer raise HERE, exactly like
+        ``SelectionServer.submit_spec``); only the dispatch is deferred to a
+        flush trigger.  Awaitable from asyncio via ``asyncio.wrap_future``.
+        """
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("AsyncSelectionServer is closed")
+            rid = self._server.submit_spec(spec, rid=rid)
+            fut: Future = Future()
+            self._futures[rid] = fut
+            if self._oldest is None:
+                self._oldest = time.monotonic()
+            self._cv.notify_all()  # depth trigger is evaluated in the loop
+        return fut
+
+    def flush_now(self) -> None:
+        """Dispatch everything pending immediately (manual trigger)."""
+        with self._cv:
+            self._flush_locked()
+
+    def close(self, flush: bool = True) -> None:
+        """Stop the flush thread.  Pending futures are dispatched first when
+        ``flush`` (default) — otherwise they are cancelled."""
+        with self._cv:
+            if self._closed:
+                return
+            if flush:
+                self._flush_locked()
+            else:
+                for fut in self._futures.values():
+                    fut.cancel()
+                self._futures.clear()
+                self._oldest = None
+            self._closed = True
+            self._cv.notify_all()
+        self._thread.join()
+
+    def __enter__(self) -> "AsyncSelectionServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def pending(self) -> int:
+        with self._cv:
+            return len(self._futures)
+
+    @property
+    def stats(self):
+        """The wrapped server's aggregate accounting."""
+        return self._server.stats
+
+    # -- flush machinery -----------------------------------------------------
+
+    def _flush_locked(self) -> None:
+        """Dispatch pending requests and complete their futures.  Caller
+        holds the condition lock."""
+        if not self._futures:
+            return
+        futures, self._futures = self._futures, {}
+        self._oldest = None
+        try:
+            responses = self._server.flush()
+        except BaseException as e:  # complete ALL futures, never strand one
+            for fut in futures.values():
+                if not fut.cancelled():
+                    fut.set_exception(e)
+            return
+        self.flushes += 1
+        for rid, fut in futures.items():
+            if fut.cancelled():
+                continue
+            if rid in responses:
+                fut.set_result(responses.pop(rid))
+            else:  # cannot happen while flush() returns every rid; be loud
+                fut.set_exception(
+                    KeyError(f"flush returned no response for rid {rid!r}")
+                )
+        if responses:
+            # requests enqueued directly on the wrapped sync server rode this
+            # flush; re-hold their responses for the sync caller's flush()
+            self._server.hold_undelivered(responses)
+
+    def _loop(self) -> None:
+        with self._cv:
+            while not self._closed:
+                now = time.monotonic()
+                deadline = (
+                    None
+                    if self._oldest is None
+                    else self._oldest + self.flush_interval
+                )
+                if len(self._futures) >= self.max_pending or (
+                    deadline is not None and now >= deadline
+                ):
+                    self._flush_locked()
+                    continue
+                # wait for a trigger: a submit notification, the oldest
+                # request's deadline, or close()
+                self._cv.wait(
+                    timeout=None if deadline is None else deadline - now
+                )

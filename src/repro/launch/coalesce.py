@@ -55,19 +55,29 @@ from repro.core.functions.log_det import LogDet
 from repro.core.functions.set_cover import ProbabilisticSetCover, SetCover
 from repro.core.info.fl import FLCG, FLCMI, FLQMI, FLVMI
 from repro.core.info.gc import GCMI
+from repro.core.optimizers.spec import OptimizerSpec, SelectionSpec
 
 
 @dataclasses.dataclass
 class SelectionRequest:
-    """One user query: select ``budget`` items under ``fn``."""
+    """One enqueued query: a request id plus its :class:`SelectionSpec`.
+
+    The request IS the spec — serving adds only routing identity (``rid``),
+    which is what lets the coalescer, the batched engines, and the async
+    front end all consume the same validated object unchanged.
+    """
 
     rid: int | str
-    fn: object  # a SetFunction instance
-    budget: int
-    optimizer: str = "NaiveGreedy"
-    stop_if_zero: bool = True
-    stop_if_negative: bool = True
-    screen_k: int = 8  # LazyGreedy screen width (ignored by NaiveGreedy)
+    spec: SelectionSpec
+
+    @property
+    def fn(self):
+        """The function with the spec's backend choice applied."""
+        return self.spec.resolved_fn()
+
+    @property
+    def budget(self) -> int:
+        return self.spec.budget
 
 
 def next_pow2(x: int) -> int:
@@ -269,10 +279,9 @@ class Wave:
     valid: np.ndarray  # (B, n_bucket) bool
     budgets: list[int]  # per-slot budgets; 0 for batch-pad slots
     max_budget: int  # static loop bound (pow2 bucket of the largest budget)
-    optimizer: str
+    optimizer: OptimizerSpec  # shared by the wave (hyperparameters included)
     stop_if_zero: bool
     stop_if_negative: bool
-    screen_k: int
     n_bucket: int
 
     @property
@@ -293,13 +302,15 @@ class Wave:
 def _wave_key(req: SelectionRequest, fn_padded) -> tuple:
     structure = jax.tree.structure(fn_padded)
     shapes = tuple(tuple(leaf.shape) for leaf in jax.tree.leaves(fn_padded))
+    spec = req.spec
+    # the OptimizerSpec is hashable static metadata, so it IS the key entry —
+    # hyperparameters (screen_k, ...) ride along without being enumerated
     return (
         structure,
         shapes,
-        req.optimizer,
-        req.stop_if_zero,
-        req.stop_if_negative,
-        req.screen_k,
+        spec.optimizer,
+        spec.stop_if_zero,
+        spec.stop_if_negative,
     )
 
 
@@ -324,13 +335,14 @@ def coalesce(
     """
     groups: dict[tuple, list[tuple[SelectionRequest, object]]] = {}
     for req in requests:
-        n_bucket = bucket_size(req.fn.n, n_multiple)
-        padded = pad_function(req.fn, n_bucket)
+        fn = req.fn  # the spec's backend choice applied
+        n_bucket = bucket_size(fn.n, n_multiple)
+        padded = pad_function(fn, n_bucket)
         groups.setdefault(_wave_key(req, padded), []).append((req, padded))
 
     waves = []
     for key, members in groups.items():
-        _, _, optimizer, stop_zero, stop_neg, screen_k = key
+        _, _, optimizer, stop_zero, stop_neg = key
         for lo in range(0, len(members), max_wave):
             chunk = members[lo : lo + max_wave]
             reqs = [r for r, _ in chunk]
@@ -343,7 +355,7 @@ def coalesce(
             n_bucket = fns[0].n
             valid = np.zeros((b_total, n_bucket), bool)
             for i in range(b_total):
-                true_n = reqs[i].fn.n if i < len(reqs) else reqs[0].fn.n
+                true_n = reqs[i].spec.fn.n if i < len(reqs) else reqs[0].spec.fn.n
                 valid[i, :true_n] = True
             waves.append(
                 Wave(
@@ -355,7 +367,6 @@ def coalesce(
                     optimizer=optimizer,
                     stop_if_zero=stop_zero,
                     stop_if_negative=stop_neg,
-                    screen_k=screen_k,
                     n_bucket=n_bucket,
                 )
             )

@@ -2,8 +2,9 @@
 
 This is the serving shape for submodular subset selection (the paper's
 engine is single-node, one query at a time): clients submit selection
-requests — a function instance, a budget, an optimizer — and the server
-answers them in **waves**:
+requests — :class:`~repro.core.optimizers.spec.SelectionSpec` objects, the
+same typed request the whole library runs on — and the server answers them
+in **waves**:
 
   submit()  ->  pending queue
   flush()   ->  coalesce into padded (function-family, n-bucket) waves
@@ -35,6 +36,11 @@ import numpy as np
 
 from repro.core.optimizers.backends import backend_name
 from repro.core.optimizers.batched import BatchedEngine
+from repro.core.optimizers.spec import (
+    SelectionSpec,
+    resolve_optimizer,
+    wave_capable_names,
+)
 from repro.launch.coalesce import SelectionRequest, Wave, coalesce
 
 
@@ -92,9 +98,10 @@ class SelectionServer:
         sizes.
       max_wave: cap on real requests per wave (bounds per-wave latency).
 
-    The dispatch path is synchronous; ``submit`` only enqueues, so an async
-    front-end is a thin wrapper that calls ``flush`` on a timer or queue-depth
-    trigger and completes futures from the returned dict.
+    The dispatch path is synchronous; ``submit`` only enqueues.  The async
+    front-end that flushes on timer / queue-depth triggers and completes
+    futures from the returned dict is
+    :class:`repro.launch.async_serve.AsyncSelectionServer`.
     """
 
     def __init__(
@@ -127,65 +134,84 @@ class SelectionServer:
 
     # -- request ingest ------------------------------------------------------
 
+    def submit_spec(self, spec: SelectionSpec, rid=None):
+        """Enqueue one validated :class:`SelectionSpec`; returns its request
+        id.
+
+        Everything that could poison a flush is rejected HERE, at submit
+        time, so a bad request can never abort the flush that would have
+        answered everyone else's:
+
+        - an unsupported function family (no registered padder) raises
+          ``NotImplementedError`` naming ``register_padder``;
+        - an optimizer without batched execution hooks (e.g.
+          StochasticGreedy) raises ``ValueError`` naming the batched-capable
+          set.
+
+        Unknown optimizer names, misspelled hyperparameters, and family
+        stop-rule defaults were already handled when the spec was built —
+        requests are specs, so serving adds no second validation dialect.
+        """
+        from repro.launch.coalesce import resolve_padder
+
+        if not isinstance(spec, SelectionSpec):
+            raise TypeError(
+                f"submit_spec() takes a SelectionSpec, got {type(spec).__name__!r}"
+            )
+        resolve_padder(type(spec.fn))  # raises NotImplementedError if unsupported
+        defn = resolve_optimizer(spec.optimizer.name)
+        if not defn.batched_capable:
+            raise ValueError(
+                f"optimizer {spec.optimizer.name!r} has no batched execution "
+                f"hooks, so it cannot ride served waves; batched-capable "
+                f"optimizers: {wave_capable_names()}"
+            )
+        if rid is None:
+            rid = self._next_rid
+            self._next_rid += 1
+        self._pending.append(SelectionRequest(rid=rid, spec=spec))
+        return rid
+
     def submit(
         self,
-        fn,
-        budget: int,
-        optimizer: str = "NaiveGreedy",
+        request,
+        budget: int | None = None,
+        optimizer: str | None = None,
         rid=None,
         **kwargs,
     ):
         """Enqueue one selection request; returns its request id.
 
-        An unsupported function family (no registered padder) is rejected
-        HERE, not at flush time: a bad request must never poison the flush
-        that would have answered everyone else's.  kwargs: stopIfZeroGain /
-        stopIfNegativeGain / screen_k (LazyGreedy only) — anything else
-        raises, so a misspelled flag cannot silently serve a request under
-        the wrong stopping semantics.
-
-        ``optimizer`` may be "NaiveGreedy" or "LazyGreedy", on and off mesh
-        (sharded lazy waves run the bucketed engine in
-        ``optimizers/distributed.py``).
-
-        Dispersion default: DisparitySum / DisparityMin have an empty-set
-        gain of exactly 0, so the library-wide ``stopIfZeroGain=True``
-        default would silently return an EMPTY selection for every such
-        request.  Unless the caller passes ``stopIfZeroGain`` explicitly,
-        it defaults to False for these two families (an explicit flag
-        always wins).
+        The request is a :class:`SelectionSpec` (the typed path —
+        equivalent to :meth:`submit_spec`).  The legacy
+        ``submit(fn, budget, optimizer=..., stopIfZeroGain=..., screen_k=...)``
+        form is deprecated: it builds the spec for you (family stop-rule
+        defaults — e.g. Disparity*'s ``stopIfZeroGain=False`` — now resolve
+        inside :class:`SelectionSpec`, so sequential and served execution
+        agree) and emits a ``DeprecationWarning``.
         """
-        from repro.core.functions.disparity import DisparityMin, DisparitySum
-        from repro.launch.coalesce import resolve_padder
+        if isinstance(request, SelectionSpec):
+            if budget is not None or optimizer is not None or kwargs:
+                raise TypeError(
+                    "submit(spec) takes no extra options — budget, optimizer "
+                    "and stop rules already live on the SelectionSpec"
+                )
+            return self.submit_spec(request, rid=rid)
+        from repro.core.optimizers.api import _warn_shim
 
-        resolve_padder(type(fn))  # raises NotImplementedError if unsupported
-        if optimizer not in ("NaiveGreedy", "LazyGreedy"):
-            # reject at submit time: an unknown optimizer surfacing from the
-            # engine mid-flush would abort the flush AFTER the pending queue
-            # was cleared, dropping everyone else's requests
-            raise ValueError(
-                f"unknown optimizer {optimizer!r}; served waves support "
-                "'NaiveGreedy' and 'LazyGreedy'"
-            )
-        unknown = set(kwargs) - {"stopIfZeroGain", "stopIfNegativeGain", "screen_k"}
-        if unknown:
-            raise TypeError(f"submit() got unknown option(s): {sorted(unknown)}")
-        dispersion = isinstance(fn, (DisparitySum, DisparityMin))
-        if rid is None:
-            rid = self._next_rid
-            self._next_rid += 1
-        self._pending.append(
-            SelectionRequest(
-                rid=rid,
-                fn=fn,
-                budget=int(budget),
-                optimizer=optimizer,
-                stop_if_zero=kwargs.get("stopIfZeroGain", not dispersion),
-                stop_if_negative=kwargs.get("stopIfNegativeGain", True),
-                screen_k=int(kwargs.get("screen_k", 8)),
-            )
+        _warn_shim(
+            "SelectionServer.submit(fn, budget, ...)",
+            "SelectionServer.submit(SelectionSpec(fn, budget, ...))",
         )
-        return rid
+        spec = SelectionSpec(
+            request,
+            budget,
+            "NaiveGreedy" if optimizer is None else optimizer,
+            stopIfZeroGain=kwargs.pop("stopIfZeroGain", None),
+            stopIfNegativeGain=kwargs.pop("stopIfNegativeGain", None),
+            **kwargs,
+        )
+        return self.submit_spec(spec, rid=rid)
 
     # -- dispatch ------------------------------------------------------------
 
@@ -198,14 +224,12 @@ class SelectionServer:
             batch_axis=self.batch_axis,
             data_axis=self.data_axis,
         )
-        results = engine.maximize(
+        results = engine.run(
             wave.budgets,
-            optimizer=wave.optimizer,
-            return_result=True,
+            wave.optimizer,
+            stop_if_zero=wave.stop_if_zero,
+            stop_if_negative=wave.stop_if_negative,
             max_budget=wave.max_budget,
-            stopIfZeroGain=wave.stop_if_zero,
-            stopIfNegativeGain=wave.stop_if_negative,
-            screen_k=wave.screen_k,
         )
         dt = time.perf_counter() - t0
         self.stats.waves += 1
@@ -247,14 +271,27 @@ class SelectionServer:
             responses.update(self._dispatch(wave))
         return responses
 
-    def select(self, requests: Sequence[tuple]) -> list[SelectionResponse]:
-        """Convenience: submit (fn, budget) pairs, flush, return responses in
-        request order.  Responses to requests enqueued earlier via ``submit``
-        ride the same flush and are held for the next ``flush`` call."""
-        rids = [self.submit(fn, budget) for fn, budget in requests]
+    def hold_undelivered(self, responses: dict) -> None:
+        """Re-hold already-computed responses for delivery by a later
+        ``flush()``.  Used by callers that drain ``flush()`` on behalf of a
+        subset of requests (``select``, the async front end) so responses to
+        everyone else's requests are never dropped."""
+        self._undelivered.update(responses)
+
+    def select(self, requests: Sequence) -> list[SelectionResponse]:
+        """Convenience: submit specs — or (fn, budget) pairs, which become
+        ``SelectionSpec(fn, budget)`` with family defaults — flush, and
+        return responses in request order.  Responses to requests enqueued
+        earlier via ``submit`` ride the same flush and are held for the next
+        ``flush`` call."""
+        specs = [
+            r if isinstance(r, SelectionSpec) else SelectionSpec(r[0], r[1])
+            for r in requests
+        ]
+        rids = [self.submit_spec(s) for s in specs]
         out = self.flush()
         mine = [out.pop(r) for r in rids]
-        self._undelivered.update(out)
+        self.hold_undelivered(out)
         return mine
 
 
@@ -262,10 +299,11 @@ class SelectionServer:
 # CLI: serve a random mixed workload and report throughput.
 # ---------------------------------------------------------------------------
 
-# dispersion families: the empty-set gain is 0.  submit() already defaults
-# stopIfZeroGain=False for them; the CLI additionally disables
-# stopIfNegativeGain so long-budget requests keep selecting past the point
-# where adding an element shrinks the dispersion objective
+# dispersion families: the empty-set gain is 0.  SelectionSpec's per-family
+# default table already sets stopIfZeroGain=False for them; the CLI
+# additionally disables stopIfNegativeGain so long-budget requests keep
+# selecting past the point where adding an element shrinks the dispersion
+# objective
 DISPERSION_FAMILIES = frozenset({"dsum", "dmin"})
 
 
@@ -383,10 +421,15 @@ def main():
         t0 = time.perf_counter()
         rids = [
             server.submit(
-                fn,
-                budget,
-                stopIfZeroGain=kind not in DISPERSION_FAMILIES,
-                stopIfNegativeGain=kind not in DISPERSION_FAMILIES,
+                SelectionSpec(
+                    fn,
+                    budget,
+                    # the family table already defaults stopIfZeroGain=False
+                    # for dispersion; the CLI additionally disables the
+                    # negative-gain stop so long-budget dispersion requests
+                    # keep selecting
+                    stopIfNegativeGain=kind not in DISPERSION_FAMILIES,
+                )
             )
             for (fn, budget), kind in zip(requests, kinds)
         ]

@@ -1,0 +1,182 @@
+"""AsyncSelectionServer: flush triggers, futures, and the serving contract.
+
+Fast-tier by design (the satellite requirement): the queue-depth and timer
+triggers are exercised with tiny instances, and every async response is
+pinned bit-identical to sequential ``solve(spec)`` — the same contract the
+synchronous server carries.
+"""
+import asyncio
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import FacilityLocation, SelectionSpec, create_kernel, solve
+from repro.launch.async_serve import AsyncSelectionServer
+from repro.launch.serve import SelectionServer
+
+
+def _spec(rng, n=32, budget=4, **kw):
+    x = rng.normal(size=(n, 8)).astype(np.float32)
+    S = np.asarray(create_kernel(x, metric="euclidean"))
+    return SelectionSpec(FacilityLocation.from_kernel(S), budget, **kw)
+
+
+def _same(seq, resp):
+    got = resp.result
+    assert list(np.asarray(seq.order)) == list(np.asarray(got.order))
+    np.testing.assert_array_equal(np.asarray(seq.gains), np.asarray(got.gains))
+    assert int(seq.n_evals) == int(got.n_evals)
+
+
+def test_queue_depth_trigger_flushes_without_timer(rng):
+    """max_pending reached -> flush, even though the timer is far away."""
+    specs = [_spec(rng) for _ in range(3)]
+    with AsyncSelectionServer(max_pending=3, flush_interval=600.0) as server:
+        t0 = time.monotonic()
+        futures = [server.submit(s) for s in specs]
+        responses = [f.result(timeout=300) for f in futures]
+        assert time.monotonic() - t0 < 600  # did not wait for the timer
+        assert server.flushes >= 1
+    for s, r in zip(specs, responses):
+        _same(solve(s), r)
+    # depth-triggered requests coalesce: same-shape specs rode ONE wave
+    assert responses[0].wave_size == 3
+
+
+def test_timer_trigger_flushes_lone_request(rng):
+    """A lone request must not be stranded below max_pending."""
+    spec = _spec(rng)
+    with AsyncSelectionServer(max_pending=100, flush_interval=0.05) as server:
+        fut = server.submit(spec)
+        resp = fut.result(timeout=300)  # timer fires, future completes
+        assert server.flushes >= 1
+    _same(solve(spec), resp)
+
+
+def test_flush_now_manual_trigger(rng):
+    spec = _spec(rng)
+    with AsyncSelectionServer(max_pending=100, flush_interval=600.0) as server:
+        fut = server.submit(spec)
+        assert server.pending == 1
+        server.flush_now()
+        assert server.pending == 0
+        _same(solve(spec), fut.result(timeout=60))
+
+
+def test_mixed_workload_bit_identical(rng):
+    """Heterogeneous specs (sizes, budgets, optimizers) through the async
+    front end: the coalescer groups them exactly as sync serving does and
+    every response equals sequential solve (ids/gains; n=32 requests sit at
+    their bucket so n_evals compares exactly there)."""
+    specs = [
+        _spec(rng, n=32, budget=4),
+        _spec(rng, n=32, budget=6, optimizer="LazyGreedy", screen_k=4),
+        _spec(rng, n=24, budget=3),
+    ]
+    with AsyncSelectionServer(max_pending=len(specs),
+                              flush_interval=600.0) as server:
+        futures = [server.submit(s) for s in specs]
+        responses = [f.result(timeout=300) for f in futures]
+    for s, r in zip(specs, responses):
+        seq = solve(s)
+        assert r.selection == seq.as_list()
+        if s.fn.n == 32:
+            assert int(r.result.n_evals) == int(seq.n_evals)
+
+
+def test_close_flushes_pending(rng):
+    spec = _spec(rng)
+    server = AsyncSelectionServer(max_pending=100, flush_interval=600.0)
+    fut = server.submit(spec)
+    server.close()  # default: drain, don't strand
+    _same(solve(spec), fut.result(timeout=0))
+    with pytest.raises(RuntimeError, match="closed"):
+        server.submit(spec)
+    server.close()  # idempotent
+
+
+def test_close_without_flush_cancels(rng):
+    server = AsyncSelectionServer(max_pending=100, flush_interval=600.0)
+    fut = server.submit(_spec(rng))
+    server.close(flush=False)
+    assert fut.cancelled()
+
+
+def test_submit_validation_is_synchronous(rng):
+    """Bad requests fail in the caller, immediately — same rejections as the
+    sync server — and never consume a future or poison a flush."""
+    from repro.core import DisparityMinSum
+
+    d = rng.uniform(0.1, 1.0, size=(8, 8)).astype(np.float32)
+    np.fill_diagonal(d, 0.0)
+    with AsyncSelectionServer(max_pending=100, flush_interval=600.0) as server:
+        with pytest.raises(NotImplementedError, match="register_padder"):
+            server.submit(SelectionSpec(DisparityMinSum.from_distance(d), 2))
+        with pytest.raises(ValueError, match="batched-capable"):
+            server.submit(_spec(rng, optimizer="StochasticGreedy"))
+        ok = server.submit(_spec(rng))
+        server.flush_now()
+        assert ok.result(timeout=60).selection
+
+
+def test_flush_failure_propagates_to_futures(rng):
+    """A dispatch error must complete every pending future exceptionally —
+    a stranded future is a hung client."""
+    class Boom(RuntimeError):
+        pass
+
+    class ExplodingServer(SelectionServer):
+        def flush(self):
+            raise Boom("engine on fire")
+
+    with AsyncSelectionServer(ExplodingServer(), max_pending=100,
+                              flush_interval=600.0) as server:
+        fut = server.submit(_spec(rng))
+        server.flush_now()
+        with pytest.raises(Boom):
+            fut.result(timeout=60)
+
+
+def test_wrapped_server_sync_requests_are_not_dropped(rng):
+    """Wrapping an existing SelectionServer that already has a sync request
+    pending: the async flush answers it too, and must re-hold its response
+    for the sync caller's own flush() instead of discarding it."""
+    sync = SelectionServer()
+    early = _spec(rng, n=16, budget=3)
+    rid_early = sync.submit_spec(early)
+    with AsyncSelectionServer(sync, max_pending=100,
+                              flush_interval=600.0) as front:
+        fut = front.submit(_spec(rng, n=24, budget=4))
+        front.flush_now()
+        assert fut.result(timeout=60).selection
+        held = sync.flush()  # the sync request's answer surfaces here
+        assert held[rid_early].selection == solve(early).as_list()
+
+
+def test_futures_are_awaitable(rng):
+    spec = _spec(rng)
+
+    async def roundtrip(server):
+        return await asyncio.wrap_future(server.submit(spec))
+
+    with AsyncSelectionServer(max_pending=1, flush_interval=600.0) as server:
+        resp = asyncio.run(roundtrip(server))
+    _same(solve(spec), resp)
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError, match="max_pending"):
+        AsyncSelectionServer(max_pending=0)
+    with pytest.raises(ValueError, match="flush_interval"):
+        AsyncSelectionServer(flush_interval=0.0)
+
+
+def test_async_path_emits_no_deprecation_warnings(rng):
+    spec = _spec(rng)
+    with warnings.catch_warnings(record=True) as record:
+        warnings.simplefilter("always")
+        with AsyncSelectionServer(max_pending=1) as server:
+            server.submit(spec).result(timeout=300)
+    assert not [w for w in record if issubclass(w.category, DeprecationWarning)]

@@ -20,6 +20,7 @@ from repro.core import (
     FacilityLocation,
     FeatureBased,
     GraphCut,
+    SelectionSpec,
     batched_maximize,
     create_kernel,
     maximize,
@@ -144,10 +145,10 @@ def test_coalesce_groups_and_pads(rng):
     """Mixed families/sizes coalesce into per-(family, shape) waves; the
     batch pads carry budget 0 and demux drops them."""
     reqs = [
-        SelectionRequest(rid="a", fn=_build("fl", rng, 24), budget=4),
-        SelectionRequest(rid="b", fn=_build("fl", rng, 24), budget=7),
-        SelectionRequest(rid="c", fn=_build("gc", rng, 24), budget=3),
-        SelectionRequest(rid="d", fn=_build("fl", rng, 40), budget=4),
+        SelectionRequest(rid="a", spec=SelectionSpec(_build("fl", rng, 24), 4)),
+        SelectionRequest(rid="b", spec=SelectionSpec(_build("fl", rng, 24), 7)),
+        SelectionRequest(rid="c", spec=SelectionSpec(_build("gc", rng, 24), 3)),
+        SelectionRequest(rid="d", spec=SelectionSpec(_build("fl", rng, 40), 4)),
     ]
     waves = coalesce(reqs, n_multiple=4, b_multiple=4)
     by_rids = {tuple(sorted(r.rid for r in w.requests)): w for w in waves}
@@ -168,7 +169,9 @@ def test_coalesce_groups_and_pads(rng):
 
 def test_coalesce_splits_at_max_wave(rng):
     fn = _build("fl", rng, 16)
-    reqs = [SelectionRequest(rid=i, fn=fn, budget=3) for i in range(5)]
+    reqs = [
+        SelectionRequest(rid=i, spec=SelectionSpec(fn, 3)) for i in range(5)
+    ]
     waves = coalesce(reqs, max_wave=2)
     assert sorted(len(w.requests) for w in waves) == [1, 2, 2]
 
@@ -187,7 +190,9 @@ def _unsupported_family(rng):
 def test_coalesce_rejects_unknown_family(rng):
     fn = _unsupported_family(rng)
     with pytest.raises(NotImplementedError, match="register_padder"):
-        coalesce([SelectionRequest(rid=0, fn=fn, budget=2)], n_multiple=16)
+        coalesce(
+            [SelectionRequest(rid=0, spec=SelectionSpec(fn, 2))], n_multiple=16
+        )
 
 
 def test_server_rejects_unknown_family_with_clear_error(rng):

@@ -1,0 +1,489 @@
+"""The typed front door: OptimizerSpec / SelectionSpec / solve().
+
+Pins the api_redesign contract:
+
+- construction-time validation: unknown optimizer names, misspelled or
+  ill-typed hyperparameters, non-function objects, and impossible backend
+  overrides all fail BEFORE anything traces or flushes, with errors naming
+  the valid set;
+- spec round-tripping: to_dict()/from_dict() and jit/pytree flattening;
+- ONE spec routed through solve() in sequential, batched, sharded, served
+  and async-served modes returns bit-identical (ids, gains, n_evals) — in
+  process on a (1,1) mesh and in a subprocess on a real 2x2 device mesh;
+- per-family stop-rule defaults resolve in one place (Disparity* parity
+  across entry points);
+- the legacy entry points are DeprecationWarning shims that delegate with
+  identical results (and reject misspelled options instead of swallowing
+  them — the old api.maximize kw.get bug).
+"""
+import json
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    DisparityMin,
+    DisparitySum,
+    FacilityLocation,
+    LogDet,
+    OptimizerSpec,
+    SelectionSpec,
+    batched_maximize,
+    create_kernel,
+    family_defaults,
+    lazy_greedy,
+    maximize,
+    naive_greedy,
+    optimizer_names,
+    resolve_optimizer,
+    solve,
+    stochastic_greedy,
+)
+from repro.core.optimizers.batched import BatchedEngine
+from repro.launch.serve import SelectionServer
+
+
+def _fl(rng, n=32):
+    x = rng.normal(size=(n, 8)).astype(np.float32)
+    S = np.asarray(create_kernel(x, metric="euclidean"))
+    return FacilityLocation.from_kernel(S)
+
+
+def _dsum(rng, n=24):
+    x = rng.normal(size=(n, 8)).astype(np.float32)
+    return DisparitySum.from_distance(
+        1.0 - np.asarray(create_kernel(x, metric="euclidean"))
+    )
+
+
+def _same(a, b, n_evals=True):
+    assert list(np.asarray(a.order)) == list(np.asarray(b.order))
+    np.testing.assert_array_equal(np.asarray(a.gains), np.asarray(b.gains))
+    if n_evals:
+        assert int(a.n_evals) == int(b.n_evals)
+
+
+# -- OptimizerSpec validation -------------------------------------------------
+
+
+def test_optimizer_registry_names():
+    names = optimizer_names()
+    assert {"NaiveGreedy", "LazyGreedy", "StochasticGreedy",
+            "LazierThanLazyGreedy"} <= set(names)
+    for n in names:
+        assert resolve_optimizer(n).name == n
+
+
+def test_optimizer_spec_unknown_name():
+    with pytest.raises(ValueError, match="unknown optimizer.*NaiveGreedy"):
+        OptimizerSpec("QuantumGreedy")
+
+
+def test_optimizer_spec_unknown_param_names_valid_set():
+    with pytest.raises(TypeError, match=r"screen_kk.*screen_k"):
+        OptimizerSpec("LazyGreedy", screen_kk=4)
+
+
+def test_optimizer_spec_bad_values():
+    with pytest.raises(TypeError, match="screen_k"):
+        OptimizerSpec("LazyGreedy", screen_k=0)
+    with pytest.raises(TypeError, match="epsilon"):
+        OptimizerSpec("StochasticGreedy", epsilon=2.0)
+    with pytest.raises(TypeError, match="sample_size"):
+        OptimizerSpec("StochasticGreedy", sample_size=0)
+
+
+def test_optimizer_spec_defaults_and_roundtrip():
+    opt = OptimizerSpec("LazierThanLazyGreedy", epsilon=0.1)
+    assert opt.params == {
+        "seed": 0, "epsilon": 0.1, "sample_size": None, "screen_k": 8,
+    }
+    # to_dict is JSON-able and round-trips exactly
+    d = json.loads(json.dumps(opt.to_dict()))
+    assert OptimizerSpec.from_dict(d) == opt
+    # copy-construction is idempotent; adding params to a spec is rejected
+    assert OptimizerSpec(opt) == opt
+    with pytest.raises(TypeError, match="alongside"):
+        OptimizerSpec(opt, screen_k=4)
+
+
+def test_optimizer_spec_is_hashable_zero_leaf_pytree():
+    a = OptimizerSpec("LazyGreedy", screen_k=4)
+    b = OptimizerSpec("LazyGreedy", screen_k=4)
+    assert a == b and hash(a) == hash(b)
+    leaves, treedef = jax.tree.flatten(a)
+    assert leaves == []
+    assert jax.tree.unflatten(treedef, []) == a
+
+
+# -- SelectionSpec validation -------------------------------------------------
+
+
+def test_selection_spec_rejects_non_function(rng):
+    with pytest.raises(TypeError, match="SetFunction"):
+        SelectionSpec(np.eye(4, dtype=np.float32), 2)
+
+
+def test_selection_spec_rejects_bad_budget(rng):
+    fn = _fl(rng, 16)
+    with pytest.raises(ValueError, match="budget"):
+        SelectionSpec(fn, 0)
+
+
+def test_selection_spec_unknown_option_names_valid_set(rng):
+    fn = _fl(rng, 16)
+    with pytest.raises(TypeError, match=r"stopIfZeroGian.*stopIfZeroGain"):
+        SelectionSpec(fn, 3, stopIfZeroGian=False)
+
+
+def test_selection_spec_use_kernel_rejected_for_flagless_family(rng):
+    x = rng.normal(size=(16, 8)).astype(np.float32)
+    S = np.asarray(create_kernel(x, metric="euclidean"))
+    ld = LogDet.from_kernel(S + 0.5 * np.eye(16, dtype=np.float32))
+    with pytest.raises(TypeError, match="use_kernel"):
+        SelectionSpec(ld, 3, use_kernel=True)
+
+
+def test_selection_spec_optimizer_spec_plus_params_rejected(rng):
+    fn = _fl(rng, 16)
+    with pytest.raises(TypeError, match="OptimizerSpec"):
+        SelectionSpec(fn, 3, OptimizerSpec("LazyGreedy"), screen_k=4)
+
+
+def test_selection_spec_use_kernel_override_resolves(rng):
+    fn = _fl(rng, 16)
+    spec = SelectionSpec(fn, 3, use_kernel=True)
+    assert spec.resolved_fn().use_kernel is True
+    assert SelectionSpec(fn, 3).resolved_fn() is fn  # None = untouched
+
+
+# -- per-family stop defaults -------------------------------------------------
+
+
+def test_family_default_table(rng):
+    from repro.core import DisparityMinSum
+
+    assert family_defaults(FacilityLocation)["stopIfZeroGain"] is True
+    for cls in (DisparitySum, DisparityMin, DisparityMinSum):
+        d = family_defaults(cls)
+        assert d["stopIfZeroGain"] is False, cls
+        assert d["stopIfNegativeGain"] is True, cls
+    fn = _dsum(rng)
+    assert SelectionSpec(fn, 3).stop_if_zero is False
+    # explicit flag always beats the family default
+    assert SelectionSpec(fn, 3, stopIfZeroGain=True).stop_if_zero is True
+
+
+def test_disparity_parity_across_entry_points(rng):
+    """The satellite contract: the dispersion default lives in ONE table, so
+    sequential solve, the maximize shim, sync serving and legacy submit all
+    return the same non-empty selection without any explicit flag."""
+    fn = _dsum(rng)
+    spec = SelectionSpec(fn, 5)
+    seq = solve(spec)
+    assert seq.as_list(), "family default must prevent the empty selection"
+    served = solve([spec], mode="served")[0]
+    _same(seq, served, n_evals=False)  # n=24 pads to 32: ids/gains only
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        assert maximize(fn, 5) == seq.as_list()
+        server = SelectionServer()
+        rid = server.submit(fn, 5)  # legacy form, no flags
+        assert server.flush()[rid].selection == seq.as_list()
+
+
+# -- round-tripping -----------------------------------------------------------
+
+
+def test_selection_spec_dict_roundtrip(rng):
+    fn = _fl(rng)
+    spec = SelectionSpec(fn, 4, "LazyGreedy", screen_k=6,
+                         stopIfNegativeGain=False)
+    d = spec.to_dict()
+    back = SelectionSpec.from_dict(d)
+    assert back == spec
+    _same(solve(spec), solve(back))
+
+
+def test_selection_spec_pytree_roundtrip(rng):
+    fn = _fl(rng)
+    spec = SelectionSpec(fn, 4, "LazyGreedy", screen_k=6)
+    leaves, treedef = jax.tree.flatten(spec)
+    assert len(leaves) == len(jax.tree.leaves(fn))  # fn is the only child
+    back = jax.tree.unflatten(treedef, leaves)
+    assert back == spec
+    _same(solve(spec), solve(back))
+
+
+def test_selection_spec_crosses_jit_without_retrace(rng):
+    traces = []
+
+    @jax.jit
+    def peak_gain(spec: SelectionSpec):
+        traces.append(1)
+        return spec.fn.gains(spec.fn.init_state()).max()
+
+    a = SelectionSpec(_fl(rng), 4, "LazyGreedy")
+    b = SelectionSpec(_fl(rng), 4, "LazyGreedy")  # same statics, new data
+    ga, gb = float(peak_gain(a)), float(peak_gain(b))
+    assert len(traces) == 1  # static half rides the cache key; no retrace
+    assert ga > 0 and gb > 0
+    # a different static half IS a different program
+    float(peak_gain(SelectionSpec(_fl(rng), 5, "LazyGreedy")))
+    assert len(traces) == 2
+
+
+# -- solve(): one spec, every route -------------------------------------------
+
+
+def test_solve_single_vs_all_modes_bit_identical(rng):
+    """n=32 sits at its pow-2 bucket and 4 at its budget bucket, so even
+    n_evals must agree across sequential / batched / sharded(1,1) / served /
+    async routes."""
+    spec = SelectionSpec(_fl(rng, 32), 4, "LazyGreedy", screen_k=6)
+    seq = solve(spec)
+    _same(seq, lazy_greedy(spec.fn, 4, 6))  # sequential == the raw optimizer
+
+    batched = solve([spec, spec], mode="batched")
+    mesh = jax.make_mesh((1, 1), ("batch", "data"))
+    sharded = solve([spec, spec], mesh=mesh)
+    served = solve([spec], mode="served")
+    awaited = solve([spec], mode="async")
+    for r in (*batched, *sharded, served[0], awaited[0]):
+        _same(seq, r)
+
+
+def test_solve_sequential_list_and_empty(rng):
+    specs = [SelectionSpec(_fl(rng, 16), b) for b in (2, 3)]
+    out = solve(specs, mode="sequential")
+    for s, r in zip(specs, out):
+        _same(r, naive_greedy(s.fn, s.budget))
+    assert solve([], mode="batched") == []
+
+
+def test_solve_stochastic_seed_matches_raw_optimizer(rng):
+    fn = _fl(rng, 48)
+    spec = SelectionSpec(fn, 5, "StochasticGreedy", seed=3)
+    ref = stochastic_greedy(fn, 5, jax.random.PRNGKey(3), 0.01)
+    _same(solve(spec), ref)
+
+
+def test_solve_mode_validation(rng):
+    spec = SelectionSpec(_fl(rng, 16), 3)
+    with pytest.raises(ValueError, match="unknown mode"):
+        solve(spec, mode="warp")
+    with pytest.raises(ValueError, match="mesh"):
+        solve([spec], mode="sharded")
+    with pytest.raises(TypeError, match="SelectionSpec"):
+        solve([spec, "nope"])
+
+
+def test_solve_batched_rejects_mixed_static_specs(rng):
+    fn = _fl(rng, 16)
+    a = SelectionSpec(fn, 3, "NaiveGreedy")
+    b = SelectionSpec(fn, 3, "LazyGreedy")
+    with pytest.raises(ValueError, match="served"):
+        solve([a, b], mode="batched")
+
+
+def test_solve_batched_rejects_unbatchable_optimizer(rng):
+    spec = SelectionSpec(_fl(rng, 16), 3, "StochasticGreedy")
+    with pytest.raises(ValueError, match="batched-capable"):
+        solve([spec], mode="batched")
+
+
+def test_server_rejects_unbatchable_optimizer_at_submit(rng):
+    """A non-wave optimizer must be rejected at submit, never mid-flush."""
+    server = SelectionServer()
+    ok = server.submit(SelectionSpec(_fl(rng, 16), 3))
+    with pytest.raises(ValueError, match="batched-capable"):
+        server.submit(SelectionSpec(_fl(rng, 16), 3, "StochasticGreedy"))
+    out = server.flush()  # the valid request is unaffected
+    assert out[ok].selection
+
+
+def test_solve_served_heterogeneous_matches_sequential(rng):
+    """Served mode takes what batched mode rejects: mixed families, sizes,
+    optimizers — every response equals its sequential solve."""
+    specs = [
+        SelectionSpec(_fl(rng, 24), 4),
+        SelectionSpec(_fl(rng, 40), 6, "LazyGreedy", screen_k=4),
+        SelectionSpec(_dsum(rng, 24), 3),
+    ]
+    out = solve(specs, mode="served")
+    for s, r in zip(specs, out):
+        _same(solve(s), r, n_evals=False)  # padded buckets: ids/gains
+
+
+# -- the deprecated shims -----------------------------------------------------
+
+
+def _one_deprecation(record):
+    msgs = [w for w in record if issubclass(w.category, DeprecationWarning)]
+    assert len(msgs) == 1, [str(w.message) for w in record]
+    return str(msgs[0].message)
+
+
+def test_maximize_shim_warns_once_and_delegates(rng):
+    fn = _fl(rng)
+    spec = SelectionSpec(fn, 4, "LazyGreedy", screen_k=6)
+    with warnings.catch_warnings(record=True) as record:
+        warnings.simplefilter("always")
+        out = maximize(fn, 4, optimizer="LazyGreedy", screen_k=6)
+    assert "solve" in _one_deprecation(record)
+    assert out == solve(spec).as_list()
+    with warnings.catch_warnings(record=True) as record:
+        warnings.simplefilter("always")
+        res = maximize(fn, 4, optimizer="LazyGreedy", screen_k=6,
+                       return_result=True)
+    _one_deprecation(record)
+    _same(res, solve(spec))
+
+
+def test_maximize_shim_rejects_misspelled_option(rng):
+    """Regression for the silent kw.get swallowing: the old entry point ran
+    under the wrong stopping semantics; now it must raise, naming the set."""
+    fn = _fl(rng, 16)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(TypeError, match=r"stopIfZeroGian.*stopIfZeroGain"):
+            maximize(fn, 3, stopIfZeroGian=False)
+        with pytest.raises(ValueError, match="unknown optimizer"):
+            maximize(fn, 3, optimizer="Nope")
+
+
+def test_batched_maximize_shim_warns_once_and_delegates(rng):
+    fns = [_fl(rng, 16) for _ in range(3)]
+    specs = [SelectionSpec(f, 3) for f in fns]
+    with warnings.catch_warnings(record=True) as record:
+        warnings.simplefilter("always")
+        out = batched_maximize(fns, 3, return_result=True)
+    _one_deprecation(record)  # exactly one: no cascade through inner shims
+    for a, b in zip(out, solve(specs, mode="batched")):
+        _same(a, b)
+
+
+def test_engine_maximize_shim_warns_once_and_delegates(rng):
+    fns = [_fl(rng, 16) for _ in range(2)]
+    engine = BatchedEngine(fns)
+    with warnings.catch_warnings(record=True) as record:
+        warnings.simplefilter("always")
+        out = engine.maximize([2, 3], return_result=True)
+    _one_deprecation(record)
+    for a, b in zip(out, engine.run([2, 3])):
+        _same(a, b)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(TypeError, match="screen_kk"):
+            engine.maximize(2, optimizer="LazyGreedy", screen_kk=4)
+
+
+def test_server_submit_shim_warns_once_and_delegates(rng):
+    fn = _fl(rng, 16)
+    server = SelectionServer()
+    with warnings.catch_warnings(record=True) as record:
+        warnings.simplefilter("always")
+        rid = server.submit(fn, 3)
+    _one_deprecation(record)
+    # the spec path is warning-free
+    with warnings.catch_warnings(record=True) as record:
+        warnings.simplefilter("always")
+        rid_spec = server.submit(SelectionSpec(fn, 3))
+    assert not [w for w in record if issubclass(w.category, DeprecationWarning)]
+    out = server.flush()
+    assert out[rid].selection == out[rid_spec].selection
+    with pytest.raises(TypeError, match="no extra options"):
+        server.submit(SelectionSpec(fn, 3), 4)
+    # an optimizer alongside a spec must raise, not be silently dropped
+    with pytest.raises(TypeError, match="no extra options"):
+        server.submit(SelectionSpec(fn, 3), optimizer="LazyGreedy")
+
+
+def test_solve_served_on_shared_server_drops_nothing(rng):
+    """solve(mode="served", server=...) drains the caller's flush on behalf
+    of its own specs only: a request the caller enqueued earlier must
+    surface on the caller's next flush(), never be dropped."""
+    server = SelectionServer()
+    early = SelectionSpec(_fl(rng, 16), 3)
+    rid_early = server.submit_spec(early)
+    out = solve([SelectionSpec(_fl(rng, 24), 4)], mode="served", server=server)
+    assert out[0].as_list()
+    held = server.flush()  # nothing pending, but early's answer is held here
+    assert held[rid_early].selection == solve(early).as_list()
+
+
+def test_internal_paths_emit_no_deprecation_warnings(rng):
+    """solve() on every route must never touch a shim."""
+    spec = SelectionSpec(_fl(rng, 32), 3)
+    mesh = jax.make_mesh((1, 1), ("batch", "data"))
+    with warnings.catch_warnings(record=True) as record:
+        warnings.simplefilter("always")
+        solve(spec)
+        solve([spec], mode="batched")
+        solve([spec], mesh=mesh)
+        solve([spec], mode="served")
+        solve([spec], mode="async")
+    assert not [w for w in record if issubclass(w.category, DeprecationWarning)]
+
+
+# -- acceptance: one spec, four routes, real 2x2 mesh -------------------------
+
+_MESH_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np, jax
+    from repro.core import (FacilityLocation, SelectionSpec, create_kernel,
+                            solve)
+    from repro.launch.async_serve import AsyncSelectionServer
+
+    rng = np.random.default_rng(0)
+
+    def spec(budget):
+        x = rng.normal(size=(32, 8)).astype(np.float32)
+        S = np.asarray(create_kernel(x, metric="euclidean"))
+        return SelectionSpec(FacilityLocation.from_kernel(S), budget,
+                             "LazyGreedy", screen_k=6)
+
+    mesh = jax.make_mesh((2, 2), ("batch", "data"))
+    assert len(jax.devices()) == 4
+    specs = [spec(b) for b in (4, 8, 2, 4)]
+
+    seq = solve(specs, mode="sequential")
+    batched = solve(specs, mode="batched")
+    sharded = solve(specs, mesh=mesh)
+    served = solve(specs, mode="served", mesh=mesh)
+    with AsyncSelectionServer(mesh=mesh, max_pending=len(specs),
+                              flush_interval=30.0) as server:
+        futures = [server.submit(s) for s in specs]  # depth-triggered flush
+        async_res = [f.result(timeout=300).result for f in futures]
+
+    for route, results in [("batched", batched), ("sharded", sharded),
+                           ("served", served), ("async", async_res)]:
+        for a, b in zip(seq, results):
+            assert list(np.asarray(a.order)) == list(np.asarray(b.order)), route
+            assert np.array_equal(np.asarray(a.gains), np.asarray(b.gains)), route
+            assert int(a.n_evals) == int(b.n_evals), route
+    print("SPEC_ROUTES_OK")
+    """
+)
+
+
+def test_one_spec_every_route_2x2_mesh_subprocess():
+    """The acceptance criterion: one SelectionSpec routed through solve() in
+    sequential, batched, sharded (real 2x2 mesh, live collectives) and
+    async-served modes returns bit-identical (ids, gains, n_evals)."""
+    r = subprocess.run(
+        [sys.executable, "-c", _MESH_SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo",
+    )
+    assert "SPEC_ROUTES_OK" in r.stdout, r.stdout + r.stderr

@@ -1,11 +1,13 @@
 """Generate the README function x backend coverage matrix from the registries.
 
-The table is derived from the LIVE plug-in points — ``gain_backend()`` /
+The tables are derived from the LIVE plug-in points — ``gain_backend()`` /
 ``backend_name`` (core/optimizers/backends.py), the coalescer padder registry
-(launch/coalesce.py), and the ShardRule registry
-(core/optimizers/distributed.py) — by building a tiny instance of every
-family and asking each layer whether it serves it.  A hand-maintained table
-goes stale the moment a registration lands; this one cannot.
+(launch/coalesce.py), the ShardRule registry
+(core/optimizers/distributed.py), and the optimizer registry
+(core/optimizers/spec.py) — by building a tiny instance of every family /
+probing every registered optimizer and asking each layer whether it serves
+it.  A hand-maintained table goes stale the moment a registration lands;
+these cannot.
 
     PYTHONPATH=src python tools/gen_matrix.py            # print the table
     PYTHONPATH=src python tools/gen_matrix.py --write    # rewrite README.md
@@ -27,6 +29,8 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 README = ROOT / "README.md"
 BEGIN = "<!-- BEGIN GENERATED: function-backend-matrix (tools/gen_matrix.py) -->"
 END = "<!-- END GENERATED: function-backend-matrix -->"
+OPT_BEGIN = "<!-- BEGIN GENERATED: optimizer-registry (tools/gen_matrix.py) -->"
+OPT_END = "<!-- END GENERATED: optimizer-registry -->"
 
 _N = 8  # tiny probe instances
 
@@ -158,15 +162,50 @@ def build_table() -> str:
     return "\n".join(rows)
 
 
-def render(readme_text: str, table: str) -> str:
-    try:
-        head, rest = readme_text.split(BEGIN, 1)
-        _, tail = rest.split(END, 1)
-    except ValueError:
-        raise SystemExit(
-            f"README.md is missing the {BEGIN!r} / {END!r} markers"
+def build_optimizer_table() -> str:
+    """The optimizer-registry table, probed from the LIVE registry: which
+    optimizers exist, their validated hyperparameters (with the defaults the
+    specs resolve), and which execution routes each one serves."""
+    from repro.core.optimizers.spec import optimizer_names, resolve_optimizer
+
+    rows = [
+        "| Optimizer | Hyperparameters (defaults) | `solve()` sequential | "
+        "batched / sharded / served waves |",
+        "|---|---|---|---|",
+    ]
+    for name in optimizer_names():
+        defn = resolve_optimizer(name)
+        params = (
+            ", ".join(
+                f"`{p}={spec.default!r}`" for p, spec in sorted(defn.params.items())
+            )
+            or "—"
         )
-    return f"{head}{BEGIN}\n{table}\n{END}{tail}"
+        waves = "yes" if defn.batched_capable else "—"
+        rows.append(f"| {name} | {params} | yes | {waves} |")
+    rows.append("")
+    rows.append(
+        "Probed from the `register_optimizer` registry "
+        "(`repro.core.optimizers.spec`): hyperparameters are validated and "
+        "defaulted at `OptimizerSpec` construction; optimizers without "
+        "batched execution hooks are rejected at submit/spec-routing time, "
+        "never mid-flush."
+    )
+    return "\n".join(rows)
+
+
+def _splice(text: str, begin: str, end: str, table: str) -> str:
+    try:
+        head, rest = text.split(begin, 1)
+        _, tail = rest.split(end, 1)
+    except ValueError:
+        raise SystemExit(f"README.md is missing the {begin!r} / {end!r} markers")
+    return f"{head}{begin}\n{table}\n{end}{tail}"
+
+
+def render(readme_text: str, table: str, opt_table: str) -> str:
+    out = _splice(readme_text, BEGIN, END, table)
+    return _splice(out, OPT_BEGIN, OPT_END, opt_table)
 
 
 def main(argv: list[str]) -> int:
@@ -179,8 +218,9 @@ def main(argv: list[str]) -> int:
     a = ap.parse_args(argv)
 
     table = build_table()
+    opt_table = build_optimizer_table()
     current = README.read_text()
-    updated = render(current, table)
+    updated = render(current, table, opt_table)
     if a.write:
         README.write_text(updated)
         print("README.md matrix regenerated")
@@ -196,6 +236,8 @@ def main(argv: list[str]) -> int:
         print("README.md matrix matches the registries")
         return 0
     print(table)
+    print()
+    print(opt_table)
     return 0
 
 
