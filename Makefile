@@ -7,6 +7,10 @@
 #   make bench-serve serving throughput sweep (wave size x mesh shape)
 #   make bench-diff  re-run the batched bench and flag >20% throughput
 #                    regressions vs the committed BENCH_batched.json snapshot
+#   make serve-smoke serve CLI one round on a unit mesh, then diff a quick
+#                    serve_bench run against the committed
+#                    BENCH_serving.json (deterministic rejection/deadline
+#                    counters compare exactly; timings at a loose 50%)
 #   make docs-check  execute the code blocks in README.md and docs/*.md,
 #                    and assert the README coverage matrix matches the
 #                    registries (tools/gen_matrix.py --check)
@@ -17,9 +21,9 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test-fast test-all bench bench-batched bench-serve bench-diff docs-check shims-check
+.PHONY: verify test-fast test-all bench bench-batched bench-serve bench-diff serve-smoke docs-check shims-check
 
-verify: test-fast docs-check shims-check
+verify: test-fast docs-check shims-check serve-smoke
 
 test-fast:
 	$(PYTHON) -m pytest -x -q
@@ -42,6 +46,17 @@ bench-serve:
 bench-diff:
 	$(PYTHON) -m benchmarks.batched_bench --json /tmp/BENCH_batched_new.json >/dev/null
 	$(PYTHON) tools/bench_diff.py benchmarks/BENCH_batched.json /tmp/BENCH_batched_new.json
+
+# serving smoke: one CLI round on a unit mesh (the sharded engine with live
+# collectives reduced to one device), then a quick serve_bench diffed
+# against the committed snapshot.  The quick cells are a subset of the full
+# sweep; rejection/deadline counters are deterministic and compare exactly,
+# timings use a loose 50% threshold (shared boxes are noisy).
+serve-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=1 JAX_PLATFORMS=cpu \
+	  $(PYTHON) -m repro.launch.serve --requests 8 --rounds 1 --mesh 1x1 --metrics
+	$(PYTHON) -m benchmarks.serve_bench --quick --json /tmp/BENCH_serving_new.json >/dev/null
+	$(PYTHON) tools/bench_diff.py benchmarks/BENCH_serving.json /tmp/BENCH_serving_new.json --threshold 0.5
 
 docs-check:
 	$(PYTHON) tools/check_docs.py

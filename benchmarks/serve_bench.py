@@ -13,8 +13,12 @@ wave throughput of the serving stack across:
 
 Reported per cell: wall time per wave and queries/sec (best of 3 after a
 compile warm-up).  Selections are asserted bit-identical to the sequential
-loop before timing.  ``--json PATH`` dumps the rows for trend tracking —
-``benchmarks/BENCH_serving.json`` is the committed snapshot.
+loop before timing.  A final "serving front door" row reports the
+structured metrics (queue-time percentiles plus DETERMINISTIC rejection /
+deadline-miss counts, which ``tools/bench_diff.py`` compares exactly).
+``--json PATH`` dumps the rows for trend tracking —
+``benchmarks/BENCH_serving.json`` is the committed snapshot, and
+``make serve-smoke`` diffs a ``--quick`` run against it.
 
     PYTHONPATH=src python -m benchmarks.serve_bench          # full sweep
     PYTHONPATH=src python -m benchmarks.serve_bench --quick  # smoke cells
@@ -105,6 +109,47 @@ def run_cell(B, n, budget, mesh_shape, family="fl"):
     }
 
 
+def run_serving_metrics(B=16, n=128, budget=8, family="fl"):
+    """One front-door row: the structured serving metrics over a burst of
+    ``B`` requests on the single-device server, with DETERMINISTIC
+    backpressure — ``max_queue=B`` admits the burst, then 4 overflow submits
+    are rejected, so ``rejections`` is exact and machine-independent (the
+    bench_diff gate compares it exactly; ``queue_*`` dwell times ride along
+    as informational columns and are skipped by the gate)."""
+    from repro.core.optimizers.spec import SelectionSpec
+    from repro.launch.serve import SelectionServer, ServerOverloaded
+
+    fns = make_instances(B + 4, n, family)
+    server = SelectionServer(max_queue=B)
+    # one admitted request carries an (immediately-lapsed) deadline: flush
+    # always starts later than 1 microsecond after submit, so
+    # deadline_misses == 1, deterministically
+    server.submit_spec(SelectionSpec(fns[0], budget, deadline_s=1e-6))
+    rejected = 0
+    for fn in fns[1:]:
+        try:
+            server.submit_spec(SelectionSpec(fn, budget))
+        except ServerOverloaded:
+            rejected += 1
+    assert rejected == 4
+    server.flush()
+    snap = server.metrics.snapshot()
+    return {
+        "section": "serving_metrics",
+        "family": family,
+        "B": B,
+        "n": n,
+        "budget": budget,
+        "mesh": "1x1",
+        "requests": snap["counters"]["requests"],
+        "waves": snap["counters"]["waves"],
+        "rejections": snap["counters"]["rejections"],
+        "deadline_misses": snap["counters"]["deadline_misses"],
+        "queue_p50_ms": round(snap["queue_s"]["p50"] * 1e3, 2),
+        "queue_p99_ms": round(snap["queue_s"]["p99"] * 1e3, 2),
+    }
+
+
 def _print_rows(title, rows):
     print(f"\n# {title}")
     print(
@@ -118,11 +163,27 @@ def _print_rows(title, rows):
         )
 
 
+def _print_rows_metrics(title, rows):
+    print(f"\n# {title}")
+    print(
+        f"{'family':>8s} {'B':>4s} {'req':>4s} {'waves':>5s} {'rej':>4s} "
+        f"{'ddl miss':>8s} {'queue p50 ms':>13s} {'queue p99 ms':>13s}"
+    )
+    for r in rows:
+        print(
+            f"{r['family']:>8s} {r['B']:4d} {r['requests']:4d} "
+            f"{r['waves']:5d} {r['rejections']:4d} {r['deadline_misses']:8d} "
+            f"{r['queue_p50_ms']:13.2f} {r['queue_p99_ms']:13.2f}"
+        )
+
+
 def main(quick: bool = False, json_path: str | None = None):
     budget = 8
-    # classic FL wave-size x mesh-shape sweep
+    # classic FL wave-size x mesh-shape sweep.  The quick cells are a strict
+    # SUBSET of the full sweep, so `make serve-smoke`'s bench_diff of a
+    # --quick run against the committed full snapshot compares real rows.
     fl_cells = (
-        [(32, 128, (1, 1)), (32, 128, (2, 2))]
+        [(16, 128, (1, 1)), (16, 128, (4, 2))]
         if quick
         else [
             (B, n, shape)
@@ -144,8 +205,13 @@ def main(quick: bool = False, json_path: str | None = None):
     ]
     _print_rows("Family breadth: every served family, 1x1 vs 2x2 mesh", fam_rows)
 
-    rows = fl_rows + fam_rows
-    best = max(rows, key=lambda r: r["qps"])
+    # front-door metrics: queue time + deterministic rejection accounting
+    metric_rows = [run_serving_metrics(budget=budget)]
+    _print_rows_metrics("Serving front door: queue time and admission control",
+                        metric_rows)
+
+    rows = fl_rows + fam_rows + metric_rows
+    best = max((r for r in rows if "qps" in r), key=lambda r: r["qps"])
     print(
         f"\nbest cell: {best['family']} B={best['B']} n={best['n']} "
         f"mesh={best['mesh']} -> {best['qps']:.0f} q/s"

@@ -15,8 +15,9 @@ Add a 2-D device mesh to shard the waves (batch x data axes):
         PYTHONPATH=src python examples/serving.py --mesh 2x2
 
 Add ``--async-serve`` to route the same specs through the
-:class:`AsyncSelectionServer` futures front end (timer + queue-depth flush
-triggers) instead of a manual flush.
+:class:`AsyncSelectionServer` futures front end, where each (family,
+n-bucket) group flushes on its own depth / timer / deadline trigger
+instead of a manual flush.
 """
 import argparse
 
@@ -74,8 +75,10 @@ server = SelectionServer(mesh=mesh)
 if args.async_serve:
     from repro.launch.async_serve import AsyncSelectionServer
 
-    with AsyncSelectionServer(server, max_pending=len(specs)) as front:
-        futures = [front.submit(s) for s in specs]  # depth-triggered flush
+    # max_pending=2 depth-flushes a group as soon as two requests share a
+    # (family, n-bucket) wave shape; singleton groups fall back to the timer
+    with AsyncSelectionServer(server, max_pending=2) as front:
+        futures = [front.submit(s) for s in specs]
         responses = [f.result(timeout=600) for f in futures]
 else:
     responses = server.select(specs)

@@ -42,6 +42,7 @@ table); ``tools/check_shims.py`` gates that no internal caller uses them.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Mapping, Optional, Sequence
 
 import jax
@@ -328,6 +329,14 @@ class SelectionSpec:
     built; ``True`` / ``False`` rebuilds it with the fused-Pallas sweep
     forced on / off at solve time (only for families exposing the flag).
 
+    ``deadline_s`` is an optional per-request latency budget in seconds
+    (positive, finite).  Sequential and batched execution ignore it; the
+    async serving scheduler honors it by flushing the request's group no
+    later than ``deadline_s`` after submission, instead of letting the
+    request wait the full coalescing interval for co-travellers (see
+    docs/serving.md — a deadline shapes *scheduling*, it never changes the
+    selection).
+
     As a pytree, the function is the only leaf-bearing child; budget,
     optimizer spec, stop rules and backend choice are static aux data — so a
     spec crosses ``jit`` / ``vmap`` boundaries and its static half rides the
@@ -340,6 +349,7 @@ class SelectionSpec:
     stop_if_zero: bool
     stop_if_negative: bool
     use_kernel: Optional[bool]
+    deadline_s: Optional[float]
 
     def __init__(
         self,
@@ -350,6 +360,7 @@ class SelectionSpec:
         stopIfZeroGain: bool | None = None,
         stopIfNegativeGain: bool | None = None,
         use_kernel: bool | None = None,
+        deadline_s: float | None = None,
         **optimizer_params,
     ):
         if not isinstance(fn, SetFunction):
@@ -393,6 +404,13 @@ class SelectionSpec:
                     "coverage matrix for the fused-sweep families)"
                 )
             use_kernel = bool(use_kernel)
+        if deadline_s is not None:
+            deadline_s = float(deadline_s)
+            if not math.isfinite(deadline_s) or deadline_s <= 0:
+                raise ValueError(
+                    "deadline_s must be a positive finite number of seconds "
+                    f"(or None for no deadline), got {deadline_s!r}"
+                )
         defaults = family_defaults(type(fn))
         stop_zero = (
             defaults["stopIfZeroGain"]
@@ -410,6 +428,7 @@ class SelectionSpec:
         object.__setattr__(self, "stop_if_zero", stop_zero)
         object.__setattr__(self, "stop_if_negative", stop_neg)
         object.__setattr__(self, "use_kernel", use_kernel)
+        object.__setattr__(self, "deadline_s", deadline_s)
 
     # -- execution-facing helpers -------------------------------------------
 
@@ -429,6 +448,7 @@ class SelectionSpec:
             self.stop_if_zero,
             self.stop_if_negative,
             self.use_kernel,
+            self.deadline_s,
         )
 
     # -- serialization -------------------------------------------------------
@@ -444,6 +464,7 @@ class SelectionSpec:
             "stopIfZeroGain": self.stop_if_zero,
             "stopIfNegativeGain": self.stop_if_negative,
             "use_kernel": self.use_kernel,
+            "deadline_s": self.deadline_s,
         }
 
     @classmethod
@@ -458,6 +479,7 @@ class SelectionSpec:
             stopIfZeroGain=d.get("stopIfZeroGain"),
             stopIfNegativeGain=d.get("stopIfNegativeGain"),
             use_kernel=d.get("use_kernel"),
+            deadline_s=d.get("deadline_s"),
         )
 
     def __eq__(self, other) -> bool:
@@ -480,7 +502,9 @@ class SelectionSpec:
             f"budget={self.budget}, optimizer={self.optimizer!r}, "
             f"stopIfZeroGain={self.stop_if_zero}, "
             f"stopIfNegativeGain={self.stop_if_negative}, "
-            f"use_kernel={self.use_kernel})"
+            f"use_kernel={self.use_kernel}"
+            + (f", deadline_s={self.deadline_s}" if self.deadline_s else "")
+            + ")"
         )
 
 
@@ -489,7 +513,7 @@ def _spec_flatten(s: SelectionSpec):
 
 
 def _spec_unflatten(aux, children):
-    budget, optimizer, stop_zero, stop_neg, use_kernel = aux
+    budget, optimizer, stop_zero, stop_neg, use_kernel, deadline_s = aux
     obj = object.__new__(SelectionSpec)
     object.__setattr__(obj, "fn", children[0])
     object.__setattr__(obj, "budget", budget)
@@ -497,6 +521,7 @@ def _spec_unflatten(aux, children):
     object.__setattr__(obj, "stop_if_zero", stop_zero)
     object.__setattr__(obj, "stop_if_negative", stop_neg)
     object.__setattr__(obj, "use_kernel", use_kernel)
+    object.__setattr__(obj, "deadline_s", deadline_s)
     return obj
 
 

@@ -42,7 +42,8 @@ matrix).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+import time
+from typing import Callable, Optional, Sequence
 
 import jax
 import numpy as np
@@ -62,13 +63,18 @@ from repro.core.optimizers.spec import OptimizerSpec, SelectionSpec
 class SelectionRequest:
     """One enqueued query: a request id plus its :class:`SelectionSpec`.
 
-    The request IS the spec — serving adds only routing identity (``rid``),
+    The request IS the spec — serving adds only routing identity (``rid``)
+    and arrival time (``enqueue_t``, monotonic, stamped at construction),
     which is what lets the coalescer, the batched engines, and the async
-    front end all consume the same validated object unchanged.
+    front end all consume the same validated object unchanged.  The arrival
+    stamp is what makes latency accounting truthful: a response reports the
+    time the *client* waited (queue + dispatch), not just its wave's
+    dispatch wall time.
     """
 
     rid: int | str
     spec: SelectionSpec
+    enqueue_t: float = dataclasses.field(default_factory=time.monotonic)
 
     @property
     def fn(self):
@@ -78,6 +84,14 @@ class SelectionRequest:
     @property
     def budget(self) -> int:
         return self.spec.budget
+
+    @property
+    def deadline_t(self) -> Optional[float]:
+        """Absolute monotonic deadline (``enqueue_t + spec.deadline_s``), or
+        None when the request carries no deadline."""
+        if self.spec.deadline_s is None:
+            return None
+        return self.enqueue_t + self.spec.deadline_s
 
 
 def next_pow2(x: int) -> int:
@@ -292,6 +306,15 @@ class Wave:
     def n_padded_slots(self) -> int:
         return len(self.fns) - len(self.requests)
 
+    @property
+    def label(self) -> str:
+        """Metrics label of the group that produced this wave — matches
+        :func:`group_label` for every member request."""
+        return (
+            f"{type(self.requests[0].spec.fn).__name__}/n{self.n_bucket}"
+            f"/{self.optimizer.name}"
+        )
+
     def demux(self, results: Sequence) -> dict:
         """Map per-slot engine results back to {rid: result}, dropping the
         batch-pad slots.  ``results`` is whatever the engine returned, in
@@ -299,12 +322,53 @@ class Wave:
         return {req.rid: results[i] for i, req in enumerate(self.requests)}
 
 
-def _wave_key(req: SelectionRequest, fn_padded) -> tuple:
-    structure = jax.tree.structure(fn_padded)
-    shapes = tuple(tuple(leaf.shape) for leaf in jax.tree.leaves(fn_padded))
+# -- group keys: wave identity, promoted to queue identity --------------------
+#
+# Requests sharing a group key can ride one engine dispatch, so the key is
+# ALSO the right identity for the serving front door's pending queues
+# (continuous batching: a late request joins the next wave of *its* group
+# instead of waiting for a global flush).  The key must therefore be cheap
+# enough to compute at submit time: the padded pytree layout is derived
+# shape-only via ``jax.eval_shape`` (no FLOPs, no device buffers) and
+# memoized per (treedef, leaf shapes/dtypes, n_bucket).
+
+_LAYOUT_CACHE: dict = {}
+
+
+def _padded_layout(fn, n_bucket: int) -> tuple:
+    """(pytree structure, leaf shapes) of ``pad_function(fn, n_bucket)``,
+    computed without materializing any padded array."""
+    leaves, treedef = jax.tree.flatten(fn)
+    cache_key = (
+        treedef,
+        tuple((tuple(leaf.shape), str(leaf.dtype)) for leaf in leaves),
+        n_bucket,
+    )
+    layout = _LAYOUT_CACHE.get(cache_key)
+    if layout is None:
+        padded = jax.eval_shape(lambda f: pad_function(f, n_bucket), fn)
+        layout = (
+            jax.tree.structure(padded),
+            tuple(tuple(leaf.shape) for leaf in jax.tree.leaves(padded)),
+        )
+        _LAYOUT_CACHE[cache_key] = layout
+    return layout
+
+
+def group_key(req: SelectionRequest, *, n_multiple: int = 1) -> tuple:
+    """The (family, n-bucket) group identity of a request.
+
+    Two requests with equal keys coalesce into the same wave: padded pytree
+    structure + leaf shapes, the (hashable) OptimizerSpec — hyperparameters
+    ride along without being enumerated — and the stop flags.  Budgets and
+    deadlines deliberately do NOT key: waves mix budgets under one bucketed
+    loop bound, and a deadline shapes flush *scheduling*, never wave
+    membership.
+    """
+    fn = req.fn  # the spec's backend choice applied
+    n_bucket = bucket_size(fn.n, n_multiple)
+    structure, shapes = _padded_layout(fn, n_bucket)
     spec = req.spec
-    # the OptimizerSpec is hashable static metadata, so it IS the key entry —
-    # hyperparameters (screen_k, ...) ride along without being enumerated
     return (
         structure,
         shapes,
@@ -312,6 +376,63 @@ def _wave_key(req: SelectionRequest, fn_padded) -> tuple:
         spec.stop_if_zero,
         spec.stop_if_negative,
     )
+
+
+def group_label(req: SelectionRequest, *, n_multiple: int = 1) -> str:
+    """Human-readable metrics label for the request's group:
+    ``Family/n<bucket>/<Optimizer>`` (coarser than :func:`group_key` — leaf
+    shapes beyond the n-bucket are folded away for readability)."""
+    fn = req.spec.fn
+    return (
+        f"{type(fn).__name__}/n{bucket_size(fn.n, n_multiple)}"
+        f"/{req.spec.optimizer.name}"
+    )
+
+
+def waves_for_group(
+    requests: Sequence[SelectionRequest],
+    *,
+    max_wave: int = 64,
+    n_multiple: int = 1,
+    b_multiple: int = 1,
+) -> list[Wave]:
+    """Build dispatchable waves from requests sharing one :func:`group_key`
+    (one queue's drain).  Padding is materialized HERE, at flush time —
+    submit time only ever computes shapes."""
+    members = []
+    for req in requests:
+        fn = req.fn
+        members.append((req, pad_function(fn, bucket_size(fn.n, n_multiple))))
+    head = requests[0].spec
+    waves = []
+    for lo in range(0, len(members), max_wave):
+        chunk = members[lo : lo + max_wave]
+        reqs = [r for r, _ in chunk]
+        fns = [f for _, f in chunk]
+        budgets = [r.budget for r in reqs]
+        # batch pads: budget-0 copies of slot 0, dropped at demux
+        b_total = -(-len(fns) // b_multiple) * b_multiple
+        fns = fns + [fns[0]] * (b_total - len(fns))
+        budgets = budgets + [0] * (b_total - len(reqs))
+        n_bucket = fns[0].n
+        valid = np.zeros((b_total, n_bucket), bool)
+        for i in range(b_total):
+            true_n = reqs[i].spec.fn.n if i < len(reqs) else reqs[0].spec.fn.n
+            valid[i, :true_n] = True
+        waves.append(
+            Wave(
+                requests=reqs,
+                fns=fns,
+                valid=valid,
+                budgets=budgets,
+                max_budget=next_pow2(max(budgets)) if max(budgets) else 1,
+                optimizer=head.optimizer,
+                stop_if_zero=head.stop_if_zero,
+                stop_if_negative=head.stop_if_negative,
+                n_bucket=n_bucket,
+            )
+        )
+    return waves
 
 
 def coalesce(
@@ -331,43 +452,22 @@ def coalesce(
       b_multiple: pad every wave's batch up to a multiple of this (the mesh
         batch-axis size for sharded serving).
 
-    Returns waves in first-arrival order of their earliest request.
+    Returns waves in first-arrival order of their earliest request.  The
+    serving front door keeps per-group queues keyed by :func:`group_key`
+    and drains them through :func:`waves_for_group` directly; this function
+    is the one-shot composition of the two for flat request lists.
     """
-    groups: dict[tuple, list[tuple[SelectionRequest, object]]] = {}
+    groups: dict[tuple, list[SelectionRequest]] = {}
     for req in requests:
-        fn = req.fn  # the spec's backend choice applied
-        n_bucket = bucket_size(fn.n, n_multiple)
-        padded = pad_function(fn, n_bucket)
-        groups.setdefault(_wave_key(req, padded), []).append((req, padded))
-
+        groups.setdefault(group_key(req, n_multiple=n_multiple), []).append(req)
     waves = []
-    for key, members in groups.items():
-        _, _, optimizer, stop_zero, stop_neg = key
-        for lo in range(0, len(members), max_wave):
-            chunk = members[lo : lo + max_wave]
-            reqs = [r for r, _ in chunk]
-            fns = [f for _, f in chunk]
-            budgets = [r.budget for r in reqs]
-            # batch pads: budget-0 copies of slot 0, dropped at demux
-            b_total = -(-len(fns) // b_multiple) * b_multiple
-            fns = fns + [fns[0]] * (b_total - len(fns))
-            budgets = budgets + [0] * (b_total - len(reqs))
-            n_bucket = fns[0].n
-            valid = np.zeros((b_total, n_bucket), bool)
-            for i in range(b_total):
-                true_n = reqs[i].spec.fn.n if i < len(reqs) else reqs[0].spec.fn.n
-                valid[i, :true_n] = True
-            waves.append(
-                Wave(
-                    requests=reqs,
-                    fns=fns,
-                    valid=valid,
-                    budgets=budgets,
-                    max_budget=next_pow2(max(budgets)) if max(budgets) else 1,
-                    optimizer=optimizer,
-                    stop_if_zero=stop_zero,
-                    stop_if_negative=stop_neg,
-                    n_bucket=n_bucket,
-                )
+    for members in groups.values():
+        waves.extend(
+            waves_for_group(
+                members,
+                max_wave=max_wave,
+                n_multiple=n_multiple,
+                b_multiple=b_multiple,
             )
+        )
     return waves

@@ -6,31 +6,51 @@ requests — :class:`~repro.core.optimizers.spec.SelectionSpec` objects, the
 same typed request the whole library runs on — and the server answers them
 in **waves**:
 
-  submit()  ->  pending queue
-  flush()   ->  coalesce into padded (function-family, n-bucket) waves
+  submit()  ->  per-(family, n-bucket) pending queue  [continuous batching]
+  flush()   ->  drain queues into padded waves
             ->  one batched-engine dispatch per wave
                   (single device, or a 2-D batch x data mesh via ``mesh=``)
-            ->  demultiplex per-request responses + latency/throughput stats
+            ->  demultiplex per-request responses + structured metrics
+
+Requests queue **per group** (the coalescer's :func:`~repro.launch.coalesce.
+group_key`, computed shape-only at submit time), so a front end can flush
+one hot group the moment it fills while a cold group keeps waiting for
+co-travellers — the continuous-batching discipline LLM servers use, applied
+to selection waves.  ``submit`` applies **backpressure**: when ``max_queue``
+requests are already pending, it raises :class:`ServerOverloaded` instead
+of letting the queue grow without bound.  Specs may carry a ``deadline_s``;
+the async front end flushes a group early to honor the earliest deadline,
+and responses report whether theirs was missed.
+
+Failure discipline: a mid-flush engine error raises :class:`FlushError`
+carrying the exact partition of the work — already-computed responses are
+re-held for the next flush, never-dispatched requests are re-enqueued at
+the front of their queues, and only the poisoned wave's requests are named
+as failed (and also re-enqueued by ``flush()``, so the caller can ``cancel``
+them or retry).  Nothing is ever dropped.
 
 Results are bit-identical to a loop of single ``maximize`` calls per request
 (``tests/test_serving.py`` pins this): zero-padding adds zero-gain
 candidates that the ``valid`` mask blocks, budget bucketing only extends the
 frozen tail of the greedy loop, and the sharded path preserves the
-sweep -> first-argmax -> update ordering exactly.
+sweep -> first-argmax -> update ordering exactly.  Per-group queueing only
+changes *when* a wave dispatches, never what rides it.
 
     # 8 host devices, 2x2 batch x data mesh, a mixed random workload:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python -m repro.launch.serve --requests 32 --mesh 2x2
 
-See docs/serving.md for the request lifecycle and benchmarks/serve_bench.py
+See docs/serving.md for the request lifecycle and knob table,
+``launch/metrics.py`` for the metrics schema, and benchmarks/serve_bench.py
 for the wave-size x mesh-shape throughput sweep.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -41,12 +61,71 @@ from repro.core.optimizers.spec import (
     resolve_optimizer,
     wave_capable_names,
 )
-from repro.launch.coalesce import SelectionRequest, Wave, coalesce
+from repro.launch.coalesce import (
+    SelectionRequest,
+    Wave,
+    group_key,
+    group_label,
+    waves_for_group,
+)
+from repro.launch.metrics import ServerMetrics
+
+
+class ServerOverloaded(RuntimeError):
+    """``submit`` refused: the server already holds ``max_queue`` pending
+    requests.  Retry after a flush drains the queue, raise ``max_queue``, or
+    (async front end) submit with ``block=True`` to wait for space."""
+
+
+class FlushError(RuntimeError):
+    """An engine dispatch failed mid-flush.
+
+    Carries the exact partition of the flush's work so no request and no
+    computed response is ever lost:
+
+    - ``completed``: {rid: response} for waves that finished BEFORE the
+      failure (``flush()`` re-holds these for its next call);
+    - ``failed_requests``: the poisoned wave's requests (``flush()``
+      re-enqueues them at the front of their queue — ``cancel(rid)`` them
+      before retrying if the poison is the request itself);
+    - ``undispatched_requests``: requests whose waves never ran
+      (``flush()`` re-enqueues them, original arrival stamps intact).
+
+    ``__cause__`` is the engine's original exception.
+    """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        completed: dict,
+        failed_requests: list,
+        undispatched_requests: list,
+    ):
+        super().__init__(message)
+        self.completed = completed
+        self.failed_requests = failed_requests
+        self.undispatched_requests = undispatched_requests
+
+    @property
+    def failed_rids(self) -> list:
+        return [r.rid for r in self.failed_requests]
+
+    @property
+    def undispatched_rids(self) -> list:
+        return [r.rid for r in self.undispatched_requests]
 
 
 @dataclasses.dataclass
 class SelectionResponse:
-    """Answer to one request, plus where/how it was served."""
+    """Answer to one request, plus where/how it was served.
+
+    Latency accounting is truthful and decomposed: ``queue_s`` is how long
+    THIS request waited for co-travellers (submit -> its wave's dispatch
+    start), ``wave_s`` is the wave's dispatch wall time (shared by the
+    wave), and ``latency_s`` is their sum — what the client observed.  A
+    request that waited 500 ms for a 10 ms wave reports 510 ms, not 10.
+    """
 
     rid: int | str
     selection: list  # [(index, gain), ...] in pick order, true-n index space
@@ -54,22 +133,50 @@ class SelectionResponse:
     wave_size: int  # real requests in the wave that served this
     n_bucket: int  # padded ground-set size of that wave
     backend: str  # gain-sweep backend that answered ("xla", "pallas-fl", ...)
-    latency_s: float  # wave dispatch wall time (shared by the wave)
+    latency_s: float  # client-observed: queue_s + wave_s
+    queue_s: float = 0.0  # submit -> wave dispatch start (this request's wait)
+    wave_s: float = 0.0  # wave dispatch wall time (shared by the wave)
+    deadline_missed: bool = False  # delivered after the spec's deadline_s
 
 
-@dataclasses.dataclass
 class ServerStats:
-    """Aggregate accounting across flushes."""
+    """Aggregate accounting across flushes — a bounded-memory view over
+    :class:`~repro.launch.metrics.ServerMetrics`.
 
-    requests: int = 0
-    waves: int = 0
-    slots: int = 0  # total engine slots dispatched (incl. batch pads)
-    padded_slots: int = 0  # batch-pad slots (wasted work)
-    wave_seconds: list = dataclasses.field(default_factory=list)
+    Replaces the old unbounded ``wave_seconds`` list: totals are exact
+    (count / sum / max), percentiles come from a fixed-size reservoir, so a
+    long-lived server's accounting is O(1) in flush count.  ``summary()``
+    keeps the historical keys (requests / waves / slots / padded_slots /
+    total_s / qps) and adds the latency-decomposition and backpressure
+    fields; ``snapshot()`` is the full structured tree.
+    """
+
+    def __init__(self, metrics: ServerMetrics | None = None):
+        self.metrics = metrics if metrics is not None else ServerMetrics()
+
+    @property
+    def requests(self) -> int:
+        return self.metrics.counters["requests"]
+
+    @property
+    def waves(self) -> int:
+        return self.metrics.counters["waves"]
+
+    @property
+    def slots(self) -> int:  # total engine slots dispatched (incl. batch pads)
+        return self.metrics.counters["slots"]
+
+    @property
+    def padded_slots(self) -> int:  # batch-pad slots (wasted work)
+        return self.metrics.counters["padded_slots"]
+
+    @property
+    def rejections(self) -> int:  # submits refused by backpressure
+        return self.metrics.counters["rejections"]
 
     @property
     def total_seconds(self) -> float:
-        return float(sum(self.wave_seconds))
+        return float(self.metrics.wave_s.total)
 
     @property
     def qps(self) -> float:
@@ -77,6 +184,7 @@ class ServerStats:
         return self.requests / t if t > 0 else 0.0
 
     def summary(self) -> dict:
+        m = self.metrics
         return {
             "requests": self.requests,
             "waves": self.waves,
@@ -84,11 +192,25 @@ class ServerStats:
             "padded_slots": self.padded_slots,
             "total_s": round(self.total_seconds, 4),
             "qps": round(self.qps, 1),
+            "wave_p50_s": round(m.wave_s.percentile(0.50), 4) if self.waves else 0.0,
+            "wave_p99_s": round(m.wave_s.percentile(0.99), 4) if self.waves else 0.0,
+            "queue_p50_s": round(m.queue_s.percentile(0.50), 4)
+            if m.queue_s.count
+            else 0.0,
+            "queue_p99_s": round(m.queue_s.percentile(0.99), 4)
+            if m.queue_s.count
+            else 0.0,
+            "rejections": self.rejections,
+            "deadline_misses": m.counters["deadline_misses"],
         }
+
+    def snapshot(self) -> dict:
+        """The full structured metric tree (see launch/metrics.py schema)."""
+        return self.metrics.snapshot()
 
 
 class SelectionServer:
-    """Coalescing selection server over :class:`BatchedEngine`.
+    """Per-group coalescing selection server over :class:`BatchedEngine`.
 
     Args:
       mesh: None for single-device serving, or a 2-D mesh whose
@@ -97,11 +219,17 @@ class SelectionServer:
         engine).  Wave padding automatically rounds up to the mesh axis
         sizes.
       max_wave: cap on real requests per wave (bounds per-wave latency).
+      max_queue: admission-control cap on TOTAL pending requests across all
+        group queues; ``submit`` raises :class:`ServerOverloaded` beyond it.
+        None (default) disables backpressure.
 
-    The dispatch path is synchronous; ``submit`` only enqueues.  The async
-    front-end that flushes on timer / queue-depth triggers and completes
-    futures from the returned dict is
-    :class:`repro.launch.async_serve.AsyncSelectionServer`.
+    The dispatch path is synchronous; ``submit`` only enqueues (into the
+    request's group queue — the coalescer's wave identity promoted to queue
+    identity).  The async front-end that flushes each group on its own
+    depth / timer / deadline triggers and completes futures is
+    :class:`repro.launch.async_serve.AsyncSelectionServer`; it drives this
+    server through ``drain`` / ``dispatch_waves`` so its lock never covers
+    an engine dispatch.
     """
 
     def __init__(
@@ -110,11 +238,15 @@ class SelectionServer:
         batch_axis: str = "batch",
         data_axis: str = "data",
         max_wave: int = 64,
+        max_queue: int | None = None,
     ):
         self.mesh = mesh
         self.batch_axis = batch_axis
         self.data_axis = data_axis
         self.max_wave = max_wave
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1 or None, got {max_queue}")
+        self.max_queue = max_queue
         if mesh is not None:
             sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
             for name in (batch_axis, data_axis):
@@ -127,16 +259,24 @@ class SelectionServer:
         else:
             self.b_multiple = 1
             self.n_multiple = 1
-        self._pending: list[SelectionRequest] = []
+        # group_key -> FIFO of SelectionRequests (insertion-ordered dict, so
+        # flush order follows each group's first arrival)
+        self._queues: dict[tuple, list[SelectionRequest]] = {}
         self._undelivered: dict = {}  # flushed but not yet returned to a caller
         self._next_rid = 0
-        self.stats = ServerStats()
+        self.metrics = ServerMetrics()
+        self.stats = ServerStats(self.metrics)
 
     # -- request ingest ------------------------------------------------------
 
+    @property
+    def pending_count(self) -> int:
+        """Total pending requests across all group queues."""
+        return sum(len(q) for q in self._queues.values())
+
     def submit_spec(self, spec: SelectionSpec, rid=None):
-        """Enqueue one validated :class:`SelectionSpec`; returns its request
-        id.
+        """Enqueue one validated :class:`SelectionSpec` into its group's
+        queue; returns its request id.
 
         Everything that could poison a flush is rejected HERE, at submit
         time, so a bad request can never abort the flush that would have
@@ -146,7 +286,10 @@ class SelectionServer:
           ``NotImplementedError`` naming ``register_padder``;
         - an optimizer without batched execution hooks (e.g.
           StochasticGreedy) raises ``ValueError`` naming the batched-capable
-          set.
+          set;
+        - a full server (``max_queue`` pending) raises
+          :class:`ServerOverloaded` — admission control, counted under
+          ``rejections``.
 
         Unknown optimizer names, misspelled hyperparameters, and family
         stop-rule defaults were already handled when the spec was built —
@@ -166,10 +309,22 @@ class SelectionServer:
                 f"hooks, so it cannot ride served waves; batched-capable "
                 f"optimizers: {wave_capable_names()}"
             )
+        if self.max_queue is not None and self.pending_count >= self.max_queue:
+            self.metrics.inc("rejections")
+            raise ServerOverloaded(
+                f"pending queue is full ({self.pending_count}/{self.max_queue} "
+                f"requests); flush, raise max_queue, or retry after a drain"
+            )
         if rid is None:
             rid = self._next_rid
             self._next_rid += 1
-        self._pending.append(SelectionRequest(rid=rid, spec=spec))
+        req = SelectionRequest(rid=rid, spec=spec)
+        key = group_key(req, n_multiple=self.n_multiple)
+        queue = self._queues.setdefault(key, [])
+        queue.append(req)
+        self.metrics.observe_enqueue(
+            group_label(req, n_multiple=self.n_multiple), len(queue)
+        )
         return rid
 
     def submit(
@@ -213,10 +368,43 @@ class SelectionServer:
         )
         return self.submit_spec(spec, rid=rid)
 
+    def cancel(self, rid) -> bool:
+        """Remove one pending request (or one undelivered response) by id.
+        Returns True if something was removed.  The escape hatch after a
+        :class:`FlushError` named a poisoned request as failed: cancel it
+        and re-flush the survivors."""
+        for key, queue in list(self._queues.items()):
+            for i, req in enumerate(queue):
+                if req.rid == rid:
+                    del queue[i]
+                    if not queue:
+                        del self._queues[key]
+                    return True
+        return self._undelivered.pop(rid, None) is not None
+
+    def group_states(self) -> list[tuple]:
+        """Scheduling view of the pending queues: one
+        ``(group_key, depth, oldest_enqueue_t, earliest_deadline_t)`` tuple
+        per non-empty group (``earliest_deadline_t`` is None when no member
+        carries a deadline).  The async front end's flush triggers read
+        this; it is also handy for dashboards."""
+        out = []
+        for key, queue in self._queues.items():
+            deadlines = [t for t in (r.deadline_t for r in queue) if t is not None]
+            out.append(
+                (
+                    key,
+                    len(queue),
+                    queue[0].enqueue_t,
+                    min(deadlines) if deadlines else None,
+                )
+            )
+        return out
+
     # -- dispatch ------------------------------------------------------------
 
     def _dispatch(self, wave: Wave) -> dict:
-        t0 = time.perf_counter()
+        t0 = time.monotonic()
         engine = BatchedEngine(
             wave.fns,
             valid=wave.valid,
@@ -231,44 +419,138 @@ class SelectionServer:
             stop_if_negative=wave.stop_if_negative,
             max_budget=wave.max_budget,
         )
-        dt = time.perf_counter() - t0
-        self.stats.waves += 1
-        self.stats.requests += len(wave.requests)
-        self.stats.slots += wave.batch_size
-        self.stats.padded_slots += wave.n_padded_slots
-        self.stats.wave_seconds.append(dt)
+        t1 = time.monotonic()
+        wave_s = t1 - t0
+        label = wave.label
+        self.metrics.observe_wave(
+            label,
+            wave_s,
+            requests=len(wave.requests),
+            slots=wave.batch_size,
+            padded_slots=wave.n_padded_slots,
+        )
         name = backend_name(wave.fns[0])
         by_rid = wave.demux(results)
-        return {
-            req.rid: SelectionResponse(
+        out = {}
+        for req in wave.requests:
+            queue_s = max(0.0, t0 - req.enqueue_t)
+            missed = req.deadline_t is not None and t1 > req.deadline_t
+            self.metrics.observe_served(label, queue_s, deadline_missed=missed)
+            out[req.rid] = SelectionResponse(
                 rid=req.rid,
                 selection=by_rid[req.rid].as_list(),
                 result=by_rid[req.rid],
                 wave_size=len(wave.requests),
                 n_bucket=wave.n_bucket,
                 backend=name,
-                latency_s=dt,
+                latency_s=queue_s + wave_s,
+                queue_s=queue_s,
+                wave_s=wave_s,
+                deadline_missed=missed,
             )
-            for req in wave.requests
-        }
+        return out
+
+    def drain(
+        self, keys: Optional[Sequence[tuple]] = None, *, take_undelivered: bool = True
+    ) -> tuple[list[Wave], dict]:
+        """Atomically remove pending requests and build their waves.
+
+        Args:
+          keys: group keys to drain (default: every non-empty group).  This
+            is the continuous-batching hook — a front end drains just the
+            groups whose own trigger fired.
+          take_undelivered: also take (and clear) the held responses from
+            earlier partial flushes; ``flush()`` wants them, the async front
+            end leaves them for the sync caller.
+
+        Returns ``(waves, undelivered)``.  ALL waves are built before any
+        queue entry is removed, so a wave-build error leaves the server
+        state fully intact (nothing half-drained).
+        """
+        if keys is None:
+            keys = list(self._queues)
+        waves: list[Wave] = []
+        for key in keys:
+            requests = self._queues.get(key)
+            if not requests:
+                continue
+            waves.extend(
+                waves_for_group(
+                    requests,
+                    max_wave=self.max_wave,
+                    n_multiple=self.n_multiple,
+                    b_multiple=self.b_multiple,
+                )
+            )
+        for key in keys:
+            self._queues.pop(key, None)
+        undelivered: dict = {}
+        if take_undelivered:
+            undelivered, self._undelivered = self._undelivered, {}
+        return waves, undelivered
+
+    def dispatch_waves(self, waves: Sequence[Wave]) -> dict:
+        """Dispatch already-built waves in order; returns {rid: response}.
+
+        Pure compute — touches no queues, so it is safe to call OUTSIDE any
+        lock guarding them.  On an engine error it raises
+        :class:`FlushError` carrying the exact work partition (completed
+        responses / failed wave / undispatched waves); the caller decides
+        how to re-hold and re-enqueue.
+        """
+        responses: dict = {}
+        for i, wave in enumerate(waves):
+            try:
+                responses.update(self._dispatch(wave))
+            except Exception as e:
+                self.metrics.inc("flush_errors")
+                undispatched = [r for w in waves[i + 1 :] for r in w.requests]
+                failed = list(wave.requests)
+                raise FlushError(
+                    f"wave {i + 1}/{len(waves)} ({wave.label}, "
+                    f"{len(failed)} requests: {[r.rid for r in failed]}) "
+                    f"failed: {e}; {len(responses)} completed responses held, "
+                    f"{len(undispatched)} undispatched requests preserved",
+                    completed=responses,
+                    failed_requests=failed,
+                    undispatched_requests=undispatched,
+                ) from e
+        return responses
+
+    def requeue(self, requests: Sequence[SelectionRequest]) -> None:
+        """Put drained-but-unserved requests back at the FRONT of their
+        group queues, original arrival stamps intact (so queue-time
+        accounting spans the failure, truthfully)."""
+        for req in reversed(list(requests)):
+            key = group_key(req, n_multiple=self.n_multiple)
+            self._queues.setdefault(key, []).insert(0, req)
+        if requests:
+            self.metrics.inc("requeued", len(requests))
 
     def flush(self) -> dict:
-        """Coalesce + dispatch everything pending; returns {rid: response},
-        including any responses computed by an earlier ``select`` call on
-        behalf of requests it didn't own (nothing is ever dropped).
-        Coalescing runs BEFORE the pending queue and undelivered-response
-        holders are cleared, so a coalesce-time error leaves the server
-        state intact instead of silently dropping everyone's requests."""
-        waves = coalesce(
-            self._pending,
-            max_wave=self.max_wave,
-            n_multiple=self.n_multiple,
-            b_multiple=self.b_multiple,
-        )
-        self._pending = []
-        responses, self._undelivered = self._undelivered, {}
-        for wave in waves:
-            responses.update(self._dispatch(wave))
+        """Drain every group + dispatch; returns {rid: response}, including
+        any responses computed by an earlier ``select`` call on behalf of
+        requests it didn't own (nothing is ever dropped).
+
+        On a mid-flush engine error, raises :class:`FlushError` AFTER
+        restoring the server to a no-loss state: completed responses (this
+        flush's and previously-held ones) are re-held for the next call,
+        and every unserved request — the failed wave's and the
+        never-dispatched ones — is re-enqueued at the front of its queue.
+        ``e.failed_rids`` names the poisoned wave; ``cancel`` those before
+        retrying if the requests themselves are at fault.
+        """
+        waves, responses = self.drain()
+        try:
+            responses.update(self.dispatch_waves(waves))
+        except FlushError as e:
+            responses.update(e.completed)
+            self.hold_undelivered(responses)
+            # front-of-queue order: failed wave ahead of the undispatched
+            # tail, matching original arrival order
+            self.requeue(e.undispatched_requests)
+            self.requeue(e.failed_requests)
+            raise
         return responses
 
     def hold_undelivered(self, responses: dict) -> None:
@@ -393,6 +675,12 @@ def main():
         "default: single-device serving",
     )
     ap.add_argument("--max-wave", type=int, default=64)
+    ap.add_argument(
+        "--max-queue",
+        type=int,
+        default=None,
+        help="backpressure cap on pending requests (default: unbounded)",
+    )
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
@@ -400,6 +688,11 @@ def main():
         default="fl,gc,fb",
         help="comma-separated families to mix into the workload "
         "(fl,gc,fb,sc,psc,flqmi,gcmi,logdet)",
+    )
+    ap.add_argument(
+        "--metrics",
+        action="store_true",
+        help="print the full structured metrics snapshot (JSON) at the end",
     )
     a = ap.parse_args()
 
@@ -410,7 +703,7 @@ def main():
         b, d = (int(v) for v in a.mesh.lower().split("x"))
         mesh = jax.make_mesh((b, d), ("batch", "data"))
 
-    server = SelectionServer(mesh=mesh, max_wave=a.max_wave)
+    server = SelectionServer(mesh=mesh, max_wave=a.max_wave, max_queue=a.max_queue)
     families = tuple(a.families.split(","))
     requests = _random_requests(a.requests, seed=a.seed, families=families)
     # same family indexing as _random_requests: dispersion requests ride with
@@ -450,8 +743,12 @@ def main():
     print(
         f"sample response: rid={r0.rid} wave={r0.wave_size} "
         f"n_bucket={r0.n_bucket} backend={r0.backend} "
+        f"queue={r0.queue_s * 1e3:.2f}ms wave={r0.wave_s * 1e3:.2f}ms "
+        f"latency={r0.latency_s * 1e3:.2f}ms "
         f"selection={[i for i, _ in r0.selection]}"
     )
+    if a.metrics:
+        print(json.dumps(server.stats.snapshot(), indent=2))
 
 
 if __name__ == "__main__":

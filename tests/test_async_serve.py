@@ -69,14 +69,16 @@ def test_mixed_workload_bit_identical(rng):
     """Heterogeneous specs (sizes, budgets, optimizers) through the async
     front end: the coalescer groups them exactly as sync serving does and
     every response equals sequential solve (ids/gains; n=32 requests sit at
-    their bucket so n_evals compares exactly there)."""
+    their bucket so n_evals compares exactly there).  The three specs land
+    in three different groups, so each flushes on its own timer trigger —
+    the continuous-batching path."""
     specs = [
         _spec(rng, n=32, budget=4),
         _spec(rng, n=32, budget=6, optimizer="LazyGreedy", screen_k=4),
         _spec(rng, n=24, budget=3),
     ]
     with AsyncSelectionServer(max_pending=len(specs),
-                              flush_interval=600.0) as server:
+                              flush_interval=0.05) as server:
         futures = [server.submit(s) for s in specs]
         responses = [f.result(timeout=300) for f in futures]
     for s, r in zip(specs, responses):
@@ -123,12 +125,13 @@ def test_submit_validation_is_synchronous(rng):
 
 def test_flush_failure_propagates_to_futures(rng):
     """A dispatch error must complete every pending future exceptionally —
-    a stranded future is a hung client."""
+    a stranded future is a hung client.  The engine's ORIGINAL exception is
+    what surfaces (via FlushError.__cause__), not a serving wrapper."""
     class Boom(RuntimeError):
         pass
 
     class ExplodingServer(SelectionServer):
-        def flush(self):
+        def _dispatch(self, wave):
             raise Boom("engine on fire")
 
     with AsyncSelectionServer(ExplodingServer(), max_pending=100,
@@ -180,3 +183,190 @@ def test_async_path_emits_no_deprecation_warnings(rng):
         with AsyncSelectionServer(max_pending=1) as server:
             server.submit(spec).result(timeout=300)
     assert not [w for w in record if issubclass(w.category, DeprecationWarning)]
+
+
+# ---------------------------------------------------------------------------
+# Per-group continuous batching, backpressure, deadlines, failure discipline.
+# ---------------------------------------------------------------------------
+
+
+def test_per_group_depth_trigger_flushes_only_that_group(rng):
+    """The depth trigger is per (family, n-bucket) group: two same-shape
+    requests flush the moment their group fills, while a request in another
+    group keeps waiting for ITS co-travellers — continuous batching, not a
+    global flush."""
+    fl_specs = [_spec(rng, n=32) for _ in range(2)]
+    other = _spec(rng, n=24)  # different padded shapes -> different group
+    with AsyncSelectionServer(max_pending=2, flush_interval=600.0) as server:
+        f_other = server.submit(other)
+        futures = [server.submit(s) for s in fl_specs]
+        responses = [f.result(timeout=300) for f in futures]
+        assert all(r.wave_size == 2 for r in responses)
+        assert not f_other.done()  # its group never hit the depth trigger
+        server.flush_now()
+        r_other = f_other.result(timeout=300)
+        assert r_other.wave_size == 1
+    for s, r in zip(fl_specs, responses):
+        _same(solve(s), r)
+    # the n=24 request pads to its 32 bucket, so n_evals counts padded n —
+    # ids/gains are still bit-identical to sequential solve
+    assert r_other.selection == solve(other).as_list()
+
+
+def test_submit_does_not_block_behind_executing_wave(rng):
+    """The head-of-line-blocking fix: dispatch runs OUTSIDE the condition
+    lock, so a submit arriving mid-wave returns immediately instead of
+    waiting out the wave's wall time."""
+    import threading
+
+    started, release = threading.Event(), threading.Event()
+
+    class SlowServer(SelectionServer):
+        def _dispatch(self, wave):
+            started.set()
+            assert release.wait(timeout=60)
+            return super()._dispatch(wave)
+
+    with AsyncSelectionServer(SlowServer(), max_pending=1,
+                              flush_interval=600.0) as server:
+        f1 = server.submit(_spec(rng))
+        assert started.wait(timeout=60)  # wave 1 is now executing
+        t0 = time.monotonic()
+        f2 = server.submit(_spec(rng))
+        submit_s = time.monotonic() - t0
+        release.set()
+        assert submit_s < 1.0, f"submit blocked {submit_s:.2f}s behind the wave"
+        assert f1.result(timeout=300).selection
+        assert f2.result(timeout=300).selection
+
+
+def test_deadline_pulls_flush_ahead_of_interval(rng):
+    """A spec-level deadline_s caps how long its group waits for
+    co-travellers: the flush fires at the deadline, far ahead of a long
+    flush_interval."""
+    spec = _spec(rng, deadline_s=0.2)
+    with AsyncSelectionServer(max_pending=100, flush_interval=600.0) as server:
+        t0 = time.monotonic()
+        resp = server.submit(spec).result(timeout=300)
+        waited = time.monotonic() - t0
+    assert waited < 60, f"deadline did not pull the flush ({waited:.1f}s)"
+    assert resp.queue_s < 60
+    assert isinstance(resp.deadline_missed, bool)
+    _same(solve(spec), resp)
+
+
+def test_submit_backpressure_rejects_then_recovers(rng):
+    from repro.launch.serve import ServerOverloaded
+
+    with AsyncSelectionServer(max_pending=100, flush_interval=600.0,
+                              max_queue=2) as server:
+        a, b = server.submit(_spec(rng)), server.submit(_spec(rng))
+        with pytest.raises(ServerOverloaded):
+            server.submit(_spec(rng))
+        assert server.stats.rejections == 1
+        server.flush_now()  # drains the queue: space again
+        c = server.submit(_spec(rng))
+        server.flush_now()
+        assert all(f.result(timeout=300).selection for f in (a, b, c))
+
+
+def test_submit_block_waits_for_queue_space(rng):
+    """block=True turns a full-queue rejection into a wait: the submit
+    parks on the condition until a drain frees space, then enqueues."""
+    with AsyncSelectionServer(max_pending=2, flush_interval=600.0,
+                              max_queue=2) as server:
+        a, b = server.submit(_spec(rng)), server.submit(_spec(rng))
+        # the depth trigger (2 pending in one group) is already draining;
+        # this submit waits for that drain instead of raising
+        c = server.submit(_spec(rng), block=True)
+        server.flush_now()
+        assert all(f.result(timeout=300).selection for f in (a, b, c))
+    assert server.stats.rejections == 0
+
+
+def test_poisoned_wave_fails_its_futures_and_requeues_the_rest(rng):
+    """Failure discipline across a multi-group flush: the completed wave
+    delivers, the poisoned wave's future raises the engine's own error, and
+    the never-dispatched request is requeued with its future intact — zero
+    requests and zero computed responses lost."""
+    class Boom(RuntimeError):
+        pass
+
+    class PoisonServer(SelectionServer):
+        def _dispatch(self, wave):
+            if wave.n_bucket == 64:
+                raise Boom("poisoned wave")
+            return super()._dispatch(wave)
+
+    good, poison, late = _spec(rng, n=32), _spec(rng, n=64), _spec(rng, n=16)
+    with AsyncSelectionServer(PoisonServer(), max_pending=100,
+                              flush_interval=600.0) as server:
+        f_good = server.submit(good)
+        f_poison = server.submit(poison)
+        f_late = server.submit(late)
+        server.flush_now()
+        _same(solve(good), f_good.result(timeout=300))  # completed: delivered
+        with pytest.raises(Boom):
+            f_poison.result(timeout=60)  # poisoned: the engine's own error
+        assert not f_late.done()  # undispatched: requeued, future intact
+        assert server.pending == 1
+        server.flush_now()  # the poison is gone; the survivor now serves
+        _same(solve(late), f_late.result(timeout=300))
+        m = server.metrics.counters
+        assert m["flush_errors"] == 1
+        assert m["requeued"] == 1
+
+
+def test_close_without_flush_cancels_and_clears_server_queues(rng):
+    """close(flush=False) under multiple pending submits: every future is
+    cancelled AND the requests leave the wrapped server's queues — a later
+    sync flush() must not find orphans."""
+    sync = SelectionServer()
+    server = AsyncSelectionServer(sync, max_pending=100, flush_interval=600.0)
+    futures = [server.submit(_spec(rng)) for _ in range(3)]
+    server.close(flush=False)
+    assert all(f.cancelled() for f in futures)
+    assert sync.pending_count == 0
+    assert sync.flush() == {}
+
+
+def test_flush_now_races_timer_without_double_dispatch(rng):
+    """flush_now racing the timer trigger: draining is atomic under the
+    condition lock, so each request dispatches exactly once no matter who
+    wins."""
+    specs = [_spec(rng) for _ in range(6)]
+    with AsyncSelectionServer(max_pending=100, flush_interval=0.01) as server:
+        futures = []
+        for s in specs:
+            futures.append(server.submit(s))
+            server.flush_now()  # races the 10 ms timer
+        responses = [f.result(timeout=300) for f in futures]
+    assert server.stats.requests == len(specs)  # exactly once each
+    for s, r in zip(specs, responses):
+        _same(solve(s), r)
+
+
+def test_close_wakes_blocked_submitter(rng):
+    """A submitter parked on block=True backpressure must not hang when the
+    server closes underneath it — it raises instead."""
+    import threading
+
+    server = AsyncSelectionServer(max_pending=100, flush_interval=600.0,
+                                  max_queue=1)
+    first = server.submit(_spec(rng))
+    errors = []
+
+    def blocked_submit():
+        try:
+            server.submit(_spec(rng), block=True)
+        except RuntimeError as e:
+            errors.append(e)
+
+    t = threading.Thread(target=blocked_submit)
+    t.start()
+    time.sleep(0.1)  # let it park on the condition
+    server.close(flush=False)
+    t.join(timeout=60)
+    assert not t.is_alive()
+    assert len(errors) == 1 and "closed" in str(errors[0])
+    assert first.cancelled()

@@ -1,0 +1,99 @@
+"""launch/metrics.py: bounded counters, reservoir percentiles, the snapshot
+schema — the replacement for the server's old unbounded wave_seconds list.
+"""
+import numpy as np
+import pytest
+
+from repro.launch.metrics import Histogram, Reservoir, ServerMetrics
+
+
+def test_reservoir_is_bounded_and_uniform():
+    r = Reservoir(capacity=64, seed=0)
+    for v in range(10_000):
+        r.add(float(v))
+    assert len(r._sample) == 64  # O(capacity) memory, 10k values in
+    assert r.seen == 10_000
+    # a uniform sample of 0..9999: the median estimate lands mid-range
+    assert 2_000 < r.percentile(0.5) < 8_000
+    assert r.percentile(0.0) <= r.percentile(0.5) <= r.percentile(1.0)
+
+
+def test_reservoir_small_stream_is_exact():
+    r = Reservoir(capacity=512)
+    for v in [5.0, 1.0, 3.0]:
+        r.add(v)
+    assert r.percentile(0.0) == 1.0
+    assert r.percentile(0.5) == 3.0
+    assert r.percentile(1.0) == 5.0
+    assert np.isnan(Reservoir().percentile(0.5))  # empty -> NaN, not a crash
+    with pytest.raises(ValueError, match="capacity"):
+        Reservoir(capacity=0)
+
+
+def test_reservoir_is_deterministic():
+    a, b = Reservoir(capacity=8, seed=3), Reservoir(capacity=8, seed=3)
+    for v in range(1000):
+        a.add(float(v))
+        b.add(float(v))
+    assert a._sample == b._sample  # seeded: reproducible accounting
+
+
+def test_histogram_exact_aggregates_bounded_percentiles():
+    h = Histogram(reservoir_size=16)
+    for v in range(100):
+        h.record(float(v))
+    assert h.count == 100
+    assert h.total == float(sum(range(100)))  # count/sum/min/max are EXACT
+    assert h.min == 0.0 and h.max == 99.0
+    assert h.mean == pytest.approx(49.5)
+    snap = h.snapshot()
+    assert set(snap) == {"count", "sum", "max", "p50", "p99"}
+    assert snap["count"] == 100 and snap["max"] == 99.0
+    empty = Histogram().snapshot()
+    assert empty == {"count": 0, "sum": 0.0, "max": 0.0, "p50": 0.0, "p99": 0.0}
+
+
+def test_server_metrics_snapshot_schema():
+    m = ServerMetrics()
+    m.observe_enqueue("FacilityLocation/n32/NaiveGreedy", depth=1)
+    m.observe_enqueue("FacilityLocation/n32/NaiveGreedy", depth=2)
+    m.observe_wave("FacilityLocation/n32/NaiveGreedy", 0.5,
+                   requests=2, slots=4, padded_slots=2)
+    m.observe_served("FacilityLocation/n32/NaiveGreedy", 0.01)
+    m.observe_served("FacilityLocation/n32/NaiveGreedy", 0.02,
+                     deadline_missed=True)
+    m.inc("rejections")
+    snap = m.snapshot()
+    assert set(snap) == {"counters", "queue_s", "wave_s", "queue_depth", "groups"}
+    c = snap["counters"]
+    assert c["requests"] == 2 and c["waves"] == 1
+    assert c["slots"] == 4 and c["padded_slots"] == 2
+    assert c["rejections"] == 1 and c["deadline_misses"] == 1
+    assert snap["queue_s"]["count"] == 2
+    assert snap["wave_s"]["max"] == 0.5
+    assert snap["queue_depth"]["max"] == 2
+    g = snap["groups"]["FacilityLocation/n32/NaiveGreedy"]
+    assert g["requests"] == 2 and g["waves"] == 1
+    assert g["queue_s"]["count"] == 2 and g["wave_s"]["count"] == 1
+    # snapshots are detached: mutating the server doesn't alter them
+    m.inc("rejections")
+    assert snap["counters"]["rejections"] == 1
+
+
+def test_server_metrics_thread_safe_under_contention():
+    import threading
+
+    m = ServerMetrics()
+
+    def hammer():
+        for _ in range(500):
+            m.inc("requests")
+            m.observe_served("G/n8/NaiveGreedy", 0.001)
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert m.counters["requests"] == 2000
+    assert m.queue_s.count == 2000

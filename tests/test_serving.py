@@ -706,3 +706,174 @@ def test_server_rejects_unknown_optimizer_at_submit():
         server.submit(fn, 3, optimizer="lazygreedy")
     out = server.flush()  # the valid request is unaffected by the rejection
     assert out[rid_ok].selection == maximize(fn, 3)
+
+
+# ---------------------------------------------------------------------------
+# Per-group queues, failure discipline, backpressure, truthful latency.
+# ---------------------------------------------------------------------------
+
+
+def test_group_key_is_the_wave_identity(rng):
+    """group_key (computed shape-only at submit time) partitions requests
+    exactly as wave coalescing does: same family/bucket/optimizer share a
+    key, different shapes or flags split — and budgets/deadlines never key."""
+    from repro.launch.coalesce import group_key
+
+    def req(fn, budget, **kw):
+        return SelectionRequest(rid=0, spec=SelectionSpec(fn, budget, **kw))
+
+    a = req(_build("fl", rng, 24), 3)
+    b = req(_build("fl", rng, 24), 7, deadline_s=0.5)  # budget/deadline: no split
+    c = req(_build("fl", rng, 48), 3)  # different bucket
+    d = req(_build("gc", rng, 24), 3)  # different family
+    e = req(_build("fl", rng, 24), 3, stopIfZeroGain=False)  # different flags
+    f = req(_build("fl", rng, 24), 3, optimizer="LazyGreedy")  # different opt
+    keys = [group_key(r) for r in (a, b, c, d, e, f)]
+    assert keys[0] == keys[1]
+    assert len({keys[0], keys[2], keys[3], keys[4], keys[5]}) == 5
+
+
+def test_server_queues_per_group_and_group_states(rng):
+    """Pending requests live in per-group queues; group_states() exposes the
+    scheduling view (depth / oldest arrival / earliest deadline)."""
+    server = SelectionServer()
+    server.submit_spec(SelectionSpec(_build("fl", rng, 24), 3))
+    server.submit_spec(SelectionSpec(_build("fl", rng, 24), 5, deadline_s=9.0))
+    server.submit_spec(SelectionSpec(_build("gc", rng, 24), 3))
+    states = server.group_states()
+    assert sorted(depth for _, depth, _, _ in states) == [1, 2]
+    assert server.pending_count == 3
+    fl_state = next(s for s in states if s[1] == 2)
+    assert fl_state[3] is not None  # the deadline_s=9.0 member surfaces
+    gc_state = next(s for s in states if s[1] == 1)
+    assert gc_state[3] is None
+    out = server.flush()
+    assert len(out) == 3 and server.pending_count == 0
+
+
+def test_flush_error_loses_no_requests_or_responses(rng):
+    """The poisoned-wave pin (the mid-flush drop bug): wave 2 of 3 fails —
+    wave 1's computed responses are re-held, the failed wave AND the
+    never-dispatched wave are re-enqueued, and the next flush answers
+    everyone.  Zero requests, zero computed responses lost."""
+    from repro.launch.serve import FlushError
+
+    class Boom(RuntimeError):
+        pass
+
+    class PoisonServer(SelectionServer):
+        armed = True
+
+        def _dispatch(self, wave):
+            if self.armed and wave.n_bucket == 64:
+                raise Boom("engine on fire")
+            return super()._dispatch(wave)
+
+    server = PoisonServer()
+    fn_good, fn_poison, fn_late = (
+        _build("fl", rng, 32),
+        _build("fl", rng, 64),
+        _build("fl", rng, 16),
+    )
+    rid_good = server.submit_spec(SelectionSpec(fn_good, 4))
+    rid_poison = server.submit_spec(SelectionSpec(fn_poison, 4))
+    rid_late = server.submit_spec(SelectionSpec(fn_late, 3))
+
+    with pytest.raises(FlushError) as excinfo:
+        server.flush()
+    e = excinfo.value
+    assert isinstance(e.__cause__, Boom)
+    assert e.failed_rids == [rid_poison]
+    assert e.undispatched_rids == [rid_late]
+    assert set(e.completed) == {rid_good}
+    # unserved requests are back in their queues, arrival stamps intact
+    assert server.pending_count == 2
+    assert server.metrics.counters["flush_errors"] == 1
+    assert server.metrics.counters["requeued"] == 2
+
+    server.armed = False  # the engine recovers; nothing was lost
+    out = server.flush()
+    assert set(out) == {rid_good, rid_poison, rid_late}
+    for fn, budget, rid in [(fn_good, 4, rid_good), (fn_poison, 4, rid_poison),
+                            (fn_late, 3, rid_late)]:
+        assert out[rid].selection == maximize(fn, budget)
+
+
+def test_flush_error_cancel_escape_hatch(rng):
+    """After a FlushError names a poisoned request, cancel(rid) removes it
+    from its queue so the retry serves the survivors."""
+    from repro.launch.serve import FlushError
+
+    class PoisonServer(SelectionServer):
+        def _dispatch(self, wave):
+            if wave.n_bucket == 64:
+                raise RuntimeError("this request always fails")
+            return super()._dispatch(wave)
+
+    server = PoisonServer()
+    rid_ok = server.submit_spec(SelectionSpec(_build("fl", rng, 32), 4))
+    rid_bad = server.submit_spec(SelectionSpec(_build("fl", rng, 64), 4))
+    with pytest.raises(FlushError):
+        server.flush()
+    assert server.cancel(rid_bad)
+    assert not server.cancel(rid_bad)  # already gone
+    out = server.flush()  # survivors (and the held wave-1 response) surface
+    assert set(out) == {rid_ok}
+
+
+def test_latency_reports_queue_time_truthfully(rng):
+    """The latency-lie fix: a request that waited in the queue reports that
+    wait.  latency_s = queue_s + wave_s, and queue_s covers the dwell."""
+    import time as _time
+
+    server = SelectionServer()
+    rid = server.submit_spec(SelectionSpec(_build("fl", rng, 24), 4))
+    _time.sleep(0.25)
+    resp = server.flush()[rid]
+    assert resp.queue_s >= 0.25
+    assert resp.wave_s > 0
+    assert resp.latency_s == pytest.approx(resp.queue_s + resp.wave_s)
+    assert resp.latency_s > resp.wave_s  # the old code reported only wave_s
+    assert resp.deadline_missed is False
+    m = server.metrics.snapshot()
+    assert m["queue_s"]["count"] == 1 and m["queue_s"]["max"] >= 0.25
+
+
+def test_server_backpressure_and_cancel_free_space(rng):
+    """max_queue admission control: overflow raises ServerOverloaded and is
+    counted; cancel() and flush() free space."""
+    from repro.launch.serve import ServerOverloaded
+
+    server = SelectionServer(max_queue=2)
+    rid_a = server.submit_spec(SelectionSpec(_build("fl", rng, 24), 3))
+    server.submit_spec(SelectionSpec(_build("gc", rng, 24), 3))
+    with pytest.raises(ServerOverloaded, match="2/2"):
+        server.submit_spec(SelectionSpec(_build("fl", rng, 24), 3))
+    assert server.stats.rejections == 1
+    assert server.cancel(rid_a)  # freeing a slot re-admits
+    server.submit_spec(SelectionSpec(_build("fl", rng, 24), 3))
+    out = server.flush()
+    assert len(out) == 2
+    with pytest.raises(ValueError, match="max_queue"):
+        SelectionServer(max_queue=0)
+
+
+def test_server_stats_bounded_with_stable_summary_keys(rng):
+    """The unbounded wave_seconds fix: accounting memory is O(1) in flush
+    count (fixed-size reservoir), while summary() keeps the historical keys
+    and adds the latency/backpressure decomposition."""
+    server = SelectionServer()
+    fn = _build("fl", rng, 16)
+    for _ in range(3):
+        server.select([(fn, 3)])
+    s = server.stats.summary()
+    for key in ("requests", "waves", "slots", "padded_slots", "total_s", "qps"):
+        assert key in s  # historical keys, stable
+    for key in ("wave_p50_s", "wave_p99_s", "queue_p50_s", "queue_p99_s",
+                "rejections", "deadline_misses"):
+        assert key in s  # the new decomposition
+    assert s["requests"] == 3 and s["waves"] == 3
+    assert 0 < s["wave_p50_s"] <= s["wave_p99_s"] <= s["total_s"]
+    # bounded: the reservoir never outgrows its capacity
+    h = server.metrics.wave_s
+    assert h.count == 3 and len(h._reservoir._sample) <= h._reservoir.capacity

@@ -210,6 +210,26 @@ def test_selection_spec_dict_roundtrip(rng):
     _same(solve(spec), solve(back))
 
 
+def test_selection_spec_deadline_validation_and_roundtrip(rng):
+    """deadline_s: a serving-scheduler hint that rides the spec — validated
+    at construction, carried through dict and pytree round trips, and NEVER
+    part of the selection semantics (same result with or without one)."""
+    fn = _fl(rng, 32)
+    spec = SelectionSpec(fn, 4, deadline_s=0.5)
+    assert spec.deadline_s == 0.5
+    assert "deadline_s=0.5" in repr(spec)
+    assert "deadline_s" not in repr(SelectionSpec(fn, 4))  # quiet when unset
+    back = SelectionSpec.from_dict(spec.to_dict())
+    assert back == spec and back.deadline_s == 0.5
+    leaves, treedef = jax.tree.flatten(spec)
+    assert jax.tree.unflatten(treedef, leaves) == spec
+    # scheduling hint only: the selection is identical without the deadline
+    _same(solve(spec), solve(SelectionSpec(fn, 4)))
+    for bad in (0.0, -1.0, float("inf"), float("nan")):
+        with pytest.raises(ValueError, match="deadline_s"):
+            SelectionSpec(fn, 4, deadline_s=bad)
+
+
 def test_selection_spec_pytree_roundtrip(rng):
     fn = _fl(rng)
     spec = SelectionSpec(fn, 4, "LazyGreedy", screen_k=6)

@@ -33,6 +33,10 @@ import sys
 def _metric_kind(name: str) -> str | None:
     if name == "eval_ratio":
         return "skip"  # derived from the exact-compared eval counts
+    if name.startswith("queue_"):
+        return "skip"  # queue dwell is scheduler-timing noise, not throughput
+    if name in ("rejections", "deadline_misses"):
+        return "exact"  # deterministic by construction in serve_bench
     if name == "qps" or name.endswith("_qps") or name.endswith("speedup"):
         return "higher"
     if name.endswith("_ms") or name == "wave_ms":
