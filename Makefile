@@ -11,6 +11,9 @@
 #                    serve_bench run against the committed
 #                    BENCH_serving.json (deterministic rejection/deadline
 #                    counters compare exactly; timings at a loose 50%)
+#   make scale-smoke quick dense-vs-matrix-free scale_bench run diffed
+#                    against the committed BENCH_scale.json (analytic
+#                    peak_bytes compare exactly; timings at a loose 50%)
 #   make docs-check  execute the code blocks in README.md and docs/*.md,
 #                    and assert the README coverage matrix matches the
 #                    registries (tools/gen_matrix.py --check)
@@ -21,9 +24,9 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test-fast test-all bench bench-batched bench-serve bench-diff serve-smoke docs-check shims-check
+.PHONY: verify test-fast test-all bench bench-batched bench-serve bench-diff serve-smoke scale-smoke docs-check shims-check
 
-verify: test-fast docs-check shims-check serve-smoke
+verify: test-fast docs-check shims-check serve-smoke scale-smoke
 
 test-fast:
 	$(PYTHON) -m pytest -x -q
@@ -57,6 +60,14 @@ serve-smoke:
 	  $(PYTHON) -m repro.launch.serve --requests 8 --rounds 1 --mesh 1x1 --metrics
 	$(PYTHON) -m benchmarks.serve_bench --quick --json /tmp/BENCH_serving_new.json >/dev/null
 	$(PYTHON) tools/bench_diff.py benchmarks/BENCH_serving.json /tmp/BENCH_serving_new.json --threshold 0.5
+
+# scale smoke: the quick dense-vs-matrix-free cells (a subset of the full
+# sweep) diffed against the committed snapshot.  The analytic peak_bytes
+# columns are machine-independent and compare exactly; wall-clock uses the
+# same loose 50% threshold as serve-smoke.
+scale-smoke:
+	$(PYTHON) -m benchmarks.scale_bench --quick --json /tmp/BENCH_scale_new.json >/dev/null
+	$(PYTHON) tools/bench_diff.py benchmarks/BENCH_scale.json /tmp/BENCH_scale_new.json --threshold 0.5
 
 docs-check:
 	$(PYTHON) tools/check_docs.py

@@ -1,0 +1,195 @@
+"""Dense vs matrix-free selection at scale: wall clock + peak similarity bytes.
+
+The matrix-free path's claim (docs/functions.md, tests/test_matrix_free.py)
+is that selection cost scales with the FEATURE bytes, not n² kernel bytes.
+This bench records both sides per cell:
+
+  - ``select_ms``  — wall time for one full greedy ``solve()`` (best of 3
+    after a compile warm-up); noisy on shared boxes, diffed at a loose
+    threshold by ``make scale-smoke``.
+  - ``peak_bytes`` — the ANALYTIC peak similarity-storage footprint, exact
+    and machine-independent (``tools/bench_diff.py`` compares it exactly
+    and reports drift as a NOTE: a change means the memory shape changed):
+      dense         n * n * 4             (the materialized float32 kernel)
+      features      n * (d + TILE) * 4    (features + one streamed tile)
+      features_rep  n * d * 4 + u * (d + TILE) * 4
+      knn           n * k * 8             (int32 indices + float32 weights)
+
+Paths: ``dense`` materializes the kernel; ``features`` is the symmetric
+matrix-free objective (rows == candidates, O(n^2) similarity WORK per sweep
+but O(n * TILE) memory); ``features_rep`` is how FL actually scales to
+millions of points — ``u`` representative rows over all n candidates, so a
+sweep is O(u * n) work; ``knn`` sweeps a sparse graph in O(n * k).  Dense
+cells stop at n where n² fits comfortably; the matrix-free cells keep
+going — that asymmetry IS the result.  At every n where both paths run, the
+selections are asserted identical before timing.  ``--quick`` runs a strict
+subset of the full sweep so ``make scale-smoke`` diffs real rows against the
+committed ``benchmarks/BENCH_scale.json``.
+
+    PYTHONPATH=src python -m benchmarks.scale_bench          # full sweep
+    PYTHONPATH=src python -m benchmarks.scale_bench --quick  # smoke cells
+    PYTHONPATH=src python -m benchmarks.scale_bench --json benchmarks/BENCH_scale.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    FacilityLocation,
+    FacilityLocationMF,
+    GraphCut,
+    GraphCutMF,
+    SelectionSpec,
+    create_kernel,
+    knn_from_features,
+    solve,
+)
+from repro.core.sources import TILE  # noqa: E402
+
+METRIC = "rbf"
+D = 16
+K = 32
+U = 512  # representative rows for the features_rep path
+LAM = 0.4
+
+
+def _points(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, D)).astype(np.float32)
+
+
+def _build(family, path, x):
+    n = x.shape[0]
+    if path == "dense":
+        S = create_kernel(x, metric=METRIC)
+        fn = (FacilityLocation.from_kernel(S) if family == "fl"
+              else GraphCut.from_kernel(S, lam=LAM))
+        return fn, n * n * 4
+    if path == "features":
+        fn = (FacilityLocationMF.from_features(x, metric=METRIC)
+              if family == "fl"
+              else GraphCutMF.from_features(x, lam=LAM, metric=METRIC))
+        return fn, n * (D + TILE) * 4
+    if path == "features_rep":
+        # FL at true scale: u stride-sampled representative rows, all n
+        # candidates — a sweep is O(u * n) work, O(u * TILE) live similarity
+        assert family == "fl"
+        rep = x[:: max(1, n // U)][:U]
+        fn = FacilityLocationMF.from_features(rep, y=x, metric=METRIC)
+        return fn, n * D * 4 + rep.shape[0] * (D + TILE) * 4
+    src = knn_from_features(x, k=K, metric=METRIC)
+    fn = (FacilityLocationMF(src=src, n=src.n_cols, use_kernel=False)
+          if family == "fl"
+          else GraphCutMF.from_knn(src.indices, src.weights, lam=LAM))
+    return fn, n * K * 8
+
+
+def _time(fn, reps=1):
+    fn()  # warm-up / compile
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / reps)
+    return best
+
+
+def run_cell(family, path, n, budget):
+    x = _points(n)
+    fn, peak = _build(family, path, x)
+    spec = SelectionSpec(fn, budget)
+
+    def run():
+        return jax.block_until_ready(solve(spec).gains)
+
+    # parity gate before timing: at sizes where dense also fits, the
+    # feature-backed selection must pick the same items (knn and
+    # features_rep are different objectives — the sparsified kernel and the
+    # representative-row subset — so they have no dense twin to gate on)
+    if path == "features" and n <= 4096:
+        fn_d, _ = _build(family, "dense", x)
+        r_d, r_m = solve(SelectionSpec(fn_d, budget)), solve(spec)
+        assert list(np.asarray(r_d.order)) == list(np.asarray(r_m.order)), (
+            family, path, n)
+
+    t = _time(run)
+    return {
+        "family": family,
+        "path": path,
+        "n": n,
+        "budget": budget,
+        "select_ms": round(t * 1e3, 2),
+        "peak_bytes": peak,
+    }
+
+
+# full sweep: (family, path, n).  The quick cells are a strict subset so
+# `make scale-smoke`'s diff of a --quick run compares real committed rows.
+QUICK_CELLS = [
+    ("fl", "dense", 2048),
+    ("fl", "features", 2048),
+    ("fl", "knn", 2048),
+]
+FULL_CELLS = QUICK_CELLS + [
+    ("fl", "dense", 8192),
+    ("fl", "features", 8192),
+    ("fl", "features_rep", 262144),
+    ("fl", "features_rep", 1048576),
+    ("fl", "knn", 16384),
+    ("gc", "dense", 2048),
+    ("gc", "features", 2048),
+    ("gc", "features", 8192),
+]
+
+
+def _print_rows(title, rows):
+    print(f"\n# {title}")
+    print(f"{'family':>6s} {'path':>8s} {'n':>8s} {'k':>3s} "
+          f"{'select ms':>10s} {'peak MB':>9s}")
+    for r in rows:
+        print(f"{r['family']:>6s} {r['path']:>8s} {r['n']:8d} "
+              f"{r['budget']:3d} {r['select_ms']:10.1f} "
+              f"{r['peak_bytes'] / 1e6:9.1f}")
+
+
+def main(quick: bool = False, json_path: str | None = None):
+    budget = 16
+    cells = QUICK_CELLS if quick else FULL_CELLS
+    rows = [run_cell(family, path, n, budget) for family, path, n in cells]
+    _print_rows("Dense vs matrix-free selection: wall clock + peak sim bytes",
+                rows)
+    big = max(rows, key=lambda r: r["n"])
+    dense_equiv = big["n"] * big["n"] * 4
+    print(f"\nlargest cell: {big['family']}/{big['path']} n={big['n']} "
+          f"holds {big['peak_bytes'] / 1e6:.0f} MB where a dense kernel "
+          f"would need {dense_equiv / 1e9:.0f} GB")
+    if json_path:
+        snapshot = {
+            "bench": "scale_bench",
+            "host": platform.machine(),
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "rows": rows,
+        }
+        with open(json_path, "w") as f:
+            json.dump(snapshot, f, indent=1)
+        print(f"wrote {len(rows)} rows to {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smoke sweep")
+    ap.add_argument("--json", default=None, help="dump rows to this path")
+    a = ap.parse_args()
+    main(quick=a.quick, json_path=a.json)

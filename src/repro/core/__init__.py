@@ -2,11 +2,15 @@
 # information measures, and greedy maximizers — vectorized for TPU and
 # distributable over a multi-pod mesh (see DESIGN.md §2, §5).
 from repro.core.functions.base import SetFunction
-from repro.core.functions.clustered import clustered, cluster_mask
+from repro.core.functions.clustered import (
+    cluster_mask,
+    clustered,
+    clustered_matrix_free,
+)
 from repro.core.functions.disparity import DisparityMin, DisparityMinSum, DisparitySum
-from repro.core.functions.facility_location import FacilityLocation
+from repro.core.functions.facility_location import FacilityLocation, FacilityLocationMF
 from repro.core.functions.feature_based import FeatureBased
-from repro.core.functions.graph_cut import GraphCut
+from repro.core.functions.graph_cut import GraphCut, GraphCutMF
 from repro.core.functions.log_det import LogDet
 from repro.core.functions.set_cover import ProbabilisticSetCover, SetCover
 from repro.core.info.com import ConcaveOverModular
@@ -67,6 +71,15 @@ from repro.core.similarity import (
     kmeans,
     sparsify_topk,
 )
+from repro.core.sources import (
+    DenseSource,
+    FeatureSource,
+    KnnSource,
+    dense_source,
+    feature_source,
+    knn_from_features,
+    knn_source,
+)
 
 __all__ = [
     "SetFunction",
@@ -82,6 +95,16 @@ __all__ = [
     "ConcaveOverModular",
     "clustered",
     "cluster_mask",
+    "clustered_matrix_free",
+    "FacilityLocationMF",
+    "GraphCutMF",
+    "FeatureSource",
+    "KnnSource",
+    "DenseSource",
+    "feature_source",
+    "knn_source",
+    "knn_from_features",
+    "dense_source",
     "FLVMI",
     "FLQMI",
     "FLCG",

@@ -12,6 +12,12 @@ memoization design (Tables 3-4) but vectorized over the whole candidate set:
 
 Instances are pytrees so they pass through jit/shard_map; ``n`` and other
 shape-determining attributes are static meta fields.
+
+Functions either hold their statistics dense (a materialized kernel matrix)
+or matrix-free behind a :class:`~repro.core.sources.SimilaritySource`
+(features + metric, sparse k-NN, or a dense matrix on the same contract) —
+the protocol is identical either way, so optimizers, batched engines, and
+the serving coalescer never distinguish the two.
 """
 from __future__ import annotations
 

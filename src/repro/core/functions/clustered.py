@@ -29,3 +29,17 @@ def clustered(base_from_kernel: Callable, kernel, labels, **kwargs):
     """
     kernel = jnp.asarray(kernel)
     return base_from_kernel(kernel * cluster_mask(labels), **kwargs)
+
+
+def clustered_matrix_free(base_from_features: Callable, x, labels, **kwargs):
+    """Matrix-free clustered mixture: neither the kernel NOR the block mask
+    is ever materialized.
+
+    ``base_from_features`` is a matrix-free constructor taking a ``labels``
+    keyword (``FacilityLocationMF.from_features`` /
+    ``GraphCutMF.from_features``); the labels ride the
+    :class:`~repro.core.sources.FeatureSource` and zero cross-cluster
+    similarity inside the streamed tile sweep, so the §8 decomposition
+    scales to the same n the plain matrix-free path does.
+    """
+    return base_from_features(x, labels=jnp.asarray(labels, jnp.int32), **kwargs)

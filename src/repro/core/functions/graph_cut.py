@@ -6,6 +6,12 @@ ground-set kernel, plus the static modular vector ``total_j = sum_{i in U}
 S_ij``.  The diversity term of the gain is then
 
   f(j|A) = total_j - lam * (2 * selsum_j + S_jj)
+
+:class:`GraphCutMF` is the matrix-free variant: the ground kernel lives
+behind a :class:`~repro.core.sources.SimilaritySource` and the memoized
+statistics (``total``, ``diag``, incremental ``selsum``) are built by
+streaming it — the (n, n) matrix is never written.  The stateless fused
+sweep for feature sources is ``repro.kernels.gcmf_gains``.
 """
 from __future__ import annotations
 
@@ -14,6 +20,13 @@ import jax.numpy as jnp
 
 from repro.common import pytree_dataclass
 from repro.core.functions.base import SetFunction
+from repro.core.sources import (
+    DenseSource,
+    FeatureSource,
+    dense_source,
+    feature_source,
+    knn_source,
+)
 
 
 @pytree_dataclass
@@ -110,6 +123,140 @@ class GraphCut(SetFunction):
         rep = jnp.dot(self.total, m)
         div = m @ self.sim_ground @ m
         return rep - self.lam * div
+
+    def evaluate_state(self, state: GCState) -> jax.Array:
+        return state.value
+
+
+class GCMFPallasSweep:
+    """GainBackend: matrix-free stateless GC sweep — similarity computed
+    in-stream from feature tiles (kernels/gcmf_gains.py); dense sources
+    reuse the materialized-matrix kernel.  Same trade-off as
+    :class:`GCPallasSweep`: stateless O(n^2-streamed) answers for one-shot
+    / serving sweeps vs the O(n) memoized path inside greedy loops."""
+
+    name = "pallas-gcmf"
+
+    def full_sweep(self, fn: "GraphCutMF", state: GCState) -> jax.Array:
+        from repro.kernels import ops
+
+        src = fn.src
+        if isinstance(src, DenseSource):
+            return ops.gc_gains(src.sim, state.selmask, fn.total, fn.lam)
+        return ops.gcmf_gains(
+            src.y, src.yy, state.selmask, fn.total, fn.diag, fn.lam,
+            metric=src.metric, rbf_sigma=src.rbf_sigma,
+        )
+
+    def partial_sweep(
+        self, fn: "GraphCutMF", state: GCState, idx: jax.Array
+    ) -> jax.Array:
+        from repro.kernels import ops
+
+        src = fn.src
+        if isinstance(src, DenseSource):
+            return ops.gc_gains_at(src.sim, state.selmask, fn.total, fn.lam, idx)
+        return ops.gcmf_gains_at(
+            src.y, src.yy, state.selmask, fn.total, fn.diag, fn.lam, idx,
+            metric=src.metric, rbf_sigma=src.rbf_sigma,
+        )
+
+
+@pytree_dataclass(meta_fields=("n", "use_kernel"))
+class GraphCutMF(SetFunction):
+    """Matrix-free Graph Cut: same objective and memoized statistics as
+    :class:`GraphCut`, with the ground kernel behind a
+    :class:`~repro.core.sources.SimilaritySource`.  ``total`` and ``diag``
+    are precomputed at build time by streaming the source (O(n * d) work,
+    O(n) memory); per-step updates stream one similarity column."""
+
+    src: object  # square SimilaritySource over the ground set
+    total: jax.Array  # (n,) sum_{i in U} S_ij
+    diag: jax.Array  # (n,) S_jj
+    lam: jax.Array  # scalar trade-off
+    n: int
+    use_kernel: bool | None = False
+
+    @staticmethod
+    def from_features(
+        x,
+        lam: float = 0.5,
+        metric: str = "dot",
+        rbf_sigma: float | None = None,
+        labels=None,
+        use_kernel: bool | None = False,
+    ) -> "GraphCutMF":
+        src = feature_source(x, metric=metric, rbf_sigma=rbf_sigma, labels=labels)
+        return GraphCutMF._from_source(src, lam, use_kernel)
+
+    @staticmethod
+    def from_knn(
+        indices, weights, lam: float = 0.5, use_kernel: bool | None = False
+    ) -> "GraphCutMF":
+        src = knn_source(indices, weights)
+        return GraphCutMF._from_source(src, lam, use_kernel)
+
+    @staticmethod
+    def from_dense(
+        sim, lam: float = 0.5, use_kernel: bool | None = False
+    ) -> "GraphCutMF":
+        src = dense_source(sim)
+        return GraphCutMF._from_source(src, lam, use_kernel)
+
+    @staticmethod
+    def _from_source(src, lam, use_kernel) -> "GraphCutMF":
+        if src.n_rows != src.n_cols:
+            raise ValueError(
+                f"GraphCutMF needs a square ground-set source; got "
+                f"({src.n_rows}, {src.n_cols})"
+            )
+        return GraphCutMF(
+            src=src,
+            total=src.col_sums(),
+            diag=src.diag(),
+            lam=jnp.asarray(lam, jnp.float32),
+            n=src.n_cols,
+            use_kernel=use_kernel,
+        )
+
+    def init_state(self) -> GCState:
+        return GCState(
+            selsum=jnp.zeros((self.n,), jnp.float32),
+            value=jnp.zeros((), jnp.float32),
+            selmask=jnp.zeros((self.n,), jnp.float32),
+        )
+
+    def gains(self, state: GCState) -> jax.Array:
+        return self.total - self.lam * (2.0 * state.selsum + self.diag)
+
+    def gains_at(self, state: GCState, idxs: jax.Array) -> jax.Array:
+        return self.total[idxs] - self.lam * (
+            2.0 * state.selsum[idxs] + self.diag[idxs]
+        )
+
+    def update(self, state: GCState, j: jax.Array) -> GCState:
+        gain_j = self.gains_at(state, jnp.asarray(j)[None])[0]
+        return GCState(
+            selsum=state.selsum + self.src.col(j),
+            value=state.value + gain_j,
+            selmask=state.selmask.at[j].set(1.0),
+        )
+
+    def gain_backend(self) -> GCMFPallasSweep | None:
+        from repro.core.optimizers.backends import kernel_enabled
+
+        if not kernel_enabled(self.use_kernel, self.n, matrix_free=True):
+            return None
+        src = self.src
+        if isinstance(src, FeatureSource) and src.col_labels is None:
+            return GCMFPallasSweep()
+        if isinstance(src, DenseSource):
+            return GCMFPallasSweep()
+        return None  # k-NN / clustered sources stay on the XLA path
+
+    def evaluate(self, mask: jax.Array) -> jax.Array:
+        m = mask.astype(jnp.float32)
+        return jnp.dot(self.total, m) - self.lam * self.src.quad(mask)
 
     def evaluate_state(self, state: GCState) -> jax.Array:
         return state.value

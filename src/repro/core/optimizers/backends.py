@@ -143,6 +143,12 @@ def backend_name(fn) -> str:
 # CPU numbers in benchmarks/; compile-mode TPU validation is a ROADMAP item).
 KERNEL_MIN_N = 4096
 
+# Matrix-free sweeps recompute similarity from feature tiles, so the fused
+# kernels start paying off earlier: the XLA alternative is a scan that
+# re-materializes every (n_rows, TILE) block through HBM, not a
+# cache-resident dense sweep.
+MF_KERNEL_MIN_N = 1024
+
 # A stateless O(n^2)-streamed sweep (GraphCut / Disparity style) recomputes
 # the full matrix every step; past this many selection steps the memoized
 # O(n)-per-step XLA form wins even on TPU.  NOTE: the built-in gain_backend()
@@ -154,15 +160,19 @@ KERNEL_MAX_BUDGET_FRACTION = 0.25
 
 
 def choose_backend(
-    n: int, budget: int | None = None, device: str | None = None
+    n: int,
+    budget: int | None = None,
+    device: str | None = None,
+    matrix_free: bool = False,
 ) -> str:
     """Decision table: "kernel" or "xla" for a function built with
     ``use_kernel=None``.
 
     - non-TPU devices (CPU interpret mode, GPU) -> "xla": the Pallas sweeps
       only pay off compiled on TPU;
-    - small ground sets (n < KERNEL_MIN_N) -> "xla": launch overhead
-      dominates a cache-resident sweep;
+    - small ground sets (n < KERNEL_MIN_N, or MF_KERNEL_MIN_N for
+      ``matrix_free`` sweeps, which have no cache-resident XLA alternative)
+      -> "xla": launch overhead dominates;
     - very large budgets relative to n -> "xla": the stateless streamed
       kernels recompute O(n^2) per step, so long greedy loops favor the
       memoized XLA path (pass budget=None for memoized-state kernels).
@@ -173,7 +183,7 @@ def choose_backend(
     device = device if device is not None else jax.default_backend()
     if device != "tpu":
         return "xla"
-    if n < KERNEL_MIN_N:
+    if n < (MF_KERNEL_MIN_N if matrix_free else KERNEL_MIN_N):
         return "xla"
     if budget is not None and budget > KERNEL_MAX_BUDGET_FRACTION * n:
         return "xla"
@@ -181,11 +191,14 @@ def choose_backend(
 
 
 def kernel_enabled(
-    use_kernel: bool | None, n: int, budget: int | None = None
+    use_kernel: bool | None,
+    n: int,
+    budget: int | None = None,
+    matrix_free: bool = False,
 ) -> bool:
     """Resolve a family's ``use_kernel`` flag: an explicit True/False always
     wins; None defers to :func:`choose_backend` (manual flag beats heuristic).
     """
     if use_kernel is None:
-        return choose_backend(n, budget) == "kernel"
+        return choose_backend(n, budget, matrix_free=matrix_free) == "kernel"
     return bool(use_kernel)

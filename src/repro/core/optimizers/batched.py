@@ -10,7 +10,8 @@ Heterogeneity is expressed with padding masks rather than shape polymorphism:
 
 - different ground-set sizes: pad every instance's arrays to a common n and
   pass ``valid`` (B, n) — padded candidates are masked to -inf and never
-  selected (``n_evals`` still counts the padded sweep width);
+  selected, and ``n_evals`` counts only the live candidates, so a padded
+  instance reports the same count it would sequentially;
 - different budgets: pass a per-instance budget vector; the engine runs to
   max(budgets) internally and freezes an instance once its budget is spent.
 

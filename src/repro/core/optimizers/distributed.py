@@ -993,7 +993,8 @@ def sharded_batched_greedy(
     Returns ``(order, gains, n_evals, value)`` with shapes ``(B, max_budget)``,
     ``(B, max_budget)``, ``(B,)``, ``(B,)`` — per instance bit-identical to
     ``naive_greedy`` on one device (same sweep -> argmax -> update ordering,
-    same stopping rule, ``n_evals`` counting the padded sweep width n).
+    same stopping rule, ``n_evals`` counting the LIVE candidates per step —
+    pad columns sweep along but are not logical oracle calls).
     """
     from repro.core.optimizers.greedy import _should_stop
 
@@ -1022,6 +1023,10 @@ def sharded_batched_greedy(
             V_loc = valid_i.shape[0]
             col_off = _flat_axis_index(col_axes) * V_loc
             state0 = rule.init_state(parts_i)
+            # logical sweep width: live candidates across every shard
+            true_n = jax.lax.psum(
+                jnp.sum(valid_i, dtype=jnp.int32), col_axes
+            )
 
             def body(i, carry):
                 state, selected, order, gains, evals, done = carry
@@ -1047,7 +1052,7 @@ def sharded_batched_greedy(
                 )
                 order = order.at[i].set(jnp.where(take, winner, -1))
                 gains = gains.at[i].set(jnp.where(take, gbest, 0.0))
-                evals = evals + jnp.where(done | past, 0, n)
+                evals = evals + jnp.where(done | past, 0, true_n)
                 return state, selected, order, gains, evals, stop
 
             carry = (
@@ -1206,7 +1211,18 @@ def sharded_batched_lazy(
                     evaluated.at[rows[:, None], lwrite].set(True, mode="drop"),
                     evaluated,
                 )
-                cost = cost + jnp.where(live, hi - lo, 0)
+                # logical evaluations only: count the LIVE candidates in
+                # the level, summed over the owning shards (matches the
+                # single-device engine's padded-instance accounting)
+                w_valid = jax.lax.psum(
+                    jnp.sum(
+                        jnp.take_along_axis(valid_l, lread, axis=1) & own,
+                        axis=1,
+                        dtype=jnp.int32,
+                    ),
+                    col_axes,
+                )
+                cost = cost + jnp.where(live, w_valid, 0)
                 # running first-index argmax over everything evaluated so far
                 lvl_best = jnp.max(g, axis=1)
                 lvl_j = jnp.min(
@@ -1270,7 +1286,9 @@ def sharded_batched_lazy(
             ub0,
             jnp.full((B_loc, max_budget), -1, jnp.int32),
             jnp.zeros((B_loc, max_budget), jnp.float32),
-            jnp.full((B_loc,), n, jnp.int32),  # the initial bound sweep
+            jax.lax.psum(  # the initial bound sweep (live candidates)
+                jnp.sum(valid_l, axis=1, dtype=jnp.int32), col_axes
+            ),
             jnp.zeros((B_loc,), bool),
         )
         out = jax.lax.fori_loop(0, max_budget, body, carry)

@@ -60,6 +60,14 @@ def _naive_impl(
     decisions, so the None case lowers to exactly the unmasked program."""
     n = fn.n
     state = fn.init_state()
+    # n_evals counts LOGICAL oracle evaluations: a padded instance (served
+    # at a bucket size, or riding a batched wave) sweeps the padded width,
+    # but only the live candidates are reported — so served == sequential.
+    true_n = (
+        jnp.asarray(n, jnp.int32)
+        if valid is None
+        else jnp.sum(valid, dtype=jnp.int32)
+    )
 
     def body(i, carry):
         state, selected, order, gains, evals, done = carry
@@ -75,7 +83,7 @@ def _naive_impl(
         selected = selected.at[j].set(selected[j] | take)
         order = order.at[i].set(jnp.where(take, j, -1))
         gains = gains.at[i].set(jnp.where(take, gj, 0.0))
-        evals = evals + jnp.where(done | past, 0, n)
+        evals = evals + jnp.where(done | past, 0, true_n)
         return state, selected, order, gains, evals, stop
 
     carry = (
@@ -161,9 +169,11 @@ def _lazy_bucketed_impl(
 
     The winner is the first-index argmax over evaluated true gains
     (unevaluated entries held at NEG_INF), matching naive_greedy's tie rule.
-    ``n_evals`` counts, per instance, the widths of the levels that instance
-    was still unresolved for (plus the initial bound sweep) — instances that
-    accept early stop accruing even when the wave digs deeper for others.
+    ``n_evals`` counts, per instance, the LIVE (non-padded) candidates in
+    the levels that instance was still unresolved for (plus the initial
+    bound sweep over its live candidates) — instances that accept early
+    stop accruing even when the wave digs deeper for others, and a padded
+    instance reports the same count it would sequentially.
     """
     B, n = valid.shape
     levels = _screen_levels(n, screen_k)
@@ -196,7 +206,13 @@ def _lazy_bucketed_impl(
             evaluated = jnp.where(
                 live[:, None], evaluated.at[rows[:, None], idx].set(True), evaluated
             )
-            cost = cost + jnp.where(live, hi - lo, 0)
+            # logical evaluations only: a padded instance's level still
+            # spans hi - lo sorted slots, but the pad candidates in it are
+            # not oracle calls — count the live ones so served == sequential
+            w_valid = jnp.sum(
+                jnp.take_along_axis(valid, idx, axis=1), axis=1, dtype=jnp.int32
+            )
+            cost = cost + jnp.where(live, w_valid, 0)
             best = jnp.max(geval, axis=1)
             rest = (
                 sv[:, hi] if hi < n else jnp.full((B,), NEG_INF, sv.dtype)
@@ -241,7 +257,7 @@ def _lazy_bucketed_impl(
         ub0,
         jnp.full((B, max_budget), -1, jnp.int32),
         jnp.zeros((B, max_budget), jnp.float32),
-        jnp.full((B,), n, jnp.int32),  # the initial bound sweep
+        jnp.sum(valid, axis=1, dtype=jnp.int32),  # the initial bound sweep
         jnp.zeros((B,), bool),
     )
     out = jax.lax.fori_loop(0, max_budget, body, carry)

@@ -567,9 +567,9 @@ def solve(
         torn down — internally when omitted.
 
     Every route returns results bit-identical to the sequential one (ids,
-    gains, and — when a served request's n sits at its padding bucket —
-    ``n_evals``); ``tests/test_spec.py`` pins this, including on a real
-    2x2 device mesh.
+    gains, and ``n_evals`` — engines count logical evaluations, so bucket
+    padding does not leak into a served request's count);
+    ``tests/test_spec.py`` pins this, including on a real 2x2 device mesh.
     """
     single = isinstance(spec, SelectionSpec)
     specs = [spec] if single else list(spec)

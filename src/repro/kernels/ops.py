@@ -12,7 +12,9 @@ from repro.kernels import ref
 from repro.kernels.disp_gains import dmin_gains_pallas, dsum_gains_pallas
 from repro.kernels.fb_gains import fb_gains_at_pallas, fb_gains_pallas
 from repro.kernels.fl_gains import fl_gains_at_pallas, fl_gains_pallas
+from repro.kernels.flmf_gains import flmf_gains_at_pallas, flmf_gains_pallas
 from repro.kernels.gc_gains import gc_gains_at_pallas, gc_gains_pallas
+from repro.kernels.gcmf_gains import gcmf_gains_at_pallas, gcmf_gains_pallas
 from repro.kernels.sc_gains import psc_gains_pallas, sc_gains_pallas
 from repro.kernels.similarity_kernel import similarity_pallas
 
@@ -41,6 +43,42 @@ def gc_gains(sim, selmask, total, lam):
 
 def gc_gains_at(sim, selmask, total, lam, idx):
     return gc_gains_at_pallas(sim, selmask, total, lam, idx, interpret=_interpret())
+
+
+def flmf_gains(x, y, xx, yy, curmax, metric: str = "dot", rbf_sigma: float | None = None):
+    return flmf_gains_pallas(
+        x, y, xx, yy, curmax, metric=metric, rbf_sigma=rbf_sigma,
+        interpret=_interpret(),
+    )
+
+
+def flmf_gains_at(
+    x, y, xx, yy, curmax, idx, metric: str = "dot", rbf_sigma: float | None = None
+):
+    return flmf_gains_at_pallas(
+        x, y, xx, yy, curmax, idx, metric=metric, rbf_sigma=rbf_sigma,
+        interpret=_interpret(),
+    )
+
+
+def gcmf_gains(
+    y, yy, selmask, total, diag, lam,
+    metric: str = "dot", rbf_sigma: float | None = None,
+):
+    return gcmf_gains_pallas(
+        y, y, yy, yy, selmask, total, diag, lam,
+        metric=metric, rbf_sigma=rbf_sigma, interpret=_interpret(),
+    )
+
+
+def gcmf_gains_at(
+    y, yy, selmask, total, diag, lam, idx,
+    metric: str = "dot", rbf_sigma: float | None = None,
+):
+    return gcmf_gains_at_pallas(
+        y, yy, selmask, total, diag, lam, idx,
+        metric=metric, rbf_sigma=rbf_sigma, interpret=_interpret(),
+    )
 
 
 def fb_gains(feats, acc, w, concave: str = "sqrt"):
@@ -73,6 +111,10 @@ def dmin_gains(dist, selmask, count, curmin):
 similarity_ref = ref.similarity_ref
 fl_gains_ref = ref.fl_gains_ref
 gc_gains_ref = ref.gc_gains_ref
+flmf_gains_ref = ref.flmf_gains_ref
+gcmf_gains_ref = ref.gcmf_gains_ref
+flmf_gains_at_ref = ref.flmf_gains_at_ref
+gcmf_gains_at_ref = ref.gcmf_gains_at_ref
 fb_gains_ref = ref.fb_gains_ref
 fl_gains_at_ref = ref.fl_gains_at_ref
 gc_gains_at_ref = ref.gc_gains_at_ref

@@ -140,6 +140,58 @@ def fb_gains_at_ref(feats, acc, w, idx, concave: str = "sqrt") -> jax.Array:
     return _subset(fb_gains_ref(feats, acc, w, concave), idx)
 
 
+def flmf_gains_ref(
+    x: jax.Array,
+    y: jax.Array,
+    curmax: jax.Array,
+    metric: str = "dot",
+    rbf_sigma: float | None = None,
+) -> jax.Array:
+    """Matrix-free FL oracle: materialize the similarity, then sweep.
+
+    x (u, d), y (n, d), curmax (u,) -> (n,).  The tested kernels never
+    build the (u, n) matrix; this reference deliberately does.
+    """
+    return fl_gains_ref(similarity_ref(x, y, metric, rbf_sigma), curmax)
+
+
+def gcmf_gains_ref(
+    y: jax.Array,
+    selmask: jax.Array,
+    total: jax.Array,
+    lam: jax.Array,
+    metric: str = "dot",
+    rbf_sigma: float | None = None,
+    diag: jax.Array | None = None,
+) -> jax.Array:
+    """Matrix-free GC oracle: materialize the ground kernel, then sweep.
+
+    ``diag`` defaults to the materialized kernel's diagonal; pass the
+    precomputed statistic to match the fused kernel bit-for-bit.
+    """
+    sim = similarity_ref(y, y, metric, rbf_sigma)
+    s32 = sim.astype(jnp.float32)
+    selsum = s32 @ selmask.astype(jnp.float32)
+    dg = jnp.diagonal(s32) if diag is None else diag.astype(jnp.float32)
+    return total.astype(jnp.float32) - jnp.asarray(lam, jnp.float32) * (
+        2.0 * selsum + dg
+    )
+
+
+def flmf_gains_at_ref(x, y, curmax, idx, metric="dot", rbf_sigma=None) -> jax.Array:
+    """Subset oracle: ``flmf_gains_ref`` gathered at ``idx`` (k,) -> (k,)."""
+    return _subset(flmf_gains_ref(x, y, curmax, metric, rbf_sigma), idx)
+
+
+def gcmf_gains_at_ref(
+    y, selmask, total, lam, idx, metric="dot", rbf_sigma=None, diag=None
+) -> jax.Array:
+    """Subset oracle: ``gcmf_gains_ref`` gathered at ``idx`` (k,) -> (k,)."""
+    return _subset(
+        gcmf_gains_ref(y, selmask, total, lam, metric, rbf_sigma, diag), idx
+    )
+
+
 def fl_gains_update_ref(
     sim: jax.Array, curmax: jax.Array, winner: jax.Array
 ) -> tuple[jax.Array, jax.Array]:

@@ -35,6 +35,12 @@ measures (zero COLUMNS of the ground-side kernel only; the query-side row
 axis is never padded, for the same reduction-tree reason as FL).  MI / CG
 measures that are plain instances of a padded family — gccg, sc_mi/.../
 psc_cmi, logdet_cg — resolve along the MRO and need no entry of their own.
+The matrix-free families (FacilityLocationMF / GraphCutMF) pad their
+similarity SOURCE instead of a matrix: feature sources pad zero feature
+rows on the candidate axis, k-NN sources pad meta-only for FL (the scatter
+target grows) and -1/-0 rows for GC, dense sources pad like their
+materialized counterparts — so feature- and k-NN-backed requests serve
+through ``solve()`` / ``SelectionServer`` unchanged.
 ``register_padder`` plugs in more families; unsupported ones raise a
 ``NotImplementedError`` naming it (see docs/functions.md for the coverage
 matrix).
@@ -49,14 +55,15 @@ import jax
 import numpy as np
 
 from repro.core.functions.disparity import DisparityMin, DisparitySum
-from repro.core.functions.facility_location import FacilityLocation
+from repro.core.functions.facility_location import FacilityLocation, FacilityLocationMF
 from repro.core.functions.feature_based import FeatureBased
-from repro.core.functions.graph_cut import GraphCut
+from repro.core.functions.graph_cut import GraphCut, GraphCutMF
 from repro.core.functions.log_det import LogDet
 from repro.core.functions.set_cover import ProbabilisticSetCover, SetCover
 from repro.core.info.fl import FLCG, FLCMI, FLQMI, FLVMI
 from repro.core.info.gc import GCMI
 from repro.core.optimizers.spec import OptimizerSpec, SelectionSpec
+from repro.core.sources import DenseSource, FeatureSource, KnnSource
 
 
 @dataclasses.dataclass
@@ -227,6 +234,96 @@ def _pad_flcmi(fn: FLCMI, n_to: int) -> FLCMI:
     )
 
 
+def _pad_source_cols(src, n_to: int):
+    """Pad a similarity source's CANDIDATE (column) axis only — the row
+    axis is a sum-reduction axis and is never padded (same reduction-tree
+    argument as ``_pad_fl``)."""
+    import dataclasses as _dc
+
+    import jax.numpy as jnp
+
+    if isinstance(src, FeatureSource):
+        n = src.n_cols
+        y = jnp.zeros((n_to, src.y.shape[1]), src.y.dtype).at[:n].set(src.y)
+        yy = jnp.zeros((n_to,), src.yy.dtype).at[:n].set(src.yy)
+        clab = src.col_labels
+        if clab is not None:
+            clab = jnp.full((n_to,), -1, jnp.int32).at[:n].set(clab)
+        return _dc.replace(src, y=y, yy=yy, col_labels=clab, n_cols=n_to)
+    if isinstance(src, KnnSource):
+        # meta-only: the scatter target grows; indices/weights are untouched,
+        # so real candidates' gains are bit-identical for free
+        return _dc.replace(src, n_cols=n_to)
+    if isinstance(src, DenseSource):
+        n = src.n_cols
+        sim = jnp.zeros((src.n_rows, n_to), src.sim.dtype).at[:, :n].set(src.sim)
+        return _dc.replace(src, sim=sim, n_cols=n_to)
+    raise NotImplementedError(
+        f"no column padder for source type {type(src).__name__}"
+    )
+
+
+def _pad_source_square(src, n_to: int):
+    """Pad a SQUARE ground-set source on both axes (Graph-Cut shape).
+
+    Feature pad rows are zero-feature rows — their similarity to real
+    points is generally nonzero (cosine midpoint, RBF at distance), but
+    every read of those entries is blocked: pad candidates are
+    valid-masked, pad columns carry selmask/total/diag 0, and ``col`` reads
+    at pad rows only feed gains of pad candidates."""
+    import dataclasses as _dc
+
+    import jax.numpy as jnp
+
+    if isinstance(src, FeatureSource):
+        n = src.n_cols
+        y = jnp.zeros((n_to, src.y.shape[1]), src.y.dtype).at[:n].set(src.y)
+        yy = jnp.zeros((n_to,), src.yy.dtype).at[:n].set(src.yy)
+        lab = src.col_labels
+        if lab is not None:
+            lab = jnp.full((n_to,), -1, jnp.int32).at[:n].set(lab)
+        return _dc.replace(
+            src, x=y, y=y, xx=yy, yy=yy, row_labels=lab, col_labels=lab,
+            n_rows=n_to, n_cols=n_to,
+        )
+    if isinstance(src, KnnSource):
+        n = src.n_rows
+        indices = jnp.full((n_to, src.k), -1, jnp.int32).at[:n].set(src.indices)
+        weights = jnp.zeros((n_to, src.k), src.weights.dtype).at[:n].set(src.weights)
+        return _dc.replace(
+            src, indices=indices, weights=weights, n_rows=n_to, n_cols=n_to
+        )
+    if isinstance(src, DenseSource):
+        n = src.n_cols
+        sim = jnp.zeros((n_to, n_to), src.sim.dtype).at[:n, :n].set(src.sim)
+        return _dc.replace(src, sim=sim, n_rows=n_to, n_cols=n_to)
+    raise NotImplementedError(
+        f"no square padder for source type {type(src).__name__}"
+    )
+
+
+def _pad_flmf(fn: FacilityLocationMF, n_to: int) -> FacilityLocationMF:
+    return FacilityLocationMF(
+        src=_pad_source_cols(fn.src, n_to), n=n_to, use_kernel=fn.use_kernel
+    )
+
+
+def _pad_gcmf(fn: GraphCutMF, n_to: int) -> GraphCutMF:
+    import jax.numpy as jnp
+
+    n = fn.n
+    total = jnp.zeros((n_to,), fn.total.dtype).at[:n].set(fn.total)
+    diag = jnp.zeros((n_to,), fn.diag.dtype).at[:n].set(fn.diag)
+    return GraphCutMF(
+        src=_pad_source_square(fn.src, n_to),
+        total=total,
+        diag=diag,
+        lam=fn.lam,
+        n=n_to,
+        use_kernel=fn.use_kernel,
+    )
+
+
 _PADDERS: dict[type, Callable] = {
     FacilityLocation: _pad_fl,
     GraphCut: _pad_gc,
@@ -241,6 +338,8 @@ _PADDERS: dict[type, Callable] = {
     FLVMI: _pad_flvmi,
     FLCG: _pad_flcg,
     FLCMI: _pad_flcmi,
+    FacilityLocationMF: _pad_flmf,
+    GraphCutMF: _pad_gcmf,
 }
 
 

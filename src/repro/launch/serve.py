@@ -129,7 +129,7 @@ class SelectionResponse:
 
     rid: int | str
     selection: list  # [(index, gain), ...] in pick order, true-n index space
-    result: object  # the per-request GreedyResult (n_evals counts padded n)
+    result: object  # the per-request GreedyResult (== sequential solve)
     wave_size: int  # real requests in the wave that served this
     n_bucket: int  # padded ground-set size of that wave
     backend: str  # gain-sweep backend that answered ("xla", "pallas-fl", ...)

@@ -57,6 +57,19 @@ def test_eval_count_drift_is_a_note_not_a_regression(tmp_path, capsys):
     assert "algorithmic change" in capsys.readouterr().out
 
 
+def test_bytes_drift_is_a_note_not_a_regression(tmp_path, capsys):
+    """Peak-memory footprints (``*_bytes``) are analytic, not measured, so
+    they compare exactly — a drift is a memory-shape change worth a NOTE,
+    never a machine-speed regression."""
+    row = dict(ROW, peak_bytes=32_000_000)
+    old = _snap(tmp_path, "old.json", [row])
+    assert bench_diff.diff(old, _snap(tmp_path, "same.json", [dict(row)])) == 0
+    new = _snap(tmp_path, "new.json", [dict(row, peak_bytes=64_000_000)])
+    assert bench_diff.diff(old, new) == 0  # note, not exit 1
+    out = capsys.readouterr().out
+    assert "peak_bytes" in out and "REGRESSION" not in out
+
+
 def test_rows_matched_by_identity_fields(tmp_path, capsys):
     """A row whose identifying fields changed is 'dropped + new', never
     silently compared against a different configuration."""

@@ -255,8 +255,7 @@ def test_server_lazy_greedy_single_device(rng):
 
 
 def test_server_screen_k_reaches_engine(rng):
-    """A non-default screen_k must be honored (n_evals proves it ran).
-    n=32 is already at its bucket, so even n_evals compares exactly."""
+    """A non-default screen_k must be honored (n_evals proves it ran)."""
     server = SelectionServer()
     fn = _build("fl", rng, 32)
     rid = server.submit(fn, 5, optimizer="LazyGreedy", screen_k=3)

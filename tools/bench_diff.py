@@ -11,11 +11,12 @@ throughput-style metrics are compared and a drop of more than
 - higher-is-better metrics: ``qps`` / ``*_qps``, ``*_speedup``
 - lower-is-better metrics:  ``*_ms`` / ``wave_ms``
 
-Eval *counts* are compared exactly (they are hardware-independent: a change
-means the algorithm changed, not the machine) but reported as NOTEs, not
-regressions — bit-level behaviour is the test suite's job.  ``eval_ratio``
-is derived from those counts, so it is skipped entirely rather than flagged
-twice under a throughput label.
+Eval *counts* and ``*_bytes`` memory footprints are compared exactly (they
+are hardware-independent: a change means the algorithm or its memory shape
+changed, not the machine) but reported as NOTEs, not regressions —
+bit-level behaviour is the test suite's job.  ``eval_ratio`` is derived
+from those counts, so it is skipped entirely rather than flagged twice
+under a throughput label.
 
 Exit status: 1 if any regression was flagged, else 0.  Benchmark timings on
 shared CPU boxes are noisy (±2x run-to-run is common here — see the verify
@@ -43,6 +44,8 @@ def _metric_kind(name: str) -> str | None:
         return "lower"
     if name.endswith("_evals"):
         return "exact"
+    if name.endswith("_bytes"):
+        return "exact"  # analytic memory footprints, hardware-independent
     return None
 
 

@@ -36,7 +36,8 @@ _N = 8  # tiny probe instances
 
 
 def _families():
-    """Ordered (display name, plain instance, use_kernel instance | None)."""
+    """Ordered (display name, plain instance, use_kernel instance | None,
+    matrix-free instance | None)."""
     from repro.core import (
         GCMI,
         FLCG,
@@ -48,8 +49,10 @@ def _families():
         DisparityMinSum,
         DisparitySum,
         FacilityLocation,
+        FacilityLocationMF,
         FeatureBased,
         GraphCut,
+        GraphCutMF,
         LogDet,
         ProbabilisticSetCover,
         SetCover,
@@ -71,36 +74,38 @@ def _families():
 
     return [
         ("FacilityLocation", FacilityLocation.from_kernel(S),
-         FacilityLocation.from_kernel(S, use_kernel=True)),
+         FacilityLocation.from_kernel(S, use_kernel=True),
+         FacilityLocationMF.from_features(feats, use_kernel=True)),
         ("GraphCut", GraphCut.from_kernel(S, lam=0.3),
-         GraphCut.from_kernel(S, lam=0.3, use_kernel=True)),
+         GraphCut.from_kernel(S, lam=0.3, use_kernel=True),
+         GraphCutMF.from_features(feats, lam=0.3, use_kernel=True)),
         ("FeatureBased", FeatureBased.from_features(feats),
-         FeatureBased.from_features(feats, use_kernel=True)),
+         FeatureBased.from_features(feats, use_kernel=True), None),
         ("SetCover", SetCover.from_cover(cover),
-         SetCover.from_cover(cover, use_kernel=True)),
+         SetCover.from_cover(cover, use_kernel=True), None),
         ("ProbabilisticSetCover", ProbabilisticSetCover.from_probs(probs),
-         ProbabilisticSetCover.from_probs(probs, use_kernel=True)),
+         ProbabilisticSetCover.from_probs(probs, use_kernel=True), None),
         ("DisparitySum", DisparitySum.from_distance(D),
-         DisparitySum.from_distance(D, use_kernel=True)),
+         DisparitySum.from_distance(D, use_kernel=True), None),
         ("DisparityMin", DisparityMin.from_distance(D),
-         DisparityMin.from_distance(D, use_kernel=True)),
-        ("DisparityMinSum", DisparityMinSum.from_distance(D), None),
+         DisparityMin.from_distance(D, use_kernel=True), None),
+        ("DisparityMinSum", DisparityMinSum.from_distance(D), None, None),
         ("LogDet", LogDet.from_kernel(S + 0.5 * np.eye(_N, dtype=np.float32)),
-         None),
-        ("FLVMI", FLVMI.build(S, Sq.T), None),
-        ("FLQMI", FLQMI.build(Sq), None),
-        ("FLCG", FLCG.build(S, Sq.T), None),
-        ("FLCMI", FLCMI.build(S, Sq.T, Sq.T), None),
-        ("GCMI", GCMI.build(Sq.T, lam=0.4), None),
-        ("ConcaveOverModular", ConcaveOverModular.build(Sq.T), None),
+         None, None),
+        ("FLVMI", FLVMI.build(S, Sq.T), None, None),
+        ("FLQMI", FLQMI.build(Sq), None, None),
+        ("FLCG", FLCG.build(S, Sq.T), None, None),
+        ("FLCMI", FLCMI.build(S, Sq.T, Sq.T), None, None),
+        ("GCMI", GCMI.build(Sq.T, lam=0.4), None, None),
+        ("ConcaveOverModular", ConcaveOverModular.build(Sq.T), None, None),
         ("SC/PSC/GC/LogDet MI-CG measures (base-class instances)",
-         sc_measure, None),
-        ("generic MI/CG/CMI combinators", generic, None),
+         sc_measure, None, None),
+        ("generic MI/CG/CMI combinators", generic, None, None),
     ]
 
 
-def _probe(fn, fn_kernel):
-    """(pallas, subset-sweep, padder, shard-rule) cells for one family."""
+def _probe(fn, fn_kernel, fn_mf):
+    """(pallas, subset-sweep, matrix-free, padder, shard-rule) cells."""
     from repro.core.optimizers.backends import backend_name, resolve_backend
     from repro.core.optimizers.distributed import shard_rule
     from repro.launch.coalesce import bucket_size, pad_function
@@ -113,6 +118,13 @@ def _probe(fn, fn_kernel):
             pallas = f"`{name}`"
             if hasattr(resolve_backend(fn_kernel), "partial_sweep"):
                 subset = "fused + `gains_at`"
+
+    mf = "—"
+    if fn_mf is not None:
+        # live checks: the MF instance has its own fused sweep AND rides the
+        # same serving padders as the dense form
+        mf = f"features + k-NN (`{backend_name(fn_mf)}`)"
+        pad_function(fn_mf, bucket_size(fn_mf.n + 1))
 
     try:
         pad_function(fn, bucket_size(fn.n + 1))
@@ -130,19 +142,21 @@ def _probe(fn, fn_kernel):
             shard_rule(fn_kernel)
         except ValueError:
             rule = "yes \\*"  # memoized form only: use_kernel=True rejected
-    return pallas, subset, padder, rule
+    return pallas, subset, mf, padder, rule
 
 
 def build_table() -> str:
     rows = [
         "| Function family | Fused Pallas sweep (`use_kernel=True`) | "
-        "Subset sweep (`partial_sweep`) | Served waves (padder) | "
-        "Sharded serving (`ShardRule`) |",
-        "|---|---|---|---|---|",
+        "Subset sweep (`partial_sweep`) | Matrix-free (features/k-NN) | "
+        "Served waves (padder) | Sharded serving (`ShardRule`) |",
+        "|---|---|---|---|---|---|",
     ]
-    for name, fn, fn_kernel in _families():
-        pallas, subset, padder, rule = _probe(fn, fn_kernel)
-        rows.append(f"| {name} | {pallas} | {subset} | {padder} | {rule} |")
+    for name, fn, fn_kernel, fn_mf in _families():
+        pallas, subset, mf, padder, rule = _probe(fn, fn_kernel, fn_mf)
+        rows.append(
+            f"| {name} | {pallas} | {subset} | {mf} | {padder} | {rule} |"
+        )
     rows.append("")
     rows.append(
         "Every family keeps the generic XLA full sweep (`gains()`); the "
@@ -150,7 +164,11 @@ def build_table() -> str:
         "lazy engines (\"fused\" = a masked-subset Pallas entry point when "
         "built with `use_kernel=True`).  Both optimizers — NaiveGreedy and "
         "LazyGreedy — run single-device, batched, and sharded for every "
-        "family with a ShardRule."
+        "family with a ShardRule.  The matrix-free column is the "
+        "`SimilaritySource` route (`FacilityLocationMF` / `GraphCutMF` over "
+        "features or a sparse k-NN graph): the n x n kernel is never "
+        "materialized, and the fused feature-tile Pallas sweeps plus the "
+        "serving padders are probed live — see docs/functions.md."
     )
     rows.append("")
     rows.append(
