@@ -14,6 +14,9 @@
 #   make scale-smoke quick dense-vs-matrix-free scale_bench run diffed
 #                    against the committed BENCH_scale.json (analytic
 #                    peak_bytes compare exactly; timings at a loose 50%)
+#   make stream-smoke quick offline-vs-streaming stream_bench run diffed
+#                    against the committed BENCH_streaming.json (oracle
+#                    eval counts compare exactly; timings at a loose 50%)
 #   make docs-check  execute the code blocks in README.md and docs/*.md,
 #                    and assert the README coverage matrix matches the
 #                    registries (tools/gen_matrix.py --check)
@@ -24,9 +27,9 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test-fast test-all bench bench-batched bench-serve bench-diff serve-smoke scale-smoke docs-check shims-check
+.PHONY: verify test-fast test-all bench bench-batched bench-serve bench-diff serve-smoke scale-smoke stream-smoke docs-check shims-check
 
-verify: test-fast docs-check shims-check serve-smoke scale-smoke
+verify: test-fast docs-check shims-check serve-smoke scale-smoke stream-smoke
 
 test-fast:
 	$(PYTHON) -m pytest -x -q
@@ -68,6 +71,14 @@ serve-smoke:
 scale-smoke:
 	$(PYTHON) -m benchmarks.scale_bench --quick --json /tmp/BENCH_scale_new.json >/dev/null
 	$(PYTHON) tools/bench_diff.py benchmarks/BENCH_scale.json /tmp/BENCH_scale_new.json --threshold 0.5
+
+# streaming smoke: the quick offline-vs-streaming cells (a subset of the
+# full sweep) diffed against the committed snapshot.  The n_evals oracle
+# counters are deterministic and compare exactly; wall-clock uses the same
+# loose 50% threshold as the other smokes.
+stream-smoke:
+	$(PYTHON) -m benchmarks.stream_bench --quick --json /tmp/BENCH_streaming_new.json >/dev/null
+	$(PYTHON) tools/bench_diff.py benchmarks/BENCH_streaming.json /tmp/BENCH_streaming_new.json --threshold 0.5
 
 docs-check:
 	$(PYTHON) tools/check_docs.py

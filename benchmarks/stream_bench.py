@@ -1,0 +1,144 @@
+"""Offline greedy vs streaming selection: wall clock + oracle eval counts.
+
+The streaming optimizers' claim (docs/streaming.md, tests/test_streaming.py)
+is that SieveStreaming reads each arrival ONCE — a single pass over the
+stream, where offline greedy re-sweeps the whole ground set for every one
+of its k picks.  This bench records both sides per cell:
+
+  - ``select_ms`` — wall time for one full ``solve()`` (best of 3 after a
+    compile warm-up); noisy on shared boxes, diffed at a loose threshold by
+    ``make stream-smoke``.
+  - ``n_evals``   — the engine's own oracle-call counter, exact and
+    machine-independent (``tools/bench_diff.py`` compares it exactly and
+    reports drift as a NOTE: a change means the algorithm changed, not the
+    machine).  Sieve's count is independent of the ladder size L by design —
+    all rungs share one batched gain sweep per arrival.
+
+Families: ``fb`` is the matrix-free FeatureBased objective (gains stream
+through the GainBackend, no n² kernel); ``fl`` is dense FacilityLocation
+over a materialized RBF kernel.  The offline baselines are NaiveGreedy
+(full re-sweep per pick) and LazyGreedy (priority-queue screening); the
+streaming side is SieveStreaming and ThresholdGreedy.  ``--quick`` runs a
+strict subset of the full sweep so ``make stream-smoke`` diffs real rows
+against the committed ``benchmarks/BENCH_streaming.json``.
+
+    PYTHONPATH=src python -m benchmarks.stream_bench          # full sweep
+    PYTHONPATH=src python -m benchmarks.stream_bench --quick  # smoke cells
+    PYTHONPATH=src python -m benchmarks.stream_bench --json benchmarks/BENCH_streaming.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    FacilityLocation,
+    FeatureBased,
+    SelectionSpec,
+    create_kernel,
+    solve,
+)
+
+D = 16
+BUDGET = 8
+
+
+def _build(family, n):
+    rng = np.random.default_rng(0)
+    if family == "fb":
+        feats = rng.uniform(0.0, 1.0, size=(n, D)).astype(np.float32)
+        return FeatureBased.from_features(feats)
+    x = rng.standard_normal((n, D)).astype(np.float32)
+    return FacilityLocation.from_kernel(np.asarray(create_kernel(x, metric="rbf")))
+
+
+def _time(fn):
+    fn()  # warm-up / compile
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_cell(family, optimizer, n):
+    fn = _build(family, n)
+    spec = SelectionSpec(fn, BUDGET, optimizer)
+
+    def run():
+        return solve(spec)
+
+    res = run()
+    jax.block_until_ready(res.gains)
+    t = _time(lambda: jax.block_until_ready(run().gains))
+    return {
+        "family": family,
+        "optimizer": optimizer,
+        "n": n,
+        "budget": BUDGET,
+        "select_ms": round(t * 1e3, 2),
+        "n_evals": int(res.n_evals),
+    }
+
+
+# full sweep: (family, optimizer, n).  The quick cells are a strict subset
+# so `make stream-smoke`'s diff of a --quick run compares real committed rows.
+QUICK_CELLS = [
+    ("fb", "NaiveGreedy", 1024),
+    ("fb", "SieveStreaming", 1024),
+    ("fl", "SieveStreaming", 512),
+]
+FULL_CELLS = QUICK_CELLS + [
+    ("fb", "LazyGreedy", 1024),
+    ("fb", "ThresholdGreedy", 1024),
+    ("fb", "NaiveGreedy", 4096),
+    ("fb", "SieveStreaming", 4096),
+    ("fl", "NaiveGreedy", 512),
+    ("fl", "LazyGreedy", 512),
+    ("fl", "ThresholdGreedy", 512),
+]
+
+
+def _print_rows(title, rows):
+    print(f"\n# {title}")
+    print(f"{'family':>6s} {'optimizer':>16s} {'n':>6s} {'k':>3s} "
+          f"{'select ms':>10s} {'evals':>9s}")
+    for r in rows:
+        print(f"{r['family']:>6s} {r['optimizer']:>16s} {r['n']:6d} "
+              f"{r['budget']:3d} {r['select_ms']:10.1f} {r['n_evals']:9d}")
+
+
+def main(quick: bool = False, json_path: str | None = None):
+    cells = QUICK_CELLS if quick else FULL_CELLS
+    rows = [run_cell(family, optimizer, n) for family, optimizer, n in cells]
+    _print_rows("Offline greedy vs streaming selection: wall clock + evals",
+                rows)
+    if json_path:
+        snapshot = {
+            "bench": "stream_bench",
+            "host": platform.machine(),
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "rows": rows,
+        }
+        with open(json_path, "w") as f:
+            json.dump(snapshot, f, indent=1)
+        print(f"wrote {len(rows)} rows to {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smoke sweep")
+    ap.add_argument("--json", default=None, help="dump rows to this path")
+    a = ap.parse_args()
+    main(quick=a.quick, json_path=a.json)

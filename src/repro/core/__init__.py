@@ -48,7 +48,13 @@ from repro.core.optimizers.batched import (
     batched_maximize,
     stack_functions,
 )
-from repro.core.optimizers.constrained import cover_greedy, knapsack_greedy
+from repro.core.optimizers.constrained import (
+    Knapsack,
+    PartitionMatroid,
+    cover_greedy,
+    knapsack_greedy,
+    matroid_greedy,
+)
 from repro.core.optimizers.distributed import (
     distributed_fl_greedy,
     distributed_flqmi_greedy,
@@ -65,6 +71,7 @@ from repro.core.optimizers.greedy import (
     stochastic_greedy,
 )
 from repro.core.optimizers.host_lazy import host_lazy_greedy
+from repro.core.optimizers.streaming import sieve_streaming, threshold_greedy
 from repro.core.similarity import (
     build_extended_kernel,
     create_kernel,
@@ -150,6 +157,11 @@ __all__ = [
     "host_lazy_greedy",
     "cover_greedy",
     "knapsack_greedy",
+    "matroid_greedy",
+    "Knapsack",
+    "PartitionMatroid",
+    "sieve_streaming",
+    "threshold_greedy",
     "distributed_fl_greedy",
     "distributed_flqmi_greedy",
     "sharded_batched_greedy",

@@ -21,14 +21,50 @@ the serving coalescer never distinguish the two.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+
+
+def _mask_negative_idxs(method):
+    """Make ``gains_at`` NEG_INF on negative indices instead of wrapping.
+
+    Every dense implementation is a plain gather, so idx = -1 silently reads
+    the LAST row — an engine passing an unfiltered ``order`` buffer (-1
+    padded) would treat a ghost of the last candidate as selectable.  The
+    wrapper clamps negatives before the implementation runs and masks them
+    to NEG_INF after, leaving idx >= 0 results bit-identical.
+    """
+    if getattr(method, "_neg_masked", False):
+        return method
+
+    @functools.wraps(method)
+    def wrapped(self, state, idxs):
+        from repro.common import NEG_INF
+
+        idxs = jnp.asarray(idxs)
+        g = method(self, state, jnp.maximum(idxs, 0))
+        return jnp.where(idxs < 0, jnp.asarray(NEG_INF, g.dtype), g)
+
+    wrapped._neg_masked = True
+    return wrapped
 
 
 class SetFunction:
     """Duck-typed base; concrete functions are frozen pytree dataclasses."""
 
     n: int  # ground-set size
+
+    def __init_subclass__(cls, **kwargs):
+        super().__init_subclass__(**kwargs)
+        # families override gains_at with gather-shaped implementations; wrap
+        # each override (and, below, the base default) exactly once so the
+        # negative-index contract holds for every family, dense or
+        # matrix-free, without per-family bookkeeping
+        impl = cls.__dict__.get("gains_at")
+        if impl is not None:
+            cls.gains_at = _mask_negative_idxs(impl)
 
     # -- interface -----------------------------------------------------------
     def init_state(self):
@@ -76,3 +112,7 @@ class SetFunction:
         """Oracle marginal gain f(A + j) - f(A); used by property tests."""
         mask = jnp.asarray(mask, bool)
         return self.evaluate(mask.at[j].set(True)) - self.evaluate(mask)
+
+
+# the default gather honors the same negative-index contract as overrides
+SetFunction.gains_at = _mask_negative_idxs(SetFunction.gains_at)

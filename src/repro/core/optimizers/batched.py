@@ -134,13 +134,15 @@ class BatchedEngine:
         fns = list(fns)
         if not fns:
             raise ValueError("BatchedEngine: need at least one instance")
+        self.fns = fns
         self.batch_size = len(fns)
         self.n = fns[0].n
         self.mesh = mesh
         self.batch_axis = batch_axis
         self.data_axis = data_axis
+        self._stacked = None
         if mesh is None:
-            self.stacked = stack_functions(fns)
+            self._stacked = stack_functions(fns)
         else:
             from repro.core.optimizers.distributed import shard_rule, stack_parts
 
@@ -170,6 +172,14 @@ class BatchedEngine:
                 f"valid mask must be ({self.batch_size}, {self.n}), "
                 f"got {self.valid.shape}"
             )
+
+    @property
+    def stacked(self):
+        """The B-stacked function pytree; built lazily on a mesh (only the
+        mesh-replicated optimizer path needs it there)."""
+        if self._stacked is None:
+            self._stacked = stack_functions(self.fns)
+        return self._stacked
 
     def run(
         self,
@@ -210,14 +220,21 @@ class BatchedEngine:
                 f"{max(budgets)}"
             )
         b_arr = jnp.asarray(budgets, jnp.int32)
-        hook = defn.sharded_run if self.mesh is not None else defn.batched_run
-        if hook is None:
+        # on a mesh: a collective sharded engine when the optimizer has one,
+        # else a mesh-replicated optimizer runs its batched hook as-is (the
+        # program is sequential in its data pass, so every device computes
+        # the identical answer — on-mesh == off-mesh bit-identity holds)
+        sharded = self.mesh is not None and defn.sharded_run is not None
+        hook = defn.sharded_run if sharded else defn.batched_run
+        if hook is None or (
+            self.mesh is not None and not sharded and not defn.mesh_replicated
+        ):
             raise ValueError(
                 f"optimizer {opt.name!r} does not support "
                 f"{'sharded' if self.mesh is not None else 'batched'} "
                 f"execution; batched-capable optimizers: {wave_capable_names()}"
             )
-        if self.mesh is not None:
+        if sharded:
             order, gains, evals, value = hook(
                 self.rule,
                 self.parts,

@@ -1,11 +1,22 @@
-"""Problem 2 (Submodular Cover) and knapsack-constrained greedy (paper §2).
+"""Problem 2 (Submodular Cover) and constrained greedy variants (paper §2).
 
 cover_greedy:    min |X| (or cost) s.t. f(X) >= c        [Wolsey '82]
 knapsack_greedy: max f(X) s.t. sum cost <= b             [Sviridenko '04,
                  cost-ratio rule + best-feasible-singleton safeguard]
+matroid_greedy:  max f(X) s.t. X independent in a partition matroid
+                 [Fisher/Nemhauser/Wolsey '78 — 1/2 guarantee]
+
+The declarative side — :class:`Knapsack` and :class:`PartitionMatroid` —
+are hashable frozen dataclasses, so a constraint rides an
+:class:`~repro.core.optimizers.spec.OptimizerSpec` as static metadata (jit
+cache keys, wave-group keys).  The streaming optimizers
+(``optimizers/streaming.py``) consume them through the trace-time
+``streaming_state`` / ``streaming_feasible`` / ``streaming_add`` helpers,
+so constrained streaming is a spec flag, not a forked accept rule.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -14,6 +25,112 @@ import jax.numpy as jnp
 from repro.common import NEG_INF, pytree_dataclass
 from repro.core.optimizers.backends import full_sweep
 from repro.core.optimizers.greedy import GreedyResult, _tree_where
+
+
+# ---------------------------------------------------------------------------
+# Declarative constraints (static spec metadata)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Knapsack:
+    """``sum(costs[j] for j in X) <= budget`` — item costs must be positive.
+
+    ``costs`` is indexed by ground-set position; hashable (tuples only), so
+    it can be an OptimizerSpec hyperparameter / jit static argument.
+    """
+
+    costs: tuple
+    budget: float
+
+    def __post_init__(self):
+        costs = tuple(float(c) for c in self.costs)
+        if not costs:
+            raise ValueError("Knapsack needs at least one item cost")
+        if any(c <= 0 for c in costs):
+            raise ValueError("Knapsack costs must all be positive")
+        budget = float(self.budget)
+        if budget <= 0:
+            raise ValueError(f"Knapsack budget must be positive, got {budget}")
+        object.__setattr__(self, "costs", costs)
+        object.__setattr__(self, "budget", budget)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionMatroid:
+    """At most ``caps[p]`` picks from each part: ``labels[j]`` names item
+    j's part, ``caps`` the per-part capacities.  Hashable static metadata,
+    like :class:`Knapsack`."""
+
+    labels: tuple
+    caps: tuple
+
+    def __post_init__(self):
+        labels = tuple(int(p) for p in self.labels)
+        caps = tuple(int(c) for c in self.caps)
+        if not caps:
+            raise ValueError("PartitionMatroid needs at least one part cap")
+        if any(c < 0 for c in caps):
+            raise ValueError("PartitionMatroid caps must be >= 0")
+        if labels and not all(0 <= p < len(caps) for p in labels):
+            raise ValueError(
+                f"PartitionMatroid labels must index caps (0..{len(caps) - 1})"
+            )
+        object.__setattr__(self, "labels", labels)
+        object.__setattr__(self, "caps", caps)
+
+
+def as_constraint(v):
+    """Validate an optimizer-spec ``constraint`` value (None passes through).
+
+    The converter behind the streaming optimizers' ``constraint``
+    hyperparameter — anything else raises ``TypeError`` naming the accepted
+    forms."""
+    if v is None or isinstance(v, (Knapsack, PartitionMatroid)):
+        return v
+    raise TypeError(
+        "constraint must be None, a Knapsack, or a PartitionMatroid "
+        f"(repro.core.optimizers.constrained); got {type(v).__name__!r}"
+    )
+
+
+# -- trace-time accept-rule hooks (constraint is static, so these dispatch
+#    in Python and lower to nothing when constraint is None) ----------------
+
+def streaming_state(constraint, width: int):
+    """Per-selector feasibility state, ``width`` independent selectors
+    (sieves): spent cost for a knapsack, per-part counts for a matroid, a
+    zero-size placeholder when unconstrained."""
+    if isinstance(constraint, PartitionMatroid):
+        return jnp.zeros((width, len(constraint.caps)), jnp.int32)
+    return jnp.zeros((width,), jnp.float32)
+
+
+def streaming_feasible(constraint, cstate, j):
+    """(width,) bool: may element ``j`` join each selector right now?
+
+    ``j`` may exceed ``len(costs)`` on a padded wave — the gather clamps and
+    the caller's validity mask keeps padded arrivals out anyway."""
+    if constraint is None:
+        return jnp.ones(cstate.shape[:1], bool)
+    if isinstance(constraint, Knapsack):
+        costs = jnp.asarray(constraint.costs, jnp.float32)
+        return cstate + costs[j] <= constraint.budget
+    labels = jnp.asarray(constraint.labels, jnp.int32)
+    caps = jnp.asarray(constraint.caps, jnp.int32)
+    lab = labels[j]
+    return cstate[:, lab] < caps[lab]
+
+
+def streaming_add(constraint, cstate, j, accept):
+    """Charge element ``j`` to the selectors where ``accept`` is True."""
+    if constraint is None:
+        return cstate
+    if isinstance(constraint, Knapsack):
+        costs = jnp.asarray(constraint.costs, jnp.float32)
+        return cstate + jnp.where(accept, costs[j], 0.0)
+    labels = jnp.asarray(constraint.labels, jnp.int32)
+    lab = labels[j]
+    return cstate.at[:, lab].add(accept.astype(jnp.int32))
 
 
 @partial(jax.jit, static_argnums=(2,))
@@ -89,6 +206,53 @@ def knapsack_greedy(fn, budget: jax.Array, max_steps: int, costs=None) -> Greedy
         jnp.zeros((), bool),
     )
     state, selected, spent, order, gains, _ = jax.lax.fori_loop(
+        0, max_steps, body, carry
+    )
+    return GreedyResult(
+        order=order, gains=gains, n_evals=jnp.asarray(max_steps * n, jnp.int32),
+        value=gains.sum(),
+    )
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def matroid_greedy(
+    fn, constraint: PartitionMatroid, max_steps: int
+) -> GreedyResult:
+    """Greedy under a partition matroid: each step adds the max-gain element
+    whose part still has capacity (1/2-approximate for monotone f
+    [Fisher/Nemhauser/Wolsey '78]).  ``constraint`` is static — it rides the
+    jit cache key like an OptimizerSpec would."""
+    n = fn.n
+    labels = jnp.asarray(constraint.labels, jnp.int32)
+    caps = jnp.asarray(constraint.caps, jnp.int32)
+    state = fn.init_state()
+
+    def body(i, carry):
+        state, selected, counts, order, gains, done = carry
+        g = full_sweep(fn, state)
+        feasible = (~selected) & (counts[labels] < caps[labels])
+        g = jnp.where(feasible, g, NEG_INF)
+        j = jnp.argmax(g)
+        gj = g[j]
+        stop = done | (~feasible[j]) | (gj <= 0.0)
+        take = ~stop
+        new_state = fn.update(state, j)
+        state = _tree_where(take, new_state, state)
+        selected = selected.at[j].set(selected[j] | take)
+        counts = counts.at[labels[j]].add(take.astype(jnp.int32))
+        order = order.at[i].set(jnp.where(take, j, -1))
+        gains = gains.at[i].set(jnp.where(take, gj, 0.0))
+        return state, selected, counts, order, gains, stop
+
+    carry = (
+        state,
+        jnp.zeros((n,), bool),
+        jnp.zeros((len(constraint.caps),), jnp.int32),
+        jnp.full((max_steps,), -1, jnp.int32),
+        jnp.zeros((max_steps,), jnp.float32),
+        jnp.zeros((), bool),
+    )
+    state, selected, counts, order, gains, _ = jax.lax.fori_loop(
         0, max_steps, body, carry
     )
     return GreedyResult(

@@ -133,10 +133,18 @@ class OptimizerDef:
     run: Callable  # (fn, budget, stop_zero, stop_neg, **params) -> GreedyResult
     batched_run: Optional[Callable] = None
     sharded_run: Optional[Callable] = None
+    # mesh_replicated: the batched hook is valid on a device mesh as-is (the
+    # program is sequential in its data pass, so replicating it on every
+    # device gives the same answer as one device).  Streaming optimizers set
+    # this: they have no collective sharded engine, yet must keep the on-mesh
+    # == off-mesh bit-identity contract when a served wave lands on a mesh.
+    mesh_replicated: bool = False
 
     @property
     def batched_capable(self) -> bool:
-        return self.batched_run is not None and self.sharded_run is not None
+        return self.batched_run is not None and (
+            self.sharded_run is not None or self.mesh_replicated
+        )
 
 
 _OPTIMIZERS: dict[str, OptimizerDef] = {}
@@ -149,6 +157,7 @@ def register_optimizer(
     params: Mapping[str, Param] | None = None,
     batched_run: Callable | None = None,
     sharded_run: Callable | None = None,
+    mesh_replicated: bool = False,
 ) -> OptimizerDef:
     """Register (or replace) an optimizer under ``name``.
 
@@ -156,6 +165,8 @@ def register_optimizer(
     validator); :class:`OptimizerSpec` construction validates against it, so
     a misspelled option fails with a ``TypeError`` naming the valid set
     instead of being silently dropped (the old ``kw.get`` behaviour).
+    ``mesh_replicated=True`` declares the batched hook safe to run replicated
+    on a device mesh (no ``sharded_run`` needed for wave capability).
     """
     defn = OptimizerDef(
         name=name,
@@ -163,6 +174,7 @@ def register_optimizer(
         run=run,
         batched_run=batched_run,
         sharded_run=sharded_run,
+        mesh_replicated=mesh_replicated,
     )
     _OPTIMIZERS[name] = defn
     return defn
@@ -811,3 +823,10 @@ register_optimizer(
     _ltl_run,
     params={**_SAMPLING, "screen_k": _SCREEN_K},
 )
+
+# The streaming optimizers (SieveStreaming / ThresholdGreedy) register
+# themselves on import; importing here makes them part of the registry the
+# moment the spec module is usable.  Safe against the circular import:
+# every name above is already bound when this executes, and streaming.py
+# only imports names from this module (never batched.py at module level).
+from repro.core.optimizers import streaming as _streaming  # noqa: E402,F401

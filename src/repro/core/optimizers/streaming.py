@@ -1,0 +1,485 @@
+"""Single-pass streaming maximizers (ROADMAP item 2: online selection).
+
+Two registry optimizers for candidate streams, both jit-compiled and both
+riding the normal ``SelectionSpec`` / ``solve()`` front door:
+
+- **SieveStreaming** [Badanidiyuru et al. '14]: one pass over the arrival
+  order, a geometric ladder of thresholds v = (1+eps)^i maintained over the
+  running max-singleton estimate m (m <= v <= 2*budget*m), one sieve per
+  live threshold.  An arrival e joins sieve S_v when |S_v| < k and
+  f(e | S_v) >= (v/2 - f(S_v)) / (k - |S_v|); the best sieve wins.  For
+  monotone submodular f this guarantees f >= (1/2 - eps) * OPT —
+  ``tests/test_streaming.py`` property-checks the bound against offline
+  greedy for every monotone servable family.
+
+- **ThresholdGreedy** [Badanidiyuru & Vondrak '14, buffered]: arrivals are
+  buffered into chunks of ``buffer_size``; each chunk first raises the
+  running max-singleton estimate d, then is swept by a fixed descending
+  ladder tau = d*(1-eps)^l (down to eps*d/n), accepting any element whose
+  gain clears the current rung.  Multi-pass over the buffer, still one pass
+  over the stream.
+
+Implementation notes (the serving bit-identity contract):
+
+- Every gain goes through the pluggable :func:`partial_sweep` backend, so
+  matrix-free sources (``FacilityLocationMF`` over features / k-NN) stream
+  without ever materializing an n x n kernel.
+- The ladder is realized as a STATIC ring of L slots (L from ``max_budget``
+  and eps); each slot carries the sieve for rung i = lo + ((s - lo) mod L).
+  Rungs that fall out of the live window [lo, hi] are reset in place.  The
+  winning sieve ties break on the RUNG (lowest wins), never the slot index
+  — a served wave runs at a bucketed ``max_budget`` whose L differs from
+  the sequential run's, so slot layout is not stable but rung identity is.
+- ``n_evals`` counts logical oracle calls: 1 singleton probe plus one gain
+  per LIVE rung per valid arrival — independent of L, padding, and batch
+  shape, so served responses report sequential counts exactly.
+- Padded arrivals (``valid`` False) update nothing and cost nothing, and
+  the optional ``seed`` shuffle orders items by per-index
+  ``jax.random.fold_in`` keys with invalid slots sorted last — the relative
+  order of real items is identical at any padded n.
+- Constraints (``optimizers/constrained.py``'s :class:`Knapsack` /
+  :class:`PartitionMatroid`) gate the accept rule through the trace-time
+  ``streaming_feasible`` / ``streaming_add`` hooks; ``constraint=None``
+  lowers to nothing.
+
+Both optimizers register with ``mesh_replicated=True``: they are sequential
+in the arrival pass (no collective sharded engine), so a served wave on a
+device mesh replicates the batched program and keeps on-mesh == off-mesh
+bit-identity.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import NEG_INF
+from repro.core.optimizers.backends import partial_sweep
+from repro.core.optimizers.constrained import (
+    as_constraint,
+    streaming_add,
+    streaming_feasible,
+    streaming_state,
+)
+from repro.core.optimizers.greedy import (
+    GreedyResult,
+    _should_stop,
+    _tree_where,
+    _where_rows,
+)
+from repro.core.optimizers.spec import (
+    Param,
+    _int_min,
+    _opt_int_min,
+    register_optimizer,
+)
+
+__all__ = ["sieve_streaming", "threshold_greedy"]
+
+_INT_BIG = jnp.int32(2**31 - 1)
+_RUNG_UNSET = jnp.int32(-(2**31) + 1)
+
+
+def _ladder_eps(v) -> float:
+    f = float(v)
+    if not 0.0 < f < 1.0:
+        raise ValueError(f"must be a float in (0, 1), got {v!r}")
+    return f
+
+
+def _arrival_order(valid, seed):
+    """(n,) arrival permutation: valid items first, invalid last.
+
+    ``seed=None`` keeps index order; an int seed shuffles by per-index
+    ``fold_in`` uniforms (ties by index), so the relative order of the
+    valid items does not depend on how far the instance was padded.
+    """
+    n = valid.shape[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    if seed is None:
+        primary = jnp.where(valid, 0.0, 2.0)
+    else:
+        key = jax.random.PRNGKey(seed)
+        u = jax.vmap(lambda j: jax.random.uniform(jax.random.fold_in(key, j)))(
+            iota
+        )
+        primary = jnp.where(valid, u, 2.0)
+    _, order = jax.lax.sort((primary, iota), dimension=-1, num_keys=2)
+    return order
+
+
+# ---------------------------------------------------------------------------
+# SieveStreaming
+# ---------------------------------------------------------------------------
+
+def _sieve_slots(max_budget: int, epsilon: float) -> int:
+    """Static ring size: one more than the widest possible live window
+    [ceil(log_{1+eps} m), floor(log_{1+eps} 2km)], so the rung -> slot
+    assignment (rung mod L) is injective over the window."""
+    return int(math.floor(math.log(2.0 * max_budget) / math.log1p(epsilon))) + 2
+
+
+def _sieve_one(
+    fn,
+    budget_i,
+    valid,
+    *,
+    max_budget: int,
+    L: int,
+    stop_zero: bool,
+    stop_neg: bool,
+    epsilon: float,
+    seed,
+    constraint,
+) -> GreedyResult:
+    n = fn.n
+    log_step = math.log1p(epsilon)
+    state0 = fn.init_state()
+    states_init = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (L,) + x.shape), state0
+    )
+    arrival = _arrival_order(valid, seed)
+    slots = jnp.arange(L, dtype=jnp.int32)
+    kf = budget_i.astype(jnp.float32)
+
+    def window(m):
+        """Live rung window [lo, hi] for the current max-singleton m."""
+        safe = jnp.maximum(m, jnp.float32(1e-30))
+        lo = jnp.ceil(jnp.log(safe) / log_step).astype(jnp.int32)
+        hi = jnp.floor(jnp.log(2.0 * kf * safe) / log_step).astype(jnp.int32)
+        return lo, hi
+
+    def body(t, carry):
+        (m, rungs, states, sizes, values, cstate, orders, gains, evals) = carry
+        j = arrival[t]
+        av = valid[j]
+        # singleton probe: updates m BEFORE this element is offered to sieves
+        g0 = partial_sweep(fn, state0, j[None])[0]
+        m_new = jnp.where(av, jnp.maximum(m, g0), m)
+        lo, hi = window(m_new)
+        has = m_new > 0.0
+        rung_s = lo + jnp.mod(slots - lo, L)
+        live = has & (rung_s <= hi)
+        # slots whose rung assignment moved are reset in place (their old
+        # sieve belonged to a rung that left the window)
+        changed = rung_s != rungs
+        states = _where_rows(changed, states_init, states)
+        sizes = jnp.where(changed, 0, sizes)
+        values = jnp.where(changed, 0.0, values)
+        cstate = _where_rows(changed, jnp.zeros_like(cstate), cstate)
+        orders = jnp.where(changed[:, None], -1, orders)
+        gains = jnp.where(changed[:, None], 0.0, gains)
+
+        g = jax.vmap(lambda st: partial_sweep(fn, st, j[None])[0])(states)
+        v = jnp.exp(rung_s.astype(jnp.float32) * jnp.float32(log_step))
+        tau = (v / 2.0 - values) / jnp.maximum(kf - sizes, 1.0)
+        accept = (
+            av
+            & live
+            & (sizes < budget_i)
+            & streaming_feasible(constraint, cstate, j)
+            & ~_should_stop(g, stop_zero, stop_neg)
+            & (g >= tau)
+        )
+        new_states = jax.vmap(lambda st: fn.update(st, j))(states)
+        states = _where_rows(accept, new_states, states)
+        pos = jnp.minimum(sizes, max_budget - 1)
+        orders = orders.at[slots, pos].set(
+            jnp.where(accept, j, orders[slots, pos])
+        )
+        gains = gains.at[slots, pos].set(jnp.where(accept, g, gains[slots, pos]))
+        values = values + jnp.where(accept, g, 0.0)
+        sizes = sizes + accept.astype(jnp.int32)
+        cstate = streaming_add(constraint, cstate, j, accept)
+        # logical cost: 1 singleton + one gain per live rung, valid arrivals
+        # only — a function of the window, never of L / padding / batching
+        evals = evals + jnp.where(av, 1 + jnp.sum(live, dtype=jnp.int32), 0)
+        return (m_new, rung_s, states, sizes, values, cstate,
+                orders, gains, evals)
+
+    carry = (
+        jnp.zeros((), jnp.float32),
+        jnp.full((L,), _RUNG_UNSET, jnp.int32),
+        states_init,
+        jnp.zeros((L,), jnp.int32),
+        jnp.zeros((L,), jnp.float32),
+        streaming_state(constraint, L),
+        jnp.full((L, max_budget), -1, jnp.int32),
+        jnp.zeros((L, max_budget), jnp.float32),
+        jnp.zeros((), jnp.int32),
+    )
+    m, rungs, states, sizes, values, cstate, orders, gains, evals = (
+        jax.lax.fori_loop(0, n, body, carry)
+    )
+    # best sieve among the final live window, exact-value ties broken by the
+    # LOWEST rung (slot layout depends on the max_budget bucket; rungs don't)
+    lo, hi = window(m)
+    live = (m > 0.0) & (rungs >= lo) & (rungs <= hi)
+    masked = jnp.where(live, values, NEG_INF)
+    best = jnp.max(masked)
+    key = jnp.where(live & (masked == best), rungs, _INT_BIG)
+    s = jnp.argmin(key)
+    any_live = jnp.any(live)
+    order = jnp.where(any_live, orders[s], jnp.full((max_budget,), -1, jnp.int32))
+    gain = jnp.where(any_live, gains[s], jnp.zeros((max_budget,), jnp.float32))
+    value = jnp.where(any_live, values[s], 0.0)
+    return GreedyResult(order=order, gains=gain, n_evals=evals, value=value)
+
+
+@partial(
+    jax.jit,
+    static_argnums=(1, 4, 5),
+    static_argnames=("epsilon", "seed", "constraint"),
+)
+def _sieve_batched(
+    fns, max_budget, budgets, valid, stop_zero, stop_neg, *, epsilon, seed,
+    constraint,
+):
+    L = _sieve_slots(max_budget, epsilon)
+    return jax.vmap(
+        lambda fn, b, v: _sieve_one(
+            fn,
+            b,
+            v,
+            max_budget=max_budget,
+            L=L,
+            stop_zero=stop_zero,
+            stop_neg=stop_neg,
+            epsilon=epsilon,
+            seed=seed,
+            constraint=constraint,
+        )
+    )(fns, budgets, valid)
+
+
+def sieve_streaming(
+    fn,
+    budget: int,
+    epsilon: float = 0.1,
+    seed: int | None = None,
+    constraint=None,
+    stop_if_zero: bool = True,
+    stop_if_negative: bool = True,
+) -> GreedyResult:
+    """One-pass sieve-streaming selection; (1/2 - eps)-approximate for
+    monotone submodular ``fn``.  The B = 1 instantiation of the batched
+    engine program, so served waves are bit-identical by construction."""
+    fns = jax.tree.map(lambda x: jnp.asarray(x)[None], fn)
+    res = _sieve_batched(
+        fns,
+        int(budget),
+        jnp.full((1,), int(budget), jnp.int32),
+        jnp.ones((1, fn.n), bool),
+        stop_if_zero,
+        stop_if_negative,
+        epsilon=_ladder_eps(epsilon),
+        seed=seed,
+        constraint=as_constraint(constraint),
+    )
+    return GreedyResult(
+        order=res.order[0],
+        gains=res.gains[0],
+        n_evals=res.n_evals[0],
+        value=res.value[0],
+    )
+
+
+# ---------------------------------------------------------------------------
+# ThresholdGreedy (buffered chunks, fixed descending ladder)
+# ---------------------------------------------------------------------------
+
+def _threshold_levels(n: int, epsilon: float) -> int:
+    """Static ladder length covering tau from d down to (eps/n) * d; levels
+    past the TRUE (unpadded) floor are gated off dynamically, so padding
+    only ever adds inactive rungs."""
+    return int(
+        math.ceil(math.log(max(n, 2) / epsilon) / -math.log1p(-epsilon))
+    ) + 1
+
+
+def _threshold_one(
+    fn,
+    budget_i,
+    valid,
+    *,
+    max_budget: int,
+    bs: int,
+    stop_zero: bool,
+    stop_neg: bool,
+    epsilon: float,
+    seed,
+    constraint,
+) -> GreedyResult:
+    n = fn.n
+    C = -(-n // bs)  # chunks of the arrival stream
+    L = _threshold_levels(n, epsilon)
+    log_decay = math.log1p(-epsilon)
+    state0 = fn.init_state()
+    arrival = _arrival_order(valid, seed)
+    true_n = jnp.maximum(jnp.sum(valid, dtype=jnp.int32), 1).astype(jnp.float32)
+
+    # one flattened pass: chunk c -> level 0 is the singleton (d-raising)
+    # sweep over the chunk, levels 1..L sweep it against tau = d*(1-eps)^(l-1)
+    steps = C * (L + 1) * bs
+
+    def body(t, carry):
+        state, selected, d, size, cstate, order, gains, evals = carry
+        c = t // ((L + 1) * bs)
+        r = t % ((L + 1) * bs)
+        l = r // bs
+        p = r % bs
+        pos = c * bs + p
+        j = arrival[jnp.minimum(pos, n - 1)]
+        av = (pos < n) & valid[j]
+        dpass = l == 0
+        g0 = partial_sweep(fn, state0, j[None])[0]
+        d_new = jnp.where(av & dpass, jnp.maximum(d, g0), d)
+        tau = d_new * jnp.exp((l - 1).astype(jnp.float32) * jnp.float32(log_decay))
+        # the ladder floor uses the TRUE stream length, so the set of active
+        # rungs is identical however far the instance was padded
+        active = (~dpass) & (d_new > 0.0) & (tau >= epsilon * d_new / true_n)
+        visit = av & active & ~selected[j] & (size < budget_i)
+        g = partial_sweep(fn, state, j[None])[0]
+        accept = (
+            visit
+            & streaming_feasible(constraint, cstate, j)[0]
+            & ~_should_stop(g, stop_zero, stop_neg)
+            & (g >= tau)
+        )
+        new_state = fn.update(state, j)
+        state = _tree_where(accept, new_state, state)
+        selected = selected.at[j].set(selected[j] | accept)
+        q = jnp.minimum(size, max_budget - 1)
+        order = order.at[q].set(jnp.where(accept, j, order[q]))
+        gains = gains.at[q].set(jnp.where(accept, g, gains[q]))
+        size = size + accept.astype(jnp.int32)
+        cstate = streaming_add(constraint, cstate, j, accept[None])
+        evals = evals + (av & dpass).astype(jnp.int32) + visit.astype(jnp.int32)
+        return state, selected, d_new, size, cstate, order, gains, evals
+
+    carry = (
+        state0,
+        jnp.zeros((n,), bool),
+        jnp.zeros((), jnp.float32),
+        jnp.zeros((), jnp.int32),
+        streaming_state(constraint, 1),
+        jnp.full((max_budget,), -1, jnp.int32),
+        jnp.zeros((max_budget,), jnp.float32),
+        jnp.zeros((), jnp.int32),
+    )
+    state, selected, d, size, cstate, order, gains, evals = jax.lax.fori_loop(
+        0, steps, body, carry
+    )
+    return GreedyResult(
+        order=order, gains=gains, n_evals=evals, value=gains.sum()
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnums=(1, 4, 5),
+    static_argnames=("epsilon", "buffer_size", "seed", "constraint"),
+)
+def _threshold_batched(
+    fns, max_budget, budgets, valid, stop_zero, stop_neg, *, epsilon,
+    buffer_size, seed, constraint,
+):
+    return jax.vmap(
+        lambda fn, b, v: _threshold_one(
+            fn,
+            b,
+            v,
+            max_budget=max_budget,
+            bs=buffer_size,
+            stop_zero=stop_zero,
+            stop_neg=stop_neg,
+            epsilon=epsilon,
+            seed=seed,
+            constraint=constraint,
+        )
+    )(fns, budgets, valid)
+
+
+def threshold_greedy(
+    fn,
+    budget: int,
+    epsilon: float = 0.1,
+    buffer_size: int = 64,
+    seed: int | None = None,
+    constraint=None,
+    stop_if_zero: bool = True,
+    stop_if_negative: bool = True,
+) -> GreedyResult:
+    """Buffered threshold greedy over the arrival stream (fixed descending
+    eps-ladder per chunk)."""
+    fns = jax.tree.map(lambda x: jnp.asarray(x)[None], fn)
+    res = _threshold_batched(
+        fns,
+        int(budget),
+        jnp.full((1,), int(budget), jnp.int32),
+        jnp.ones((1, fn.n), bool),
+        stop_if_zero,
+        stop_if_negative,
+        epsilon=_ladder_eps(epsilon),
+        buffer_size=int(buffer_size),
+        seed=seed,
+        constraint=as_constraint(constraint),
+    )
+    return GreedyResult(
+        order=res.order[0],
+        gains=res.gains[0],
+        n_evals=res.n_evals[0],
+        value=res.value[0],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Registry hooks
+# ---------------------------------------------------------------------------
+
+def _sieve_run(fn, budget, stop_zero, stop_neg, *, epsilon, seed, constraint):
+    return sieve_streaming(
+        fn, budget, epsilon, seed, constraint, stop_zero, stop_neg
+    )
+
+
+def _threshold_run(
+    fn, budget, stop_zero, stop_neg, *, epsilon, buffer_size, seed, constraint
+):
+    return threshold_greedy(
+        fn, budget, epsilon, buffer_size, seed, constraint, stop_zero, stop_neg
+    )
+
+
+_STREAM_PARAMS = {
+    "epsilon": Param(0.1, _ladder_eps, "threshold-ladder slack in (0, 1)"),
+    "seed": Param(
+        None, _opt_int_min(0), "arrival-order shuffle seed (None: index order)"
+    ),
+    "constraint": Param(
+        None, as_constraint,
+        "optional Knapsack / PartitionMatroid accept-rule constraint",
+    ),
+}
+
+register_optimizer(
+    "SieveStreaming",
+    _sieve_run,
+    params=dict(_STREAM_PARAMS),
+    batched_run=_sieve_batched,
+    mesh_replicated=True,
+)
+register_optimizer(
+    "ThresholdGreedy",
+    _threshold_run,
+    params={
+        **_STREAM_PARAMS,
+        "buffer_size": Param(
+            64, _int_min(1), "buffered chunk length for the ladder passes"
+        ),
+    },
+    batched_run=_threshold_batched,
+    mesh_replicated=True,
+)

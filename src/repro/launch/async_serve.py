@@ -152,6 +152,16 @@ class AsyncSelectionServer:
             self._cv.notify_all()  # triggers are evaluated in the loop
         return fut
 
+    def open_session(self, spec: SelectionSpec):
+        """Open a :class:`~repro.launch.sessions.SelectionSession` whose
+        ``extend`` returns Futures: each delta submits through this front
+        end's triggers and resolves to a ``SessionUpdate`` when its wave
+        lands.  ``close(flush=False)`` cancels in-flight delta futures;
+        a full queue raises ``ServerOverloaded`` at ``extend`` time."""
+        from repro.launch.sessions import SelectionSession
+
+        return SelectionSession(self, spec)
+
     def flush_now(self) -> None:
         """Drain every group and dispatch immediately in the calling thread
         (manual trigger).  Safe to race the timer: draining is atomic under

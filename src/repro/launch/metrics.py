@@ -21,10 +21,15 @@ Schema (``ServerMetrics.snapshot()``)::
         "flush_errors": int,    # dispatch errors (FlushError raised)
         "requeued": int,        # requests re-enqueued after a flush error
         "deadline_misses": int, # responses delivered past their deadline_s
+        "sessions_opened": int, # SelectionSessions opened on this server
+        "sessions_closed": int, # SelectionSessions closed
+        "session_deltas": int,  # extend() deltas absorbed across sessions
+        "session_churn": int,   # total selection churn across all deltas
       },
       "queue_s":  {count, sum, max, p50, p99},   # submit -> dispatch start
       "wave_s":   {count, sum, max, p50, p99},   # one engine dispatch
       "queue_depth": {count, sum, max, p50, p99},# depth sampled at enqueue
+      "delta_s":  {count, sum, max, p50, p99},   # session extend -> update
       "groups": {                                 # per-(family, n-bucket,
         "<label>": {                              #  optimizer) queue
           "requests": int, "waves": int,
@@ -136,6 +141,10 @@ _COUNTERS = (
     "flush_errors",
     "requeued",
     "deadline_misses",
+    "sessions_opened",
+    "sessions_closed",
+    "session_deltas",
+    "session_churn",
 )
 
 
@@ -161,6 +170,7 @@ class ServerMetrics:
         self.queue_s = Histogram(reservoir_size)
         self.wave_s = Histogram(reservoir_size)
         self.queue_depth = Histogram(reservoir_size)
+        self.delta_s = Histogram(reservoir_size)
         self.groups: dict[str, _GroupMetrics] = {}
 
     # -- recording -----------------------------------------------------------
@@ -215,6 +225,15 @@ class ServerMetrics:
             if deadline_missed:
                 self.counters["deadline_misses"] += 1
 
+    def observe_delta(self, delta_s: float, *, churn: int = 0) -> None:
+        """One session ``extend()`` absorbed: it took ``delta_s`` seconds
+        submit-to-update and replaced ``churn`` members of the previous
+        selection (symmetric difference of the id sets)."""
+        with self._lock:
+            self.counters["session_deltas"] += 1
+            self.counters["session_churn"] += int(churn)
+            self.delta_s.record(delta_s)
+
     # -- reading -------------------------------------------------------------
 
     def snapshot(self) -> dict:
@@ -225,6 +244,7 @@ class ServerMetrics:
                 "queue_s": self.queue_s.snapshot(),
                 "wave_s": self.wave_s.snapshot(),
                 "queue_depth": self.queue_depth.snapshot(ndigits=1),
+                "delta_s": self.delta_s.snapshot(),
                 "groups": {
                     label: {
                         "requests": g.requests,

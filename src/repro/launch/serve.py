@@ -368,6 +368,17 @@ class SelectionServer:
         )
         return self.submit_spec(spec, rid=rid)
 
+    def open_session(self, spec: SelectionSpec):
+        """Open a long-lived :class:`~repro.launch.sessions.SelectionSession`
+        around ``spec``: feed ground-set deltas with ``extend(features=...)``
+        / ``extend(indices=...)`` and get the refreshed selection after each.
+        Deltas ride the normal per-group queues (same coalescing, same
+        backpressure), so every update is bit-identical to a direct
+        ``solve()`` over the stream so far."""
+        from repro.launch.sessions import SelectionSession
+
+        return SelectionSession(self, spec)
+
     def cancel(self, rid) -> bool:
         """Remove one pending request (or one undelivered response) by id.
         Returns True if something was removed.  The escape hatch after a

@@ -367,3 +367,84 @@ def test_close_wakes_blocked_submitter(rng):
     assert not t.is_alive()
     assert len(errors) == 1 and "closed" in str(errors[0])
     assert first.cancelled()
+
+
+# ---------------------------------------------------------------------------
+# Session deltas over the async front end (launch/sessions.py edge cases).
+# ---------------------------------------------------------------------------
+
+
+def _session_spec(rng, n0=4, budget=3, **kw):
+    from repro.core import FeatureBased
+
+    rows = rng.uniform(0.0, 1.0, size=(n0, 6)).astype(np.float32)
+    return rows, SelectionSpec(FeatureBased.from_features(rows), budget, **kw)
+
+
+def test_session_extend_races_flush_now_without_double_dispatch(rng):
+    """extend() racing flush_now and a hot timer: a delta's rebuilt spec
+    rides exactly one wave (drain is atomic), and the final update is still
+    bit-identical to one solve() over the concatenated stream."""
+    from repro.core import FeatureBased
+
+    seed, spec = _session_spec(rng)
+    deltas = [rng.uniform(0.0, 1.0, size=(3, 6)).astype(np.float32)
+              for _ in range(5)]
+    with AsyncSelectionServer(max_pending=100, flush_interval=0.01) as server:
+        session = server.open_session(spec)
+        updates = []
+        for d in deltas:
+            fut = session.extend(features=d)
+            server.flush_now()  # races the 10 ms timer
+            updates.append(fut.result(timeout=300))
+        session.close()
+    assert server.stats.requests == len(deltas)  # exactly once each
+    full = np.concatenate([seed] + deltas, axis=0)
+    direct = solve(SelectionSpec(FeatureBased.from_features(full),
+                                 spec.budget))
+    _same(direct, updates[-1].response)
+
+
+def test_close_without_flush_cancels_session_delta_futures(rng):
+    """close(flush=False) with a session delta in flight: the chained
+    SessionUpdate future is cancelled, not stranded — result() raises."""
+    from concurrent.futures import CancelledError
+
+    _, spec = _session_spec(rng)
+    server = AsyncSelectionServer(max_pending=100, flush_interval=600.0)
+    session = server.open_session(spec)
+    fut = session.extend(features=np.ones((2, 6), np.float32))
+    server.close(flush=False)
+    assert fut.cancelled()
+    with pytest.raises(CancelledError):
+        fut.result(timeout=0)
+
+
+def test_session_extend_hits_backpressure_and_recovers(rng):
+    """ServerOverloaded on a delta submission surfaces synchronously at
+    extend() time, the session stream stays uncommitted (no double-append),
+    and a retry after a flush replays the SAME stream as a clean session."""
+    from repro.core import FeatureBased
+    from repro.launch.serve import ServerOverloaded
+
+    seed, spec = _session_spec(rng)
+    d1 = rng.uniform(0.0, 1.0, size=(3, 6)).astype(np.float32)
+    d2 = rng.uniform(0.0, 1.0, size=(3, 6)).astype(np.float32)
+    with AsyncSelectionServer(max_pending=100, flush_interval=600.0,
+                              max_queue=1) as server:
+        session = server.open_session(spec)
+        f1 = session.extend(features=d1)
+        with pytest.raises(ServerOverloaded):
+            session.extend(features=d2)  # queue full: rejected HERE
+        assert server.stats.rejections == 1
+        server.flush_now()
+        assert f1.result(timeout=300).n_total == seed.shape[0] + 3
+        f2 = session.extend(features=d2)  # retry: delta appended ONCE
+        server.flush_now()
+        upd = f2.result(timeout=300)
+        session.close()
+    assert upd.n_total == seed.shape[0] + 6
+    full = np.concatenate([seed, d1, d2], axis=0)
+    direct = solve(SelectionSpec(FeatureBased.from_features(full),
+                                 spec.budget))
+    _same(direct, upd.response)

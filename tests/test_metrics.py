@@ -63,15 +63,20 @@ def test_server_metrics_snapshot_schema():
     m.observe_served("FacilityLocation/n32/NaiveGreedy", 0.02,
                      deadline_missed=True)
     m.inc("rejections")
+    m.observe_delta(0.25, churn=3)
     snap = m.snapshot()
-    assert set(snap) == {"counters", "queue_s", "wave_s", "queue_depth", "groups"}
+    assert set(snap) == {
+        "counters", "queue_s", "wave_s", "queue_depth", "delta_s", "groups",
+    }
     c = snap["counters"]
     assert c["requests"] == 2 and c["waves"] == 1
     assert c["slots"] == 4 and c["padded_slots"] == 2
     assert c["rejections"] == 1 and c["deadline_misses"] == 1
+    assert c["session_deltas"] == 1 and c["session_churn"] == 3
     assert snap["queue_s"]["count"] == 2
     assert snap["wave_s"]["max"] == 0.5
     assert snap["queue_depth"]["max"] == 2
+    assert snap["delta_s"]["count"] == 1 and snap["delta_s"]["max"] == 0.25
     g = snap["groups"]["FacilityLocation/n32/NaiveGreedy"]
     assert g["requests"] == 2 and g["waves"] == 1
     assert g["queue_s"]["count"] == 2 and g["wave_s"]["count"] == 1
