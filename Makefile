@@ -17,6 +17,11 @@
 #   make stream-smoke quick offline-vs-streaming stream_bench run diffed
 #                    against the committed BENCH_streaming.json (oracle
 #                    eval counts compare exactly; timings at a loose 50%)
+#   make chaos-smoke quick chaos_bench run (fault injection: retry,
+#                    quarantine, breaker fallback, crash-restore) diffed
+#                    against the committed BENCH_resilience.json (the
+#                    *_total resilience counters compare exactly; timings
+#                    at a loose 50%)
 #   make docs-check  execute the code blocks in README.md and docs/*.md,
 #                    and assert the README coverage matrix matches the
 #                    registries (tools/gen_matrix.py --check)
@@ -27,9 +32,9 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test-fast test-all bench bench-batched bench-serve bench-diff serve-smoke scale-smoke stream-smoke docs-check shims-check
+.PHONY: verify test-fast test-all bench bench-batched bench-serve bench-diff serve-smoke scale-smoke stream-smoke chaos-smoke docs-check shims-check
 
-verify: test-fast docs-check shims-check serve-smoke scale-smoke stream-smoke
+verify: test-fast docs-check shims-check serve-smoke scale-smoke stream-smoke chaos-smoke
 
 test-fast:
 	$(PYTHON) -m pytest -x -q
@@ -79,6 +84,15 @@ scale-smoke:
 stream-smoke:
 	$(PYTHON) -m benchmarks.stream_bench --quick --json /tmp/BENCH_streaming_new.json >/dev/null
 	$(PYTHON) tools/bench_diff.py benchmarks/BENCH_streaming.json /tmp/BENCH_streaming_new.json --threshold 0.5
+
+# chaos smoke: the quick fault-injection cells (a subset of the full sweep)
+# diffed against the committed snapshot.  The *_total resilience counters
+# come from seeded fault plans against a sync server, so they are
+# deterministic and compare exactly; recovery_ms / degraded_qps wall clock
+# uses the same loose 50% threshold as the other smokes.
+chaos-smoke:
+	$(PYTHON) -m benchmarks.chaos_bench --quick --json /tmp/BENCH_resilience_new.json >/dev/null
+	$(PYTHON) tools/bench_diff.py benchmarks/BENCH_resilience.json /tmp/BENCH_resilience_new.json --threshold 0.5
 
 docs-check:
 	$(PYTHON) tools/check_docs.py

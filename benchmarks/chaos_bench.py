@@ -1,0 +1,243 @@
+"""Chaos bench: what resilience costs, and that its accounting is exact.
+
+Every scenario arms a seeded :class:`repro.launch.faults.FaultPlan` against
+a **synchronous** server (no timer races), so the resilience counters —
+``retries_total``, ``fallbacks_total``, ``quarantined_total``,
+``errors_total`` (the server's ``flush_errors``), ``served_total`` — are
+deterministic by construction and ``tools/bench_diff.py`` compares them
+EXACTLY (the ``*_total`` rule): drift means the retry/fallback machinery
+changed, not the machine.  Wall-clock columns stay loose:
+
+  - ``recovery_ms``  — time from first (faulted) dispatch to every request
+    resolved, or for ``crash_restore`` the full journal-replay time; diffed
+    lower-is-better at the smokes' 50% threshold.
+  - ``degraded_qps`` — throughput on the breaker-degraded path (fallback
+    scenario only); diffed higher-is-better.
+
+Scenarios:
+
+  - ``retry``         — a transient dispatch fault; the wave retries and
+    every answer is bit-identical to sequential ``solve()`` (asserted).
+  - ``quarantine``    — one poison rid; co-travellers are isolated into
+    singleton waves and served, the poison fails typed after max_attempts.
+  - ``fallback``      — a persistently failing Pallas kernel trips the
+    (family, kernel) breaker; work reroutes to XLA, degraded-but-exact.
+  - ``crash_restore`` — journaled session deltas replayed onto a fresh
+    server, restored state bit-identical (asserted).
+
+    PYTHONPATH=src python -m benchmarks.chaos_bench          # full sweep
+    PYTHONPATH=src python -m benchmarks.chaos_bench --quick  # smoke cells
+    PYTHONPATH=src python -m benchmarks.chaos_bench --json benchmarks/BENCH_resilience.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import platform
+import shutil
+import tempfile
+import time
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    FacilityLocation,
+    FeatureBased,
+    SelectionSpec,
+    create_kernel,
+    solve,
+)
+from repro.launch import faults  # noqa: E402
+from repro.launch.faults import FaultPlan, FaultSpec  # noqa: E402
+from repro.launch.resilience import BreakerBoard, RetryPolicy  # noqa: E402
+from repro.launch.serve import SelectionServer  # noqa: E402
+from repro.launch.sessions import SessionJournal, restore_sessions  # noqa: E402
+
+D = 8
+BUDGET = 4
+POLICY = RetryPolicy(max_attempts=3, backoff_s=0.0, jitter=0.0)
+
+
+def _fl_spec(rng, n, use_kernel=False):
+    x = rng.normal(size=(n, D)).astype(np.float32)
+    S = np.asarray(create_kernel(x, metric="euclidean"))
+    return SelectionSpec(FacilityLocation.from_kernel(S, use_kernel=use_kernel),
+                         BUDGET)
+
+
+def _warm(spec):
+    """Pay jit compile outside the timed window."""
+    jax.block_until_ready(solve(spec).gains)
+
+
+def _counters(server, served):
+    c = server.metrics.counters
+    return {
+        "retries_total": int(c["retries_total"]),
+        "fallbacks_total": int(c["fallbacks_total"]),
+        "quarantined_total": int(c["quarantined_total"]),
+        "errors_total": int(c["flush_errors"]),
+        "served_total": int(served),
+    }
+
+
+def bench_retry(n, requests):
+    rng = np.random.default_rng(0)
+    specs = [_fl_spec(rng, n) for _ in range(requests)]
+    expected = [solve(s).as_list() for s in specs]
+    _warm(specs[0])
+    server = SelectionServer(retry_policy=POLICY)
+    rids = [server.submit_spec(s) for s in specs]
+    plan = FaultPlan([FaultSpec(site="dispatch", times=1)])
+    t0 = time.perf_counter()
+    with faults.inject(plan):
+        out = server.flush()
+    dt = time.perf_counter() - t0
+    assert sorted(out) == sorted(rids) and not server.take_failures()
+    for rid, want in zip(rids, expected):
+        assert out[rid].selection == want  # recovery is bit-identical
+    return {
+        "scenario": "retry", "n": n, "requests": requests,
+        "recovery_ms": round(dt * 1e3, 2),
+        **_counters(server, len(out)),
+    }
+
+
+def bench_quarantine(n, requests):
+    rng = np.random.default_rng(1)
+    specs = [_fl_spec(rng, n) for _ in range(requests)]
+    _warm(specs[0])
+    server = SelectionServer(retry_policy=POLICY)
+    rids = [server.submit_spec(s) for s in specs]
+    plan = FaultPlan([FaultSpec(site="dispatch", rid=rids[0], times=None)])
+    t0 = time.perf_counter()
+    with faults.inject(plan):
+        out = server.flush()
+    dt = time.perf_counter() - t0
+    fails = server.take_failures()
+    assert set(fails) == {rids[0]}  # the poison fails typed, alone
+    assert sorted(out) == sorted(rids[1:])  # co-travellers all served
+    return {
+        "scenario": "quarantine", "n": n, "requests": requests,
+        "recovery_ms": round(dt * 1e3, 2),
+        **_counters(server, len(out)),
+    }
+
+
+def bench_fallback(n, requests):
+    rng = np.random.default_rng(2)
+    specs = [_fl_spec(rng, n, use_kernel=True) for _ in range(requests)]
+    # warm the XLA path: that's what the tripped breaker dispatches onto
+    _warm(SelectionSpec(dataclasses.replace(specs[0].fn, use_kernel=False),
+                        BUDGET))
+    server = SelectionServer(retry_policy=POLICY,
+                             breakers=BreakerBoard(threshold=1))
+    rids = [server.submit_spec(s) for s in specs]
+    plan = FaultPlan([FaultSpec(site="kernel", backend="pallas-*", times=None)])
+    t0 = time.perf_counter()
+    with faults.inject(plan):
+        out = server.flush()
+    dt = time.perf_counter() - t0
+    assert sorted(out) == sorted(rids) and not server.take_failures()
+    assert all(out[r].degraded == "xla" for r in rids)  # breaker rerouted
+    return {
+        "scenario": "fallback", "n": n, "requests": requests,
+        "recovery_ms": round(dt * 1e3, 2),
+        "degraded_qps": round(requests / dt, 2),
+        **_counters(server, len(out)),
+    }
+
+
+def bench_crash_restore(n, deltas):
+    rng = np.random.default_rng(3)
+    f0 = rng.uniform(0.0, 1.0, size=(n, D)).astype(np.float32)
+    spec = SelectionSpec(FeatureBased.from_features(f0, concave="sqrt"), BUDGET)
+    _warm(spec)
+    root = tempfile.mkdtemp(prefix="chaos_journal_")
+    try:
+        journal = SessionJournal(root)
+        server = SelectionServer()
+        session = server.open_session(spec, sid="bench", journal=journal)
+        for _ in range(deltas):
+            session.extend(
+                features=rng.uniform(0.0, 1.0, size=(4, D)).astype(np.float32)
+            )
+        want = session.last_update.selection
+        server2 = SelectionServer()  # the "crash": a fresh server
+        t0 = time.perf_counter()
+        restored = restore_sessions(server2, journal, {"bench": spec})
+        dt = time.perf_counter() - t0
+        r = restored["bench"]
+        assert r._seq == deltas and r.last_update.selection == want
+        return {
+            "scenario": "crash_restore", "n": n, "requests": deltas,
+            "recovery_ms": round(dt * 1e3, 2),
+            **_counters(server2, deltas),  # replayed deltas, all served
+        }
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+RUNNERS = {
+    "retry": bench_retry,
+    "quarantine": bench_quarantine,
+    "fallback": bench_fallback,
+    "crash_restore": bench_crash_restore,
+}
+
+# full sweep: (scenario, n, requests-or-deltas).  The quick cells are a
+# strict subset so `make chaos-smoke`'s diff of a --quick run compares real
+# committed rows.
+QUICK_CELLS = [
+    ("retry", 32, 4),
+    ("quarantine", 32, 4),
+    ("fallback", 32, 4),
+    ("crash_restore", 16, 3),
+]
+FULL_CELLS = QUICK_CELLS + [
+    ("retry", 64, 8),
+    ("quarantine", 64, 8),
+]
+
+
+def _print_rows(title, rows):
+    print(f"\n# {title}")
+    print(f"{'scenario':>14s} {'n':>5s} {'reqs':>5s} {'recov ms':>9s} "
+          f"{'retries':>8s} {'fallbk':>7s} {'quar':>5s} {'errs':>5s} "
+          f"{'served':>7s}")
+    for r in rows:
+        print(f"{r['scenario']:>14s} {r['n']:5d} {r['requests']:5d} "
+              f"{r['recovery_ms']:9.1f} {r['retries_total']:8d} "
+              f"{r['fallbacks_total']:7d} {r['quarantined_total']:5d} "
+              f"{r['errors_total']:5d} {r['served_total']:7d}")
+
+
+def main(quick: bool = False, json_path: str | None = None):
+    cells = QUICK_CELLS if quick else FULL_CELLS
+    rows = [RUNNERS[scenario](n, requests) for scenario, n, requests in cells]
+    _print_rows("Chaos: retry / quarantine / fallback / crash-restore", rows)
+    if json_path:
+        snapshot = {
+            "bench": "chaos_bench",
+            "host": platform.machine(),
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "rows": rows,
+        }
+        with open(json_path, "w") as f:
+            json.dump(snapshot, f, indent=1)
+        print(f"wrote {len(rows)} rows to {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smoke sweep")
+    ap.add_argument("--json", default=None, help="dump rows to this path")
+    a = ap.parse_args()
+    main(quick=a.quick, json_path=a.json)

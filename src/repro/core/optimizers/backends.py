@@ -92,19 +92,34 @@ def register_gain_backend(
 
 def resolve_backend(fn) -> GainBackend:
     """The backend serving ``fn``'s sweeps: registry entry, else the
-    function's own ``gain_backend()``, else the XLA fallback."""
+    function's own ``gain_backend()``, else the XLA fallback.
+
+    This is also the "kernel" fault-injection boundary
+    (``launch/faults.py``): when a fused (non-XLA) backend resolves, an
+    armed FaultPlan addressing ``site="kernel"`` may raise here — the
+    host-side resolution the serving stack performs before every dispatch,
+    so injected kernel failures are deterministic and hit the same
+    retry / breaker / Pallas->XLA fallback path a real kernel failure
+    would."""
+    backend = None
     for klass in type(fn).__mro__:
         factory = _REGISTRY.get(klass)
         if factory is not None:
             backend = factory(fn)
             if backend is not None:
-                return backend
-    hook = getattr(fn, "gain_backend", None)
-    if callable(hook):
-        backend = hook()
-        if backend is not None:
-            return backend
-    return _XLA
+                break
+    if backend is None:
+        hook = getattr(fn, "gain_backend", None)
+        if callable(hook):
+            backend = hook()
+    if backend is None:
+        backend = _XLA
+    name = getattr(backend, "name", "xla")
+    if name != "xla":
+        from repro.launch import faults
+
+        faults.check("kernel", family=type(fn).__name__, backend=name)
+    return backend
 
 
 def full_sweep(fn, state) -> jax.Array:

@@ -49,6 +49,9 @@ import jax
 import numpy as np
 
 from repro.core.functions.base import SetFunction
+# stdlib-only module: importable from core without dragging the serving
+# stack in (launch has no package __init__)
+from repro.launch.resilience import RetryPolicy
 from repro.core.optimizers.greedy import (
     GreedyResult,
     lazier_than_lazy_greedy,
@@ -349,6 +352,14 @@ class SelectionSpec:
     docs/serving.md — a deadline shapes *scheduling*, it never changes the
     selection).
 
+    ``retry`` is an optional :class:`~repro.launch.resilience.RetryPolicy`
+    consumed by the serving front doors: transient dispatch failures are
+    retried with deterministic backoff, and the request is quarantined with
+    a typed :class:`~repro.launch.resilience.RequestFailed` after
+    ``max_attempts`` (its ``timeout_s`` is the request's wall-clock budget
+    across attempts — distinct from ``deadline_s``, which only shapes
+    scheduling).  Sequential and batched ``solve()`` ignore it.
+
     As a pytree, the function is the only leaf-bearing child; budget,
     optimizer spec, stop rules and backend choice are static aux data — so a
     spec crosses ``jit`` / ``vmap`` boundaries and its static half rides the
@@ -362,6 +373,7 @@ class SelectionSpec:
     stop_if_negative: bool
     use_kernel: Optional[bool]
     deadline_s: Optional[float]
+    retry: Optional[RetryPolicy]
 
     def __init__(
         self,
@@ -373,6 +385,7 @@ class SelectionSpec:
         stopIfNegativeGain: bool | None = None,
         use_kernel: bool | None = None,
         deadline_s: float | None = None,
+        retry: RetryPolicy | None = None,
         **optimizer_params,
     ):
         if not isinstance(fn, SetFunction):
@@ -423,6 +436,11 @@ class SelectionSpec:
                     "deadline_s must be a positive finite number of seconds "
                     f"(or None for no deadline), got {deadline_s!r}"
                 )
+        if retry is not None and not isinstance(retry, RetryPolicy):
+            raise TypeError(
+                "retry must be a repro.launch.resilience.RetryPolicy (or "
+                f"None for single-attempt semantics), got {type(retry).__name__!r}"
+            )
         defaults = family_defaults(type(fn))
         stop_zero = (
             defaults["stopIfZeroGain"]
@@ -441,6 +459,7 @@ class SelectionSpec:
         object.__setattr__(self, "stop_if_negative", stop_neg)
         object.__setattr__(self, "use_kernel", use_kernel)
         object.__setattr__(self, "deadline_s", deadline_s)
+        object.__setattr__(self, "retry", retry)
 
     # -- execution-facing helpers -------------------------------------------
 
@@ -461,6 +480,7 @@ class SelectionSpec:
             self.stop_if_negative,
             self.use_kernel,
             self.deadline_s,
+            self.retry,
         )
 
     # -- serialization -------------------------------------------------------
@@ -477,6 +497,7 @@ class SelectionSpec:
             "stopIfNegativeGain": self.stop_if_negative,
             "use_kernel": self.use_kernel,
             "deadline_s": self.deadline_s,
+            "retry": self.retry.to_dict() if self.retry is not None else None,
         }
 
     @classmethod
@@ -484,6 +505,9 @@ class SelectionSpec:
         opt = d.get("optimizer", "NaiveGreedy")
         if isinstance(opt, Mapping):
             opt = OptimizerSpec.from_dict(opt)
+        retry = d.get("retry")
+        if isinstance(retry, Mapping):
+            retry = RetryPolicy.from_dict(retry)
         return cls(
             d["fn"],
             d["budget"],
@@ -492,6 +516,7 @@ class SelectionSpec:
             stopIfNegativeGain=d.get("stopIfNegativeGain"),
             use_kernel=d.get("use_kernel"),
             deadline_s=d.get("deadline_s"),
+            retry=retry,
         )
 
     def __eq__(self, other) -> bool:
@@ -516,6 +541,7 @@ class SelectionSpec:
             f"stopIfNegativeGain={self.stop_if_negative}, "
             f"use_kernel={self.use_kernel}"
             + (f", deadline_s={self.deadline_s}" if self.deadline_s else "")
+            + (f", retry={self.retry!r}" if self.retry is not None else "")
             + ")"
         )
 
@@ -525,7 +551,7 @@ def _spec_flatten(s: SelectionSpec):
 
 
 def _spec_unflatten(aux, children):
-    budget, optimizer, stop_zero, stop_neg, use_kernel, deadline_s = aux
+    budget, optimizer, stop_zero, stop_neg, use_kernel, deadline_s, retry = aux
     obj = object.__new__(SelectionSpec)
     object.__setattr__(obj, "fn", children[0])
     object.__setattr__(obj, "budget", budget)
@@ -534,6 +560,7 @@ def _spec_unflatten(aux, children):
     object.__setattr__(obj, "stop_if_negative", stop_neg)
     object.__setattr__(obj, "use_kernel", use_kernel)
     object.__setattr__(obj, "deadline_s", deadline_s)
+    object.__setattr__(obj, "retry", retry)
     return obj
 
 

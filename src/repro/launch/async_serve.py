@@ -46,6 +46,15 @@ submitted directly on the wrapped *sync* server that lands in a poisoned
 async wave has no future to complete and is not requeued — its loss is
 reported only through ``flush_errors``; keep sync and async front ends on
 separate servers if that matters.
+
+Resilient mode: when the wrapped server carries a ``retry_policy`` (or any
+spec its own ``retry``), dispatch runs the server's retry / poison-isolation
+/ quarantine path instead — transient failures retry with backoff, and a
+request that exhausts its budget resolves its future exceptionally with a
+typed :class:`~repro.launch.resilience.RequestFailed` (never a bare engine
+error, never a stranded future).  Wave-build (padder) failures are always
+handled resiliently here, whatever the policy: they fail the affected
+requests typed instead of killing the flush thread.
 """
 from __future__ import annotations
 
@@ -152,15 +161,17 @@ class AsyncSelectionServer:
             self._cv.notify_all()  # triggers are evaluated in the loop
         return fut
 
-    def open_session(self, spec: SelectionSpec):
+    def open_session(self, spec: SelectionSpec, *, sid=None, journal=None):
         """Open a :class:`~repro.launch.sessions.SelectionSession` whose
         ``extend`` returns Futures: each delta submits through this front
         end's triggers and resolves to a ``SessionUpdate`` when its wave
         lands.  ``close(flush=False)`` cancels in-flight delta futures;
-        a full queue raises ``ServerOverloaded`` at ``extend`` time."""
+        a full queue raises ``ServerOverloaded`` at ``extend`` time.
+        ``sid`` / ``journal`` enable crash recovery, see
+        :func:`~repro.launch.sessions.restore_sessions`."""
         from repro.launch.sessions import SelectionSession
 
-        return SelectionSession(self, spec)
+        return SelectionSession(self, spec, sid=sid, journal=journal)
 
     def flush_now(self) -> None:
         """Drain every group and dispatch immediately in the calling thread
@@ -177,23 +188,34 @@ class AsyncSelectionServer:
         ``flush`` (default) — otherwise they are cancelled AND their
         requests removed from the wrapped server's queues (no orphans for a
         later sync ``flush()`` to trip over).  A wave already executing
-        completes either way; its futures resolve normally."""
+        completes either way; its futures resolve normally.
+
+        Order matters: the worker is JOINED before the final drain.  An
+        in-flight ``_execute`` may, on a flush error, requeue undispatched
+        requests and reinstate their futures — draining before the join
+        would miss those and strand their futures forever.  The final drain
+        loops until the queues are empty for the same reason: the close-time
+        dispatch itself may requeue."""
         with self._cv:
             if self._closed:
                 return
             self._closed = True
-            batch = None
-            if flush:
-                batch = self._drain_locked(None)
-            else:
+            self._cv.notify_all()  # wake the loop and any blocked submitters
+        self._thread.join()  # an in-flight _execute finishes (and may requeue)
+        if flush:
+            while True:
+                with self._cv:
+                    batch = self._drain_locked(None)
+                if batch is None:
+                    break
+                self._execute(batch)
+        else:
+            with self._cv:
                 for rid, fut in self._futures.items():
                     fut.cancel()
                     self._server.cancel(rid)
                 self._futures.clear()
-            self._cv.notify_all()  # wake the loop and any blocked submitters
-        if batch is not None:
-            self._execute(batch)
-        self._thread.join()
+                self._cv.notify_all()
 
     def __enter__(self) -> "AsyncSelectionServer":
         return self
@@ -237,9 +259,29 @@ class AsyncSelectionServer:
     def _drain_locked(self, keys):
         """Swap the due groups' requests and futures out of shared state.
         Caller holds the condition lock.  Returns ``(waves, futures)`` or
-        None when nothing was pending."""
-        waves, _ = self._server.drain(keys, take_undelivered=False)
+        None when nothing was pending.
+
+        Always drains via the server's resilient path: a wave-build (padder)
+        error costs one group — its exhausted requests fail their futures
+        typed HERE, its retryable ones stay queued for a later trigger —
+        instead of raising out of the flush thread's loop and killing it.
+        Without any retry policy the behavior is single-attempt (immediate
+        typed failure), so the legacy dispatch contract is unchanged."""
+        waves, _, failures, _ = self._server.drain_resilient(
+            keys, take_undelivered=False
+        )
+        sync_owned = {}
+        for rid, err in failures.items():
+            fut = self._futures.pop(rid, None)
+            if fut is None:
+                sync_owned[rid] = err  # sync submitter: surfaces take_failures
+            elif not fut.cancelled():
+                fut.set_exception(err)
+        if sync_owned:
+            self._server.hold_failures(sync_owned)
         if not waves:
+            if failures:
+                self._cv.notify_all()  # queue space freed by the reap
             return None
         futures = {}
         for wave in waves:
@@ -253,8 +295,41 @@ class AsyncSelectionServer:
     def _execute(self, batch) -> None:
         """Dispatch drained waves OUTSIDE the condition lock and complete
         their futures.  The dispatch lock serializes engine use across the
-        flush thread, ``flush_now`` callers, and ``close``."""
+        flush thread, ``flush_now`` callers, and ``close``.
+
+        With a retry policy in play (server-wide or on any rider's spec)
+        this runs the server's resilient dispatch: transient failures retry
+        with backoff inside the dispatch lock, exhausted requests resolve
+        their futures with typed
+        :class:`~repro.launch.resilience.RequestFailed`.  Otherwise the
+        legacy single-attempt :class:`FlushError` discipline applies
+        unchanged."""
         waves, futures = batch
+        resilient = self._server.retry_policy is not None or any(
+            req.spec.retry is not None for w in waves for req in w.requests
+        )
+        if resilient:
+            try:
+                with self._dispatch_lock:
+                    responses, failures = self._server.dispatch_resilient(waves)
+            except BaseException as e:  # never strand a future
+                for fut in futures.values():
+                    if not fut.cancelled():
+                        fut.set_exception(e)
+                return
+            sync_owned = {}
+            for rid, err in failures.items():
+                fut = futures.pop(rid, None)
+                if fut is None:
+                    sync_owned[rid] = err
+                elif not fut.cancelled():
+                    fut.set_exception(err)
+            if sync_owned:
+                with self._cv:
+                    self._server.hold_failures(sync_owned)
+            self.flushes += 1
+            self._complete(responses, futures)
+            return
         try:
             with self._dispatch_lock:
                 responses = self._server.dispatch_waves(waves)

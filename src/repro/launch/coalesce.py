@@ -64,6 +64,7 @@ from repro.core.info.fl import FLCG, FLCMI, FLQMI, FLVMI
 from repro.core.info.gc import GCMI
 from repro.core.optimizers.spec import OptimizerSpec, SelectionSpec
 from repro.core.sources import DenseSource, FeatureSource, KnnSource
+from repro.launch import faults
 
 
 @dataclasses.dataclass
@@ -370,8 +371,14 @@ def pad_function(fn, n_to: int):
 
     The registry is consulted even when no padding is needed: a family
     without a padder must fail the same way at every ground-set size, not
-    only when its n misses a power-of-two bucket."""
+    only when its n misses a power-of-two bucket.  This is also the
+    "padder" fault-injection boundary (``launch/faults.py``) — it fires
+    even at exact bucket sizes, for the same any-size consistency reason.
+    Materialization happens at flush time, so a padder fault aborts a
+    drain *before* any queue entry is removed (or, on the resilient drain,
+    isolates just the failing group)."""
     padder = resolve_padder(type(fn))
+    faults.check("padder", family=type(fn).__name__, n=fn.n, n_to=n_to)
     if fn.n == n_to:
         return fn
     if fn.n > n_to:

@@ -25,11 +25,15 @@ Schema (``ServerMetrics.snapshot()``)::
         "sessions_closed": int, # SelectionSessions closed
         "session_deltas": int,  # extend() deltas absorbed across sessions
         "session_churn": int,   # total selection churn across all deltas
+        "retries_total": int,   # wave re-dispatch attempts scheduled
+        "fallbacks_total": int, # waves served degraded (breaker open)
+        "quarantined_total": int, # requests failed typed after N attempts
       },
       "queue_s":  {count, sum, max, p50, p99},   # submit -> dispatch start
       "wave_s":   {count, sum, max, p50, p99},   # one engine dispatch
       "queue_depth": {count, sum, max, p50, p99},# depth sampled at enqueue
       "delta_s":  {count, sum, max, p50, p99},   # session extend -> update
+      "breakers": {"<label>": "closed|open|half_open", ...},
       "groups": {                                 # per-(family, n-bucket,
         "<label>": {                              #  optimizer) queue
           "requests": int, "waves": int,
@@ -50,6 +54,15 @@ from __future__ import annotations
 import math
 import random
 import threading
+import zlib
+
+
+def _seed_for(name: str) -> int:
+    """Per-histogram reservoir seed.  Seeding every reservoir identically
+    would correlate their eviction patterns (all reservoirs replace the same
+    slots on the same ticks for equal-length streams); hashing the metric
+    name decorrelates them while staying reproducible across runs."""
+    return zlib.crc32(name.encode("utf-8"))
 
 __all__ = ["Reservoir", "Histogram", "ServerMetrics"]
 
@@ -145,6 +158,9 @@ _COUNTERS = (
     "sessions_closed",
     "session_deltas",
     "session_churn",
+    "retries_total",
+    "fallbacks_total",
+    "quarantined_total",
 )
 
 
@@ -153,11 +169,11 @@ class _GroupMetrics:
 
     __slots__ = ("requests", "waves", "queue_s", "wave_s")
 
-    def __init__(self, reservoir_size: int):
+    def __init__(self, reservoir_size: int, label: str = ""):
         self.requests = 0
         self.waves = 0
-        self.queue_s = Histogram(reservoir_size)
-        self.wave_s = Histogram(reservoir_size)
+        self.queue_s = Histogram(reservoir_size, seed=_seed_for(f"{label}/queue_s"))
+        self.wave_s = Histogram(reservoir_size, seed=_seed_for(f"{label}/wave_s"))
 
 
 class ServerMetrics:
@@ -167,11 +183,12 @@ class ServerMetrics:
         self._reservoir_size = int(reservoir_size)
         self._lock = threading.Lock()
         self.counters: dict[str, int] = {name: 0 for name in _COUNTERS}
-        self.queue_s = Histogram(reservoir_size)
-        self.wave_s = Histogram(reservoir_size)
-        self.queue_depth = Histogram(reservoir_size)
-        self.delta_s = Histogram(reservoir_size)
+        self.queue_s = Histogram(reservoir_size, seed=_seed_for("queue_s"))
+        self.wave_s = Histogram(reservoir_size, seed=_seed_for("wave_s"))
+        self.queue_depth = Histogram(reservoir_size, seed=_seed_for("queue_depth"))
+        self.delta_s = Histogram(reservoir_size, seed=_seed_for("delta_s"))
         self.groups: dict[str, _GroupMetrics] = {}
+        self.breaker_states: dict[str, str] = {}
 
     # -- recording -----------------------------------------------------------
 
@@ -182,8 +199,14 @@ class ServerMetrics:
     def _group(self, label: str) -> _GroupMetrics:
         g = self.groups.get(label)
         if g is None:
-            g = self.groups[label] = _GroupMetrics(self._reservoir_size)
+            g = self.groups[label] = _GroupMetrics(self._reservoir_size, label)
         return g
+
+    def set_breaker(self, label: str, state: str) -> None:
+        """Record a circuit breaker's current state (the server binds this
+        to its :class:`~repro.launch.resilience.BreakerBoard`)."""
+        with self._lock:
+            self.breaker_states[label] = str(state)
 
     def observe_enqueue(self, label: str, depth: int) -> None:
         """One request admitted to ``label``'s queue, which now holds
@@ -245,6 +268,7 @@ class ServerMetrics:
                 "wave_s": self.wave_s.snapshot(),
                 "queue_depth": self.queue_depth.snapshot(ndigits=1),
                 "delta_s": self.delta_s.snapshot(),
+                "breakers": dict(sorted(self.breaker_states.items())),
                 "groups": {
                     label: {
                         "requests": g.requests,

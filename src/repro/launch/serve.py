@@ -61,6 +61,7 @@ from repro.core.optimizers.spec import (
     resolve_optimizer,
     wave_capable_names,
 )
+from repro.launch import faults
 from repro.launch.coalesce import (
     SelectionRequest,
     Wave,
@@ -69,6 +70,12 @@ from repro.launch.coalesce import (
     waves_for_group,
 )
 from repro.launch.metrics import ServerMetrics
+from repro.launch.resilience import (
+    SINGLE_ATTEMPT,
+    BreakerBoard,
+    RequestFailed,
+    RetryPolicy,
+)
 
 
 class ServerOverloaded(RuntimeError):
@@ -137,6 +144,10 @@ class SelectionResponse:
     queue_s: float = 0.0  # submit -> wave dispatch start (this request's wait)
     wave_s: float = 0.0  # wave dispatch wall time (shared by the wave)
     deadline_missed: bool = False  # delivered after the spec's deadline_s
+    attempts: int = 1  # dispatch attempts this request survived (retries + 1)
+    degraded: str | None = None  # "xla" / "single-device" when a breaker
+    #   rerouted the wave off its primary backend or mesh (results are still
+    #   bit-identical to sequential solve — only the implementation changed)
 
 
 class ServerStats:
@@ -202,6 +213,10 @@ class ServerStats:
             else 0.0,
             "rejections": self.rejections,
             "deadline_misses": m.counters["deadline_misses"],
+            "retries_total": m.counters["retries_total"],
+            "fallbacks_total": m.counters["fallbacks_total"],
+            "quarantined_total": m.counters["quarantined_total"],
+            "breaker_state": dict(sorted(m.breaker_states.items())),
         }
 
     def snapshot(self) -> dict:
@@ -222,6 +237,23 @@ class SelectionServer:
       max_queue: admission-control cap on TOTAL pending requests across all
         group queues; ``submit`` raises :class:`ServerOverloaded` beyond it.
         None (default) disables backpressure.
+      retry_policy: server-wide default :class:`~repro.launch.resilience.
+        RetryPolicy`.  When it is set — or any pending spec carries its own
+        ``retry`` — ``flush()`` switches to the resilient path: transient
+        wave failures are retried with backoff, the poison request is
+        isolated into a singleton wave so it cannot re-poison its group,
+        and exhausted requests resolve to typed
+        :class:`~repro.launch.resilience.RequestFailed` entries
+        (``take_failures()``) instead of aborting the flush.  A request's
+        ``spec.retry`` always wins over the server default.  With neither
+        set, ``flush()`` keeps the legacy single-attempt
+        :class:`FlushError` contract exactly.
+      breakers: a :class:`~repro.launch.resilience.BreakerBoard` (one is
+        created when omitted).  Dispatch consults ``(family, "kernel")``
+        before running a fused backend and ``(family, "mesh")`` before a
+        mesh dispatch; an open breaker reroutes the wave degraded —
+        Pallas -> XLA via ``use_kernel=False``, mesh -> single device —
+        which stays bit-identical to sequential ``solve()``.
 
     The dispatch path is synchronous; ``submit`` only enqueues (into the
     request's group queue — the coalescer's wave identity promoted to queue
@@ -239,6 +271,8 @@ class SelectionServer:
         data_axis: str = "data",
         max_wave: int = 64,
         max_queue: int | None = None,
+        retry_policy: RetryPolicy | None = None,
+        breakers: BreakerBoard | None = None,
     ):
         self.mesh = mesh
         self.batch_axis = batch_axis
@@ -247,6 +281,13 @@ class SelectionServer:
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue must be >= 1 or None, got {max_queue}")
         self.max_queue = max_queue
+        if retry_policy is not None and not isinstance(retry_policy, RetryPolicy):
+            raise TypeError(
+                f"retry_policy must be a RetryPolicy or None, "
+                f"got {type(retry_policy).__name__!r}"
+            )
+        self.retry_policy = retry_policy
+        self.breakers = breakers if breakers is not None else BreakerBoard()
         if mesh is not None:
             sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
             for name in (batch_axis, data_axis):
@@ -263,9 +304,13 @@ class SelectionServer:
         # flush order follows each group's first arrival)
         self._queues: dict[tuple, list[SelectionRequest]] = {}
         self._undelivered: dict = {}  # flushed but not yet returned to a caller
+        self._failures: dict = {}  # rid -> RequestFailed, not yet taken
+        self._attempts: dict = {}  # rid -> [attempt dicts] across retries
         self._next_rid = 0
+        self._dispatch_seq = 0  # 0-based dispatch ordinal (fault addressing)
         self.metrics = ServerMetrics()
         self.stats = ServerStats(self.metrics)
+        self.breakers.bind(self.metrics.set_breaker)
 
     # -- request ingest ------------------------------------------------------
 
@@ -368,16 +413,19 @@ class SelectionServer:
         )
         return self.submit_spec(spec, rid=rid)
 
-    def open_session(self, spec: SelectionSpec):
+    def open_session(self, spec: SelectionSpec, *, sid=None, journal=None):
         """Open a long-lived :class:`~repro.launch.sessions.SelectionSession`
         around ``spec``: feed ground-set deltas with ``extend(features=...)``
         / ``extend(indices=...)`` and get the refreshed selection after each.
         Deltas ride the normal per-group queues (same coalescing, same
         backpressure), so every update is bit-identical to a direct
-        ``solve()`` over the stream so far."""
+        ``solve()`` over the stream so far.  Pass a
+        :class:`~repro.launch.sessions.SessionJournal` (and optionally a
+        stable ``sid``) to journal committed deltas for crash recovery via
+        :func:`~repro.launch.sessions.restore_sessions`."""
         from repro.launch.sessions import SelectionSession
 
-        return SelectionSession(self, spec)
+        return SelectionSession(self, spec, sid=sid, journal=journal)
 
     def cancel(self, rid) -> bool:
         """Remove one pending request (or one undelivered response) by id.
@@ -415,21 +463,80 @@ class SelectionServer:
     # -- dispatch ------------------------------------------------------------
 
     def _dispatch(self, wave: Wave) -> dict:
+        fam = type(wave.requests[0].spec.fn).__name__
+        widx = self._dispatch_seq
+        self._dispatch_seq += 1
+        # bookkeeping probe: the wave's PRIMARY backend, for breaker routing
+        # and fault addressing — suspended so it never consumes fault budget
+        with faults.suspended():
+            primary = backend_name(wave.fns[0])
+        fns, mesh = wave.fns, self.mesh
+        kernel_degraded = mesh_degraded = False
+        if primary != "xla" and not self.breakers.allow((fam, "kernel")):
+            # open kernel breaker: reroute Pallas -> XLA.  use_kernel is a
+            # static meta field, so replace() only changes the trace-time
+            # backend choice — results stay bit-identical (pinned parity).
+            fns = [dataclasses.replace(f, use_kernel=False) for f in fns]
+            kernel_degraded = True
+        if mesh is not None and not self.breakers.allow((fam, "mesh")):
+            mesh = None  # open mesh breaker: serve single-device
+            mesh_degraded = True
+        degraded = "+".join(
+            label
+            for flag, label in (
+                (kernel_degraded, "xla"),
+                (mesh_degraded, "single-device"),
+            )
+            if flag
+        ) or None
+        if degraded is not None:
+            self.metrics.inc("fallbacks_total")
         t0 = time.monotonic()
-        engine = BatchedEngine(
-            wave.fns,
-            valid=wave.valid,
-            mesh=self.mesh,
-            batch_axis=self.batch_axis,
-            data_axis=self.data_axis,
-        )
-        results = engine.run(
-            wave.budgets,
-            wave.optimizer,
-            stop_if_zero=wave.stop_if_zero,
-            stop_if_negative=wave.stop_if_negative,
-            max_budget=wave.max_budget,
-        )
+        try:
+            faults.check(
+                "dispatch",
+                family=fam,
+                backend=primary,
+                wave_index=widx,
+                mesh=mesh is not None,
+                rids=tuple(r.rid for r in wave.requests),
+                label=wave.label,
+            )
+            # host-side backend resolution doubles as the "kernel" fault
+            # boundary (resolve_backend); also names the backend that
+            # actually answers after any degraded rewrite
+            name = backend_name(fns[0])
+            engine = BatchedEngine(
+                fns,
+                valid=wave.valid,
+                mesh=mesh,
+                batch_axis=self.batch_axis,
+                data_axis=self.data_axis,
+            )
+            results = engine.run(
+                wave.budgets,
+                wave.optimizer,
+                stop_if_zero=wave.stop_if_zero,
+                stop_if_negative=wave.stop_if_negative,
+                max_budget=wave.max_budget,
+            )
+        except Exception as e:
+            # attribute the failure to the path that was actually in play:
+            # kernel-site faults (and any error while a fused backend was
+            # live) charge the kernel breaker; dispatch errors on a mesh
+            # charge the mesh breaker
+            site = getattr(e, "site", None)
+            if site == "kernel":
+                self.breakers.record_failure((fam, "kernel"))
+            elif mesh is not None:
+                self.breakers.record_failure((fam, "mesh"))
+            elif primary != "xla" and not kernel_degraded:
+                self.breakers.record_failure((fam, "kernel"))
+            raise
+        if primary != "xla" and not kernel_degraded:
+            self.breakers.record_success((fam, "kernel"))
+        if mesh is not None:
+            self.breakers.record_success((fam, "mesh"))
         t1 = time.monotonic()
         wave_s = t1 - t0
         label = wave.label
@@ -440,7 +547,6 @@ class SelectionServer:
             slots=wave.batch_size,
             padded_slots=wave.n_padded_slots,
         )
-        name = backend_name(wave.fns[0])
         by_rid = wave.demux(results)
         out = {}
         for req in wave.requests:
@@ -458,6 +564,7 @@ class SelectionServer:
                 queue_s=queue_s,
                 wave_s=wave_s,
                 deadline_missed=missed,
+                degraded=degraded,
             )
         return out
 
@@ -538,6 +645,258 @@ class SelectionServer:
         if requests:
             self.metrics.inc("requeued", len(requests))
 
+    # -- resilience ----------------------------------------------------------
+
+    def _resilience_active(self) -> bool:
+        """True when flushes should run the retry/quarantine path: a
+        server-wide ``retry_policy``, or any pending spec carrying its own
+        ``retry``.  With neither, flush keeps the legacy single-attempt
+        :class:`FlushError` contract."""
+        if self.retry_policy is not None:
+            return True
+        return any(
+            req.spec.retry is not None
+            for queue in self._queues.values()
+            for req in queue
+        )
+
+    def _policy_for(self, req: SelectionRequest) -> RetryPolicy:
+        """The request's effective policy: its spec's, else the server's,
+        else single-attempt (fail typed on first error, no retry)."""
+        if req.spec.retry is not None:
+            return req.spec.retry
+        if self.retry_policy is not None:
+            return self.retry_policy
+        return SINGLE_ATTEMPT
+
+    def _note_attempt(self, req: SelectionRequest, error) -> RequestFailed | None:
+        """Charge one failed attempt against ``req``'s budget.  Returns the
+        terminal :class:`RequestFailed` when the budget is exhausted —
+        ``max_attempts`` (``"quarantined"``) or wall-clock ``timeout_s``
+        (``"timeout"``) — else None (the request may retry)."""
+        now = time.monotonic()
+        hist = self._attempts.setdefault(req.rid, [])
+        hist.append(
+            {
+                "attempt": len(hist) + 1,
+                "error": f"{type(error).__name__}: {error}",
+                "elapsed_s": round(max(0.0, now - req.enqueue_t), 6),
+            }
+        )
+        pol = self._policy_for(req)
+        if pol.timeout_s is not None and now - req.enqueue_t >= pol.timeout_s:
+            reason = "timeout"
+        elif len(hist) >= pol.max_attempts:
+            reason = "quarantined"
+            self.metrics.inc("quarantined_total")
+        else:
+            return None
+        self._attempts.pop(req.rid, None)
+        return RequestFailed(req.rid, reason, hist, cause=error)
+
+    def _isolate(self, req: SelectionRequest, failures: dict) -> Wave | None:
+        """Rebuild ``req`` as a singleton wave for a retry.  Build (padder)
+        errors are charged against its attempt budget like any other; on
+        exhaustion the terminal failure lands in ``failures`` and None is
+        returned."""
+        while True:
+            try:
+                return waves_for_group(
+                    [req],
+                    max_wave=1,
+                    n_multiple=self.n_multiple,
+                    b_multiple=self.b_multiple,
+                )[0]
+            except Exception as e:
+                self.metrics.inc("flush_errors")
+                term = self._note_attempt(req, e)
+                if term is not None:
+                    failures[req.rid] = term
+                    return None
+                self.metrics.inc("retries_total")
+                wait = self._policy_for(req).backoff(
+                    len(self._attempts[req.rid]), seed=req.rid
+                )
+                if wait > 0:
+                    time.sleep(wait)
+
+    def dispatch_resilient(self, waves: Sequence[Wave]) -> tuple[dict, dict]:
+        """Dispatch waves with per-request retry, poison isolation, and
+        typed quarantine; returns ``(responses, failures)`` — every drained
+        rid resolves into exactly one of the two dicts, and no exception
+        escapes for a wave failure.
+
+        On a wave failure each rider is charged one attempt: exhausted
+        requests fail typed (:class:`RequestFailed` in ``failures``), the
+        rest retry — a multi-request wave is rebuilt as singleton waves
+        first, so the one poison request cannot re-poison its co-travellers
+        (they succeed alone on the next attempt).  Backoff between attempts
+        follows each request's policy with jitter seeded by its rid, so
+        reruns back off identically.  Like :meth:`dispatch_waves` this
+        touches no queues and is safe outside any queue lock.
+        """
+        responses: dict = {}
+        failures: dict = {}
+        pending: list[Wave] = list(waves)
+        while pending:
+            wave = pending.pop(0)
+            try:
+                out = self._dispatch(wave)
+            except Exception as e:
+                self.metrics.inc("flush_errors")
+                retryable = []
+                for req in wave.requests:
+                    term = self._note_attempt(req, e)
+                    if term is not None:
+                        failures[req.rid] = term
+                    else:
+                        retryable.append(req)
+                if not retryable:
+                    continue
+                self.metrics.inc("retries_total", len(retryable))
+                if len(wave.requests) > 1:
+                    # poison isolation: each survivor retries ALONE
+                    rebuilt = []
+                    for req in retryable:
+                        w = self._isolate(req, failures)
+                        if w is not None:
+                            rebuilt.append(w)
+                    pending[:0] = rebuilt
+                else:
+                    pending.insert(0, wave)  # already a singleton
+                live = [r for r in retryable if r.rid in self._attempts]
+                if live:
+                    wait = max(
+                        self._policy_for(r).backoff(
+                            len(self._attempts[r.rid]), seed=r.rid
+                        )
+                        for r in live
+                    )
+                    if wait > 0:
+                        time.sleep(wait)
+                continue
+            for req in wave.requests:
+                prior = self._attempts.pop(req.rid, None)
+                if prior:
+                    out[req.rid].attempts = len(prior) + 1
+            responses.update(out)
+        return responses, failures
+
+    def drain_resilient(
+        self, keys: Optional[Sequence[tuple]] = None, *, take_undelivered: bool = True
+    ) -> tuple[list[Wave], dict, dict, float]:
+        """Like :meth:`drain`, but a wave-build (padder) error costs ONE
+        group instead of aborting the whole drain, and requests whose
+        wall-clock ``timeout_s`` already lapsed are reaped before any build.
+
+        Returns ``(waves, undelivered, failures, retry_wait)``:
+        ``failures`` maps reaped/exhausted rids to :class:`RequestFailed`;
+        a group whose build failed keeps its retryable requests QUEUED and
+        reports the backoff to wait before re-draining via ``retry_wait``
+        (this method never sleeps — the async front end calls it under its
+        lock).
+        """
+        if keys is None:
+            keys = list(self._queues)
+        waves: list[Wave] = []
+        failures: dict = {}
+        retry_wait = 0.0
+        for key in list(keys):
+            requests = self._queues.get(key)
+            if not requests:
+                self._queues.pop(key, None)
+                continue
+            now = time.monotonic()
+            live = []
+            for req in requests:
+                pol = self._policy_for(req)
+                if pol.timeout_s is not None and now - req.enqueue_t >= pol.timeout_s:
+                    hist = self._attempts.pop(req.rid, [])
+                    failures[req.rid] = RequestFailed(req.rid, "timeout", hist)
+                else:
+                    live.append(req)
+            if not live:
+                self._queues.pop(key, None)
+                continue
+            try:
+                group_waves = waves_for_group(
+                    live,
+                    max_wave=self.max_wave,
+                    n_multiple=self.n_multiple,
+                    b_multiple=self.b_multiple,
+                )
+            except Exception as e:
+                self.metrics.inc("flush_errors")
+                keep = []
+                for req in live:
+                    term = self._note_attempt(req, e)
+                    if term is not None:
+                        failures[req.rid] = term
+                    else:
+                        keep.append(req)
+                if keep:
+                    self.metrics.inc("retries_total", len(keep))
+                    self._queues[key] = keep
+                    retry_wait = max(
+                        retry_wait,
+                        max(
+                            self._policy_for(r).backoff(
+                                len(self._attempts[r.rid]), seed=r.rid
+                            )
+                            for r in keep
+                        ),
+                    )
+                else:
+                    self._queues.pop(key, None)
+                continue
+            waves.extend(group_waves)
+            self._queues.pop(key, None)
+        undelivered: dict = {}
+        if take_undelivered:
+            undelivered, self._undelivered = self._undelivered, {}
+        return waves, undelivered, failures, retry_wait
+
+    def take_failures(self) -> dict:
+        """Hand over (and clear) the typed failures from resilient flushes:
+        ``{rid: RequestFailed}``.  Each failure is delivered exactly once —
+        callers own what they take."""
+        out, self._failures = self._failures, {}
+        return out
+
+    def hold_failures(self, failures: dict) -> None:
+        """Re-hold typed failures for a later :meth:`take_failures` — the
+        async front end stashes failures for rids owned by the sync flush
+        path here, mirroring :meth:`hold_undelivered`."""
+        self._failures.update(failures)
+
+    def _flush_resilient(self) -> dict:
+        """The resilient flush body: rounds of drain + dispatch until every
+        queue is empty.  Groups whose build failed retryably stay queued
+        between rounds (backoff honored here, outside any lock); every
+        drained rid ends as exactly one response (returned) or one
+        :class:`RequestFailed` (held for :meth:`take_failures`)."""
+        responses: dict = {}
+        failures: dict = {}
+        first = True
+        while True:
+            waves, undelivered, drain_failures, retry_wait = self.drain_resilient(
+                take_undelivered=first
+            )
+            first = False
+            responses.update(undelivered)
+            failures.update(drain_failures)
+            if waves:
+                out, dispatch_failures = self.dispatch_resilient(waves)
+                responses.update(out)
+                failures.update(dispatch_failures)
+            if not any(self._queues.values()):
+                break
+            if retry_wait > 0:
+                time.sleep(retry_wait)
+        if failures:
+            self.hold_failures(failures)
+        return responses
+
     def flush(self) -> dict:
         """Drain every group + dispatch; returns {rid: response}, including
         any responses computed by an earlier ``select`` call on behalf of
@@ -550,7 +909,16 @@ class SelectionServer:
         never-dispatched ones — is re-enqueued at the front of its queue.
         ``e.failed_rids`` names the poisoned wave; ``cancel`` those before
         retrying if the requests themselves are at fault.
+
+        When a :class:`~repro.launch.resilience.RetryPolicy` is in play
+        (server-wide or on any pending spec) this switches to the resilient
+        path instead: transient failures retry with backoff, the poison
+        request is isolated, and exhausted requests resolve to typed
+        failures via :meth:`take_failures` — :class:`FlushError` is never
+        raised.
         """
+        if self._resilience_active():
+            return self._flush_resilient()
         waves, responses = self.drain()
         try:
             responses.update(self.dispatch_waves(waves))

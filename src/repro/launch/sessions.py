@@ -50,10 +50,21 @@ AsyncSelectionServer` returns a Future chained onto the server's — a
 engine errors propagate as exceptional futures, and a full queue raises
 :class:`~repro.launch.serve.ServerOverloaded` synchronously at ``extend``
 time (backpressure applies to deltas like any submit).
+
+Crash safety: open a session with a :class:`SessionJournal` and every
+COMMITTED delta's raw input (the float32 rows / the index array, exactly as
+given) is appended to an atomic on-disk journal (one checkpoint step per
+delta, riding ``repro/ckpt/checkpoint.py``'s tmp + os.replace discipline).
+After a crash, :func:`restore_sessions` replays each journaled stream
+through a fresh server's REAL ``extend`` path — re-preprocessing the raw
+inputs identically — so the restored sessions' state (stream, active set,
+selection, churn accounting) is bit-identical to the lost server's.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import os
 import threading
 import time
 from concurrent.futures import Future
@@ -70,16 +81,19 @@ from repro.core.functions.graph_cut import GraphCut
 from repro.core.functions.set_cover import ProbabilisticSetCover, SetCover
 from repro.core.optimizers.spec import SelectionSpec
 from repro.core.sources import DenseSource, FeatureSource
+from repro.launch import faults
 from repro.launch.async_serve import AsyncSelectionServer
 
 __all__ = [
     "SelectionSession",
     "SessionClosed",
+    "SessionJournal",
     "SessionUpdate",
     "register_feature_extender",
     "register_restrictor",
     "resolve_extender",
     "resolve_restrictor",
+    "restore_sessions",
 ]
 
 
@@ -309,6 +323,129 @@ def _restrict_psc(fn: ProbabilisticSetCover, active) -> ProbabilisticSetCover:
 
 
 # ---------------------------------------------------------------------------
+# Crash-safe journaling
+# ---------------------------------------------------------------------------
+
+
+class SessionJournal:
+    """Append-only on-disk journal of session deltas.
+
+    Layout: ``root/<sid>/step_<seq>/`` — one checkpoint step per committed
+    delta, written through :mod:`repro.ckpt.checkpoint`'s atomic
+    tmp + ``os.replace`` discipline, so a crash mid-append never corrupts
+    an already-journaled delta.  What is journaled is the delta's RAW input
+    (the float32 feature rows, or the index array exactly as the client
+    gave it), NOT the preprocessed function state: replay re-runs the real
+    ``extend`` path, so restored state is bit-identical by construction
+    rather than by trusting a serialized snapshot.
+    """
+
+    def __init__(self, root: str):
+        self.root = str(root)
+        os.makedirs(self.root, exist_ok=True)
+
+    def append(self, sid: str, seq: int, mode: str, payload) -> None:
+        """Journal one committed delta (``seq`` is the session's 1-based
+        delta ordinal)."""
+        from repro.ckpt import checkpoint
+
+        checkpoint.save(
+            os.path.join(self.root, sid),
+            seq,
+            {"payload": np.asarray(payload)},
+            meta={"sid": sid, "seq": int(seq), "mode": mode},
+            keep_last=10**9,  # a journal never prunes
+        )
+
+    def sessions(self) -> list[str]:
+        """Session ids with at least one journaled delta, sorted."""
+        try:
+            names = os.listdir(self.root)
+        except FileNotFoundError:
+            return []
+        out = []
+        for name in sorted(names):
+            sid_dir = os.path.join(self.root, name)
+            if os.path.isdir(sid_dir) and any(
+                d.startswith("step_") and not d.endswith(".tmp")
+                for d in os.listdir(sid_dir)
+            ):
+                out.append(name)
+        return out
+
+    def deltas(self, sid: str) -> list[dict]:
+        """The session's journaled deltas in commit order:
+        ``[{"seq", "mode", "payload"}, ...]``."""
+        from repro.ckpt import checkpoint
+
+        sid_dir = os.path.join(self.root, sid)
+        if not os.path.isdir(sid_dir):
+            return []
+        seqs = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(sid_dir)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        out = []
+        for seq in seqs:
+            tree, meta = checkpoint.restore(sid_dir, {"payload": 0}, step=seq)
+            out.append(
+                {
+                    "seq": int(meta["seq"]),
+                    "mode": meta["mode"],
+                    "payload": np.asarray(tree["payload"]),
+                }
+            )
+        return out
+
+
+def restore_sessions(server, journal: SessionJournal, specs: dict) -> dict:
+    """Rebuild every journaled session on a fresh ``server`` by replaying
+    each stream through the REAL ``extend`` path.
+
+    ``specs`` maps sid -> the base :class:`SelectionSpec` the session was
+    opened around (specs hold live function objects, so the journal cannot
+    reconstruct them itself; persist them with ``spec.to_dict()`` /
+    ``from_dict`` or rebuild from your own config).  Returns
+    ``{sid: SelectionSession}`` — each replayed to the exact state the lost
+    server held: same stream, same selection (ids / gains / n_evals), same
+    ``seq``.  Replayed deltas are NOT re-journaled (the journal already has
+    them) and do not consult fault plans — recovery itself is not a fault
+    boundary.
+    """
+    restored: dict = {}
+    for sid in journal.sessions():
+        if sid not in specs:
+            raise KeyError(
+                f"journal has session {sid!r} but specs= does not; pass its "
+                f"base SelectionSpec to replay it"
+            )
+        session = SelectionSession(server, specs[sid], sid=sid, journal=journal)
+        session._replaying = True
+        try:
+            with faults.suspended():  # recovery is not a fault boundary
+                for delta in journal.deltas(sid):
+                    if delta["seq"] != session._seq + 1:
+                        raise RuntimeError(
+                            f"journal for session {sid!r} is not contiguous: "
+                            f"expected seq {session._seq + 1}, got {delta['seq']}"
+                        )
+                    kw = (
+                        {"features": delta["payload"]}
+                        if delta["mode"] == "features"
+                        else {"indices": delta["payload"]}
+                    )
+                    upd = session.extend(**kw)
+                    if isinstance(upd, Future):  # async: force the wave now
+                        server.flush_now()
+                        upd.result()
+        finally:
+            session._replaying = False
+        restored[sid] = session
+    return restored
+
+
+# ---------------------------------------------------------------------------
 # The session
 # ---------------------------------------------------------------------------
 
@@ -321,13 +458,36 @@ class SelectionSession:
     the accumulated stream and submits under one lock, so concurrent
     extends serialize into a well-defined stream.  Async completions
     (churn bookkeeping) take the same lock.
+
+    ``sid`` names the session (auto-generated when omitted); with a
+    ``journal``, every committed delta's raw input is appended under that
+    sid so :func:`restore_sessions` can replay the session after a crash.
+    A delta is journaled when it COMMITS (enqueued into the server), before
+    its dispatch resolves — a delta whose dispatch later fails stays both
+    committed and journaled, matching the stream semantics (the failed
+    extend raised, but the stream already advanced; replay reproduces that
+    state exactly).
     """
 
-    def __init__(self, server, spec: SelectionSpec):
+    _SID_COUNTER = itertools.count()
+
+    def __init__(
+        self,
+        server,
+        spec: SelectionSpec,
+        *,
+        sid: str | None = None,
+        journal: "SessionJournal | None" = None,
+    ):
         if not isinstance(spec, SelectionSpec):
             raise TypeError(
                 f"open_session() takes a SelectionSpec, got {type(spec).__name__!r}"
             )
+        self.sid = (
+            sid if sid is not None else f"s{next(SelectionSession._SID_COUNTER)}"
+        )
+        self._journal = journal
+        self._replaying = False  # restore_sessions: suppress re-journaling
         self._server = server
         self._async = isinstance(server, AsyncSelectionServer)
         self._metrics = server.metrics
@@ -379,6 +539,16 @@ class SelectionSession:
                     f"session is in {self._mode!r} mode; extend() cannot "
                     f"switch to {want!r} deltas"
                 )
+            # the "session-extend" fault boundary: fires BEFORE the delta is
+            # built, so an injected fault leaves the stream untouched (the
+            # retryable position — the client re-extends)
+            faults.check(
+                "session-extend",
+                session=self.sid,
+                seq=self._seq + 1,
+                mode=want,
+                family=type(self._spec.fn).__name__,
+            )
             # build the delta WITHOUT committing, submit, then commit — so a
             # failed extend (unsupported family, ServerOverloaded) leaves the
             # stream untouched and a retry cannot double-append the delta
@@ -393,8 +563,9 @@ class SelectionSession:
                 active = None
                 n_total = int(fn.n)
             else:
+                raw_idx = np.asarray(indices, np.int64).reshape(-1)
                 fresh = []
-                for i in np.asarray(indices).reshape(-1):
+                for i in raw_idx:
                     i = int(i)
                     if not 0 <= i < self._spec.fn.n:
                         raise ValueError(
@@ -420,6 +591,7 @@ class SelectionSession:
                 stopIfNegativeGain=self._spec.stop_if_negative,
                 use_kernel=self._spec.use_kernel,
                 deadline_s=self._spec.deadline_s,
+                retry=self._spec.retry,  # deltas inherit the session's policy
             )
             if self._async:
                 inner = self._server.submit(spec)  # may raise ServerOverloaded
@@ -434,10 +606,28 @@ class SelectionSession:
                 self._seen.update(fresh)
                 self._active.extend(fresh)
             seq = self._seq = self._seq + 1
+            if self._journal is not None and not self._replaying:
+                # journal the committed delta's RAW input — replay will
+                # re-preprocess it through this same extend path
+                self._journal.append(
+                    self.sid, seq, want, rows if want == "features" else raw_idx
+                )
         if not self._async:
             out = self._server.flush()
-            resp = out.pop(rid)
+            resp = out.pop(rid, None)
             self._server.hold_undelivered(out)  # co-travellers' answers
+            if resp is None:
+                # resilient flush: the delta exhausted its retries and
+                # resolved to a typed failure instead of a response
+                fails = self._server.take_failures()
+                err = fails.pop(rid, None)
+                if fails:
+                    self._server.hold_failures(fails)  # not ours to consume
+                if err is None:
+                    raise KeyError(
+                        f"flush returned no response for session delta {rid!r}"
+                    )
+                raise err
             return self._absorb(resp, seq, n_total, n_delta, active, t0)
 
         out: Future = Future()

@@ -6,6 +6,7 @@ pinned bit-identical to sequential ``solve(spec)`` — the same contract the
 synchronous server carries.
 """
 import asyncio
+import threading
 import time
 import warnings
 
@@ -448,3 +449,50 @@ def test_session_extend_hits_backpressure_and_recovers(rng):
     direct = solve(SelectionSpec(FeatureBased.from_features(full),
                                  spec.budget))
     _same(direct, upd.response)
+
+
+def test_close_joins_worker_before_final_drain(rng):
+    """Regression: close(flush=True) used to drain while an in-flight
+    _execute was still running on the worker thread. If that execute then
+    failed its wave, _complete_partial reinstated requests AFTER close's
+    final drain had already run — stranding their futures forever. close()
+    must join the worker FIRST, then drain, so the final drain sees every
+    requeued request."""
+    from repro.core import GraphCut
+
+    class Boom(RuntimeError):
+        pass
+
+    started = threading.Event()
+    release = threading.Event()
+
+    class BlockingPoison(SelectionServer):
+        def _dispatch(self, wave):
+            if wave.n_bucket == 64:
+                started.set()
+                assert release.wait(timeout=60)
+                raise Boom("poisoned wave")
+            return super()._dispatch(wave)
+
+    fl = _spec(rng, n=64)
+    x = rng.normal(size=(24, 8)).astype(np.float32)
+    S = np.asarray(create_kernel(x, metric="euclidean"))
+    gc = SelectionSpec(GraphCut.from_kernel(S, lam=0.3), 4)
+
+    server = AsyncSelectionServer(BlockingPoison(), max_pending=100,
+                                  flush_interval=0.01)
+    fut_fl = server.submit(fl)
+    assert started.wait(timeout=60)  # worker is inside _execute now
+    fut_gc = server.submit(gc)  # queued behind the in-flight wave
+
+    closer = threading.Thread(target=server.close)  # flush=True
+    closer.start()
+    while not server._closed:  # close() has signalled shutdown...
+        time.sleep(0.001)
+    release.set()  # ...and only now may the in-flight execute fail
+    closer.join(timeout=60)
+    assert not closer.is_alive()
+
+    with pytest.raises(Boom):
+        fut_fl.result(timeout=60)  # poisoned: typed failure, not stranded
+    _same(solve(gc), fut_gc.result(timeout=60))  # survivor: served by close

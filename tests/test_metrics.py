@@ -64,11 +64,17 @@ def test_server_metrics_snapshot_schema():
                      deadline_missed=True)
     m.inc("rejections")
     m.observe_delta(0.25, churn=3)
+    m.set_breaker("FacilityLocation/kernel", "open")
     snap = m.snapshot()
     assert set(snap) == {
-        "counters", "queue_s", "wave_s", "queue_depth", "delta_s", "groups",
+        "counters", "queue_s", "wave_s", "queue_depth", "delta_s",
+        "breakers", "groups",
     }
+    assert snap["breakers"] == {"FacilityLocation/kernel": "open"}
     c = snap["counters"]
+    assert c["retries_total"] == 0
+    assert c["fallbacks_total"] == 0
+    assert c["quarantined_total"] == 0
     assert c["requests"] == 2 and c["waves"] == 1
     assert c["slots"] == 4 and c["padded_slots"] == 2
     assert c["rejections"] == 1 and c["deadline_misses"] == 1

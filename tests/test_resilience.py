@@ -1,0 +1,539 @@
+"""Fault-tolerant serving: injection, retry/backoff, fallback, crash-safe
+sessions.
+
+The contract under test (ISSUE: robustness tentpole):
+
+- every submitted rid resolves to EXACTLY ONE response or one typed
+  ``RequestFailed`` — never silently dropped, never double-delivered —
+  under every fault class the :mod:`repro.launch.faults` harness can arm;
+- recovered selections are bit-identical (ids / gains / n_evals) to
+  sequential ``solve()`` — retries, backend fallback, and single-device
+  fallback change WHERE the work runs, never what it returns;
+- one poison request can never re-poison its group: co-travellers survive
+  via singleton-wave isolation, the poison quarantines typed;
+- journaled sessions replay to bit-identical state on a fresh server.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FacilityLocation,
+    FeatureBased,
+    GraphCut,
+    SelectionSpec,
+    create_kernel,
+    solve,
+)
+from repro.launch import faults
+from repro.launch.async_serve import AsyncSelectionServer
+from repro.launch.faults import FaultPlan, FaultSpec, InjectedFault
+from repro.launch.resilience import (
+    SINGLE_ATTEMPT,
+    BreakerBoard,
+    CircuitBreaker,
+    RequestFailed,
+    RetryPolicy,
+)
+from repro.launch.serve import SelectionServer
+from repro.launch.sessions import SessionJournal, restore_sessions
+
+# no-backoff policy: fault-matrix cells retry instantly, tests stay fast
+POLICY = RetryPolicy(max_attempts=3, backoff_s=0.0, jitter=0.0)
+
+
+def _fl_spec(rng, n=32, budget=4, use_kernel=False):
+    x = rng.normal(size=(n, 8)).astype(np.float32)
+    S = np.asarray(create_kernel(x, metric="euclidean"))
+    return SelectionSpec(FacilityLocation.from_kernel(S, use_kernel=use_kernel), budget)
+
+
+def _same(seq, resp):
+    got = resp.result
+    assert list(np.asarray(seq.order)) == list(np.asarray(got.order))
+    np.testing.assert_array_equal(np.asarray(seq.gains), np.asarray(got.gains))
+    assert int(seq.n_evals) == int(got.n_evals)
+
+
+def _mesh1x1():
+    import jax
+
+    return jax.make_mesh((1, 1), ("batch", "data"))
+
+
+# ---------------------------------------------------------------------------
+# faults.py units: addressing, budgets, determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="site"):
+        FaultSpec(site="nope")
+    with pytest.raises(ValueError, match="times"):
+        FaultSpec(site="dispatch", times=0)
+    with pytest.raises(ValueError, match="rate"):
+        FaultSpec(site="dispatch", rate=1.5)
+    with pytest.raises(ValueError, match="after"):
+        FaultSpec(site="dispatch", after=-1)
+    with pytest.raises(ValueError, match="delay_s"):
+        FaultSpec(site="dispatch", delay_s=-0.1)
+
+
+def test_fault_spec_addressing():
+    fs = FaultSpec(site="dispatch", family="FacilityLocation", backend="pallas-*")
+    assert fs.matches("dispatch", {"family": "FacilityLocation", "backend": "pallas-fl"})
+    assert not fs.matches("dispatch", {"family": "GraphCut", "backend": "pallas-fl"})
+    assert not fs.matches("dispatch", {"family": "FacilityLocation", "backend": "xla"})
+    assert not fs.matches("kernel", {"family": "FacilityLocation", "backend": "pallas-fl"})
+    rid = FaultSpec(site="dispatch", rid=7)
+    assert rid.matches("dispatch", {"rids": (3, 7)})
+    assert not rid.matches("dispatch", {"rids": (3, 4)})
+    mesh = FaultSpec(site="dispatch", mesh=True)
+    assert mesh.matches("dispatch", {"mesh": True})
+    assert not mesh.matches("dispatch", {"mesh": False})
+
+
+def test_fault_plan_times_after_budgets():
+    plan = FaultPlan([FaultSpec(site="dispatch", times=2, after=1)])
+    fired = [plan.fires("dispatch", {}) is not None for _ in range(5)]
+    assert fired == [False, True, True, False, False]  # skip 1, fire 2, stop
+    assert plan.counts() == [{"site": "dispatch", "matched": 5, "fired": 2}]
+
+
+def test_fault_plan_rate_is_seeded_deterministic():
+    draws = []
+    for _ in range(2):
+        plan = FaultPlan([FaultSpec(site="dispatch", times=None, rate=0.5)], seed=7)
+        draws.append([plan.fires("dispatch", {}) is not None for _ in range(32)])
+    assert draws[0] == draws[1]
+    assert any(draws[0]) and not all(draws[0])
+
+
+def test_inject_raises_only_while_armed_and_suspends():
+    faults.check("dispatch")  # unarmed: no-op
+    plan = FaultPlan([FaultSpec(site="dispatch", times=None)])
+    with faults.inject(plan):
+        with faults.suspended():
+            faults.check("dispatch")  # suspended: no-op, budget untouched
+        with pytest.raises(InjectedFault) as ei:
+            faults.check("dispatch", family="X")
+        assert ei.value.site == "dispatch" and ei.value.attrs["family"] == "X"
+    faults.check("dispatch")  # disarmed again
+    assert plan.counts()[0]["fired"] == 1
+
+
+# ---------------------------------------------------------------------------
+# resilience.py units: policy, backoff, breakers
+# ---------------------------------------------------------------------------
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError, match="backoff_mult"):
+        RetryPolicy(backoff_mult=0.5)
+    with pytest.raises(ValueError, match="jitter"):
+        RetryPolicy(jitter=2.0)
+    with pytest.raises(ValueError, match="timeout_s"):
+        RetryPolicy(timeout_s=0.0)
+    assert SINGLE_ATTEMPT.max_attempts == 1
+
+
+def test_backoff_schedule_and_deterministic_jitter():
+    p = RetryPolicy(backoff_s=0.01, backoff_mult=2.0, max_backoff_s=0.05, jitter=0.0)
+    assert p.backoff(1) == pytest.approx(0.01)
+    assert p.backoff(2) == pytest.approx(0.02)
+    assert p.backoff(10) == pytest.approx(0.05)  # capped
+    j = RetryPolicy(backoff_s=0.01, jitter=0.5)
+    a, b = j.backoff(2, seed="rid-9"), j.backoff(2, seed="rid-9")
+    assert a == b  # same (seed, attempt) -> same jitter, rerun-reproducible
+    assert j.backoff(2, seed="rid-9") != j.backoff(2, seed="rid-10")
+    assert 0.01 <= a <= 0.03 or 0.005 <= a <= 0.03
+
+
+def test_retry_policy_rides_spec_round_trip(rng):
+    pol = RetryPolicy(max_attempts=5, timeout_s=2.0)
+    spec = _fl_spec(rng)
+    with_retry = SelectionSpec(spec.fn, spec.budget, retry=pol)
+    assert with_retry.retry == pol
+    assert with_retry.static_key != spec.static_key  # retry is spec identity
+    back = SelectionSpec.from_dict(with_retry.to_dict())
+    assert back.retry == pol
+
+
+def test_circuit_breaker_transitions():
+    clock = [0.0]
+    br = CircuitBreaker(threshold=2, cooldown_s=10.0, clock=lambda: clock[0])
+    assert br.allow() and br.state == "closed"
+    br.record_failure()
+    assert br.state == "closed"  # below threshold
+    br.record_failure()
+    assert br.state == "open" and not br.allow()
+    clock[0] = 11.0
+    assert br.allow() and br.state == "half_open"  # probe passes
+    br.record_failure()
+    assert br.state == "open"  # failed probe: fresh cooldown
+    clock[0] = 22.0
+    assert br.allow()
+    br.record_success()
+    assert br.state == "closed" and br.allow()
+
+
+def test_breaker_board_labels_and_listener():
+    seen = []
+    board = BreakerBoard(threshold=1, cooldown_s=600.0)
+    board.bind(lambda label, state: seen.append((label, state)))
+    key = ("FacilityLocation", "kernel")
+    assert board.allow(key)
+    board.record_failure(key)
+    assert not board.allow(key)
+    assert seen == [("FacilityLocation/kernel", "open")]
+    assert board.states() == {"FacilityLocation/kernel": "open"}
+
+
+# ---------------------------------------------------------------------------
+# The fault matrix: every fault class x {sync, async, session} x on/off mesh.
+# A transient (times=1) fault at each boundary; every rid must resolve to
+# exactly one response, bit-identical to sequential solve().
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mesh_on", [False, True], ids=["nomesh", "mesh1x1"])
+@pytest.mark.parametrize("route", ["sync", "async", "session"])
+@pytest.mark.parametrize("site", ["dispatch", "padder", "kernel"])
+def test_fault_matrix_every_rid_resolves_bit_identical(rng, site, route, mesh_on):
+    use_kernel = site == "kernel"  # the kernel boundary needs a fused backend
+    specs = [
+        _fl_spec(rng, n=32, budget=4, use_kernel=use_kernel),
+        _fl_spec(rng, n=32, budget=3, use_kernel=use_kernel),
+    ]
+    expected = [solve(s) for s in specs]  # outside the armed plan
+    mesh = _mesh1x1() if mesh_on else None
+    server = SelectionServer(mesh=mesh, retry_policy=POLICY)
+    plan = FaultPlan([FaultSpec(site=site, times=1)])
+
+    if route == "sync":
+        rids = [server.submit_spec(s) for s in specs]
+        with faults.inject(plan):
+            out = server.flush()
+        assert not server.take_failures()
+        assert sorted(out) == sorted(rids)  # exactly once each
+        for rid, want in zip(rids, expected):
+            _same(want, out[rid])
+    elif route == "async":
+        with AsyncSelectionServer(
+            server, max_pending=100, flush_interval=600.0
+        ) as front:
+            with faults.inject(plan):
+                futures = [front.submit(s) for s in specs]
+                for _ in range(4):  # padder faults need a re-drain round
+                    front.flush_now()
+                    if all(f.done() for f in futures):
+                        break
+                responses = [f.result(timeout=60) for f in futures]
+        for want, resp in zip(expected, responses):
+            _same(want, resp)
+    else:  # session
+        f0 = rng.uniform(0, 1, size=(12, 6)).astype(np.float32)
+        d1 = rng.uniform(0, 1, size=(6, 6)).astype(np.float32)
+        base = SelectionSpec(
+            FeatureBased.from_features(f0, concave="sqrt", use_kernel=use_kernel),
+            5,
+            retry=POLICY,
+        )
+        session = server.open_session(base)
+        with faults.inject(plan):
+            upd = session.extend(features=d1)
+        want = solve(
+            SelectionSpec(
+                FeatureBased.from_features(
+                    np.concatenate([f0, d1]), concave="sqrt", use_kernel=use_kernel
+                ),
+                5,
+            )
+        )
+        assert upd.selection == want.as_list()
+        assert int(upd.result.n_evals) == int(want.n_evals)
+    assert plan.counts()[0]["fired"] == 1  # the fault really hit live code
+    assert server.metrics.counters["flush_errors"] >= 1
+    assert server.metrics.counters["quarantined_total"] == 0
+
+
+@pytest.mark.parametrize("mesh_on", [False, True], ids=["nomesh", "mesh1x1"])
+def test_fault_matrix_session_extend_boundary(rng, mesh_on):
+    """The session-extend fault fires BEFORE the delta is built: the stream
+    is untouched, a client retry absorbs the delta exactly once."""
+    mesh = _mesh1x1() if mesh_on else None
+    server = SelectionServer(mesh=mesh, retry_policy=POLICY)
+    f0 = rng.uniform(0, 1, size=(12, 6)).astype(np.float32)
+    d1 = rng.uniform(0, 1, size=(6, 6)).astype(np.float32)
+    base = SelectionSpec(FeatureBased.from_features(f0, concave="sqrt"), 5)
+    session = server.open_session(base, sid="sx")
+    with faults.inject(FaultPlan([FaultSpec(site="session-extend", session="sx")])):
+        with pytest.raises(InjectedFault):
+            session.extend(features=d1)
+        assert session._seq == 0  # stream untouched: the delta did not commit
+        upd = session.extend(features=d1)  # client retry
+    want = solve(
+        SelectionSpec(
+            FeatureBased.from_features(np.concatenate([f0, d1]), concave="sqrt"), 5
+        )
+    )
+    assert upd.seq == 1 and upd.selection == want.as_list()
+
+
+# ---------------------------------------------------------------------------
+# Quarantine, isolation, fallback, timeout
+# ---------------------------------------------------------------------------
+
+
+def test_poison_quarantined_without_repoisoning_group(rng):
+    """A persistently-failing request fails typed after max_attempts; its
+    co-traveller in the SAME wave still gets its bit-identical answer."""
+    server = SelectionServer(retry_policy=POLICY)
+    sa, sb = _fl_spec(rng), _fl_spec(rng, budget=5)
+    ra, rb = server.submit_spec(sa), server.submit_spec(sb)
+    want_b = solve(sb)
+    with faults.inject(FaultPlan([FaultSpec(site="dispatch", rid=ra, times=None)])):
+        out = server.flush()
+    assert rb in out and ra not in out
+    _same(want_b, out[rb])
+    fails = server.take_failures()
+    assert set(fails) == {ra}
+    err = fails[ra]
+    assert isinstance(err, RequestFailed) and err.reason == "quarantined"
+    assert len(err.attempts) == POLICY.max_attempts  # full history carried
+    assert err.attempts[0]["attempt"] == 1 and "InjectedFault" in err.attempts[0]["error"]
+    assert server.take_failures() == {}  # delivered exactly once
+    assert server.metrics.counters["quarantined_total"] == 1
+
+
+def test_kernel_breaker_trips_pallas_to_xla_fallback(rng):
+    """Persistent kernel faults open the (family, kernel) breaker; dispatch
+    reroutes use_kernel=False and the degraded result is bit-identical."""
+    spec = _fl_spec(rng, use_kernel=True)
+    want = solve(spec)
+    server = SelectionServer(retry_policy=POLICY, breakers=BreakerBoard(threshold=1))
+    rid = server.submit_spec(spec)
+    with faults.inject(
+        FaultPlan([FaultSpec(site="kernel", backend="pallas-*", times=None)])
+    ):
+        out = server.flush()
+    resp = out[rid]
+    _same(want, resp)
+    assert resp.backend == "xla" and resp.degraded == "xla"
+    assert server.breakers.states() == {"FacilityLocation/kernel": "open"}
+    assert server.stats.snapshot()["breakers"] == {"FacilityLocation/kernel": "open"}
+    assert server.stats.summary()["breaker_state"] == {
+        "FacilityLocation/kernel": "open"
+    }
+    assert server.metrics.counters["fallbacks_total"] >= 1
+    assert not server.take_failures()
+
+
+def test_mesh_breaker_trips_to_single_device_fallback(rng):
+    """Persistent dispatch faults ON the mesh open the (family, mesh)
+    breaker; the wave re-dispatches single-device, bit-identical."""
+    spec = _fl_spec(rng)
+    want = solve(spec)
+    server = SelectionServer(
+        mesh=_mesh1x1(), retry_policy=POLICY, breakers=BreakerBoard(threshold=1)
+    )
+    rid = server.submit_spec(spec)
+    with faults.inject(
+        FaultPlan([FaultSpec(site="dispatch", mesh=True, times=None)])
+    ):
+        out = server.flush()
+    resp = out[rid]
+    _same(want, resp)
+    assert resp.degraded == "single-device"
+    assert server.breakers.states()["FacilityLocation/mesh"] == "open"
+    assert not server.take_failures()
+
+
+def test_timeout_s_fails_typed_instead_of_retrying(rng):
+    server = SelectionServer(
+        retry_policy=RetryPolicy(max_attempts=100, backoff_s=0.0, jitter=0.0,
+                                 timeout_s=0.001)
+    )
+    rid = server.submit_spec(_fl_spec(rng))
+    with faults.inject(
+        FaultPlan([FaultSpec(site="dispatch", times=1, delay_s=0.01)])
+    ):
+        out = server.flush()
+    assert rid not in out
+    fails = server.take_failures()
+    assert fails[rid].reason == "timeout"
+    assert len(fails[rid].attempts) == 1  # the budget lapsed, no retry storm
+
+
+def test_legacy_flush_error_contract_without_policy(rng):
+    """No RetryPolicy anywhere: flush() keeps the single-attempt FlushError
+    semantics exactly (the pre-resilience contract other tests pin)."""
+    from repro.launch.serve import FlushError
+
+    server = SelectionServer()
+    rid = server.submit_spec(_fl_spec(rng))
+    with faults.inject(FaultPlan([FaultSpec(site="dispatch", times=1)])):
+        with pytest.raises(FlushError) as ei:
+            server.flush()
+    assert ei.value.failed_rids == [rid]
+    out = server.flush()  # requeued by the failed flush; next one serves it
+    assert rid in out
+
+
+def test_per_request_retry_policy_beats_server_default(rng):
+    """spec.retry wins over the server-wide policy: a 1-attempt spec
+    quarantines immediately while the server default would have retried."""
+    server = SelectionServer(retry_policy=POLICY)
+    spec = SelectionSpec(_fl_spec(rng).fn, 4, retry=SINGLE_ATTEMPT)
+    rid = server.submit_spec(spec)
+    with faults.inject(FaultPlan([FaultSpec(site="dispatch", times=None)])):
+        out = server.flush()
+    assert rid not in out
+    fails = server.take_failures()
+    assert fails[rid].reason == "quarantined" and len(fails[rid].attempts) == 1
+
+
+# ---------------------------------------------------------------------------
+# Async front end: typed failures resolve futures, nothing strands
+# ---------------------------------------------------------------------------
+
+
+def test_async_quarantine_resolves_future_with_typed_error(rng):
+    server = SelectionServer(retry_policy=POLICY)
+    sa, sb = _fl_spec(rng), _fl_spec(rng, budget=5)
+    want_b = solve(sb)
+    with AsyncSelectionServer(server, max_pending=100, flush_interval=600.0) as front:
+        fa = front.submit(sa)
+        fb = front.submit(sb)
+        ra = next(iter([rid for rid, f in front._futures.items() if f is fa]))
+        with faults.inject(
+            FaultPlan([FaultSpec(site="dispatch", rid=ra, times=None)])
+        ):
+            front.flush_now()
+        with pytest.raises(RequestFailed) as ei:
+            fa.result(timeout=60)
+        assert ei.value.reason == "quarantined"
+        _same(want_b, fb.result(timeout=60))  # co-traveller survived
+    assert server.metrics.counters["quarantined_total"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe sessions: journal + restore, bit-identical replay
+# ---------------------------------------------------------------------------
+
+
+def test_session_journal_restore_bit_identical_features(rng, tmp_path):
+    journal = SessionJournal(tmp_path / "journal")
+    f0 = rng.uniform(0, 1, size=(16, 12)).astype(np.float32)
+    spec = SelectionSpec(FeatureBased.from_features(f0, concave="sqrt"), 5)
+    server = SelectionServer()
+    session = server.open_session(spec, sid="alpha", journal=journal)
+    for shape in [(8, 12), (4, 12), (2, 12)]:
+        upd = session.extend(
+            features=rng.uniform(0, 1, size=shape).astype(np.float32)
+        )
+    # "crash": a NEW server restores from the journal alone (plus base spec)
+    server2 = SelectionServer()
+    restored = restore_sessions(server2, journal, {"alpha": spec})
+    r = restored["alpha"]
+    assert r.sid == "alpha" and r._seq == 3 and r.mode == "features"
+    assert r.last_update.selection == upd.selection
+    assert int(r.last_update.result.n_evals) == int(upd.result.n_evals)
+    assert r.deltas_absorbed == 3 and r.churn_total == session.churn_total
+    # a post-restore delta journals as step 4 and matches a direct solve
+    d4 = rng.uniform(0, 1, size=(3, 12)).astype(np.float32)
+    u4 = r.extend(features=d4)
+    assert [d["seq"] for d in journal.deltas("alpha")] == [1, 2, 3, 4]
+    assert u4.seq == 4
+
+
+def test_session_journal_restore_indices_mode(rng, tmp_path):
+    journal = SessionJournal(tmp_path / "journal")
+    x = rng.normal(size=(24, 8)).astype(np.float32)
+    S = np.asarray(create_kernel(x, metric="euclidean"))
+    spec = SelectionSpec(FacilityLocation.from_kernel(S), 4)
+    server = SelectionServer()
+    session = server.open_session(spec, sid="idx", journal=journal)
+    session.extend(indices=[3, 1, 8, 3])  # dup journaled raw, dedup on replay
+    upd = session.extend(indices=[5, 2, 19, 11])
+    server2 = SelectionServer()
+    r = restore_sessions(server2, journal, {"idx": spec})["idx"]
+    assert r.mode == "indices" and r._active == session._active
+    assert r.last_update.selection == upd.selection
+
+
+def test_restore_sessions_requires_base_spec(rng, tmp_path):
+    journal = SessionJournal(tmp_path / "journal")
+    f0 = rng.uniform(0, 1, size=(8, 4)).astype(np.float32)
+    spec = SelectionSpec(FeatureBased.from_features(f0), 3)
+    server = SelectionServer()
+    server.open_session(spec, sid="orphan", journal=journal).extend(
+        features=rng.uniform(0, 1, size=(2, 4)).astype(np.float32)
+    )
+    with pytest.raises(KeyError, match="orphan"):
+        restore_sessions(SelectionServer(), journal, {})
+
+
+def test_journal_append_is_atomic_against_partial_step(rng, tmp_path):
+    """A torn write (leftover .tmp dir from a crash mid-append) is invisible
+    to replay: only published steps count."""
+    journal = SessionJournal(tmp_path / "journal")
+    f0 = rng.uniform(0, 1, size=(8, 4)).astype(np.float32)
+    spec = SelectionSpec(FeatureBased.from_features(f0), 3)
+    server = SelectionServer()
+    s = server.open_session(spec, sid="torn", journal=journal)
+    s.extend(features=rng.uniform(0, 1, size=(2, 4)).astype(np.float32))
+    # simulate a crash mid-append of delta 2
+    (tmp_path / "journal" / "torn" / "step_0000000002.tmp").mkdir()
+    assert [d["seq"] for d in journal.deltas("torn")] == [1]
+    r = restore_sessions(SelectionServer(), journal, {"torn": spec})["torn"]
+    assert r._seq == 1
+
+
+# ---------------------------------------------------------------------------
+# Metrics: decorrelated reservoirs, resilience counters
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_reservoirs_are_decorrelated_per_metric():
+    """Identical streams into two ServerMetrics histograms must not retain
+    identical samples (the shared-seed bug: every reservoir evicted the
+    same slots on the same ticks)."""
+    from repro.launch.metrics import ServerMetrics
+
+    m = ServerMetrics(reservoir_size=8)
+    for v in range(512):
+        m.queue_s.record(float(v))
+        m.wave_s.record(float(v))
+    a = sorted(m.queue_s._reservoir._sample)
+    b = sorted(m.wave_s._reservoir._sample)
+    assert a != b
+    # ...and reproducible: a fresh server retains the exact same samples
+    m2 = ServerMetrics(reservoir_size=8)
+    for v in range(512):
+        m2.queue_s.record(float(v))
+    assert sorted(m2.queue_s._reservoir._sample) == a
+
+
+def test_resilience_counters_have_stable_keys(rng):
+    server = SelectionServer(retry_policy=POLICY)
+    rid = server.submit_spec(_fl_spec(rng))
+    with faults.inject(FaultPlan([FaultSpec(site="dispatch", times=1)])):
+        out = server.flush()
+    assert rid in out and out[rid].attempts == 2
+    snap = server.stats.snapshot()
+    for key in ("retries_total", "fallbacks_total", "quarantined_total"):
+        assert key in snap["counters"]
+    assert snap["counters"]["retries_total"] == 1
+    summary = server.stats.summary()
+    for key in (
+        "retries_total",
+        "fallbacks_total",
+        "quarantined_total",
+        "breaker_state",
+    ):
+        assert key in summary

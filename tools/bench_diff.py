@@ -11,6 +11,10 @@ throughput-style metrics are compared and a drop of more than
 - higher-is-better metrics: ``qps`` / ``*_qps``, ``*_speedup``
 - lower-is-better metrics:  ``*_ms`` / ``wave_ms``
 
+Resilience counters (``*_total``, from ``benchmarks/chaos_bench.py``) are
+deterministic by construction — seeded fault plans against a sync server —
+so they compare exactly, like eval counts.
+
 Eval *counts* and ``*_bytes`` memory footprints are compared exactly (they
 are hardware-independent: a change means the algorithm or its memory shape
 changed, not the machine) but reported as NOTEs, not regressions —
@@ -46,6 +50,8 @@ def _metric_kind(name: str) -> str | None:
         return "exact"
     if name.endswith("_bytes"):
         return "exact"  # analytic memory footprints, hardware-independent
+    if name.endswith("_total"):
+        return "exact"  # resilience counters: deterministic by construction
     return None
 
 
