@@ -28,13 +28,17 @@
 #   make shims-check assert no internal caller uses the deprecated entry
 #                    points (maximize/batched_maximize/legacy submit) —
 #                    everything internal routes through SelectionSpec/solve
+#   make lint        repro-lint: the rule-registry static-analysis pass
+#                    (AST rules + jaxpr audit + registry drift; see
+#                    docs/linting.md) — suppress with
+#                    `# lint: ok(RULE-ID): reason`
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test-fast test-all bench bench-batched bench-serve bench-diff serve-smoke scale-smoke stream-smoke chaos-smoke docs-check shims-check
+.PHONY: verify test-fast test-all bench bench-batched bench-serve bench-diff serve-smoke scale-smoke stream-smoke chaos-smoke docs-check shims-check lint
 
-verify: test-fast docs-check shims-check serve-smoke scale-smoke stream-smoke chaos-smoke
+verify: test-fast docs-check shims-check lint serve-smoke scale-smoke stream-smoke chaos-smoke
 
 test-fast:
 	$(PYTHON) -m pytest -x -q
@@ -99,3 +103,6 @@ docs-check:
 
 shims-check:
 	$(PYTHON) tools/check_shims.py
+
+lint:
+	JAX_PLATFORMS=cpu $(PYTHON) -m tools.lint

@@ -47,7 +47,7 @@ def gc_gains_ref(
     selsum_j = sum_k S_jk * m_k;  sim (n, n), selmask/total (n,) -> (n,)
     """
     s32 = sim.astype(jnp.float32)
-    selsum = s32 @ selmask.astype(jnp.float32)
+    selsum = (s32 * selmask.astype(jnp.float32)[None, :]).sum(axis=-1)
     diag = jnp.diagonal(s32)
     return total.astype(jnp.float32) - jnp.asarray(lam, jnp.float32) * (
         2.0 * selsum + diag
@@ -171,7 +171,7 @@ def gcmf_gains_ref(
     """
     sim = similarity_ref(y, y, metric, rbf_sigma)
     s32 = sim.astype(jnp.float32)
-    selsum = s32 @ selmask.astype(jnp.float32)
+    selsum = (s32 * selmask.astype(jnp.float32)[None, :]).sum(axis=-1)
     dg = jnp.diagonal(s32) if diag is None else diag.astype(jnp.float32)
     return total.astype(jnp.float32) - jnp.asarray(lam, jnp.float32) * (
         2.0 * selsum + dg

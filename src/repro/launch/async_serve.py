@@ -85,6 +85,11 @@ class AsyncSelectionServer:
         ``SelectionServer`` when ``server`` is None.
     """
 
+    # the two-lock protocol: _cv guards the queues + futures map ONLY;
+    # engine dispatch runs under _dispatch_lock with _cv released so new
+    # submits never block behind a running wave (enforced by lint LOCKDISC)
+    _GUARDED_BY = {"_futures": "_cv", "_closed": "_cv"}
+
     def __init__(
         self,
         server: SelectionServer | None = None,

@@ -226,13 +226,13 @@ def build_selection_step(
 
 
 def _compile_once(fn, args, shardings, donate, mesh, policy="fsdp"):
-    t0 = time.time()
+    t0 = time.monotonic()
     with activation_sharding(mesh, policy=policy), jax.sharding.set_mesh(mesh):
         jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
         lowered = jitted.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.monotonic() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.monotonic() - t0 - t_lower
     return compiled, t_lower, t_compile
 
 

@@ -154,6 +154,8 @@ class FaultPlan:
     same deterministic sequence a single-threaded run would (per spec).
     """
 
+    _GUARDED_BY = {"_matched": "_lock", "_fired": "_lock", "_rng": "_lock"}
+
     def __init__(self, specs, seed: int = 0):
         self.specs = [
             s if isinstance(s, FaultSpec) else FaultSpec(**s) for s in specs

@@ -179,6 +179,16 @@ class _GroupMetrics:
 class ServerMetrics:
     """The serving stack's metric tree (see module docstring for schema)."""
 
+    _GUARDED_BY = {
+        "counters": "_lock",
+        "queue_s": "_lock",
+        "wave_s": "_lock",
+        "queue_depth": "_lock",
+        "delta_s": "_lock",
+        "groups": "_lock",
+        "breaker_states": "_lock",
+    }
+
     def __init__(self, reservoir_size: int = 512):
         self._reservoir_size = int(reservoir_size)
         self._lock = threading.Lock()
@@ -196,7 +206,7 @@ class ServerMetrics:
         with self._lock:
             self.counters[name] = self.counters.get(name, 0) + by
 
-    def _group(self, label: str) -> _GroupMetrics:
+    def _group_locked(self, label: str) -> _GroupMetrics:
         g = self.groups.get(label)
         if g is None:
             g = self.groups[label] = _GroupMetrics(self._reservoir_size, label)
@@ -214,7 +224,7 @@ class ServerMetrics:
         batching-pressure signal)."""
         with self._lock:
             self.queue_depth.record(depth)
-            self._group(label)  # the group exists from first admission
+            self._group_locked(label)  # the group exists from first admission
 
     def observe_wave(
         self,
@@ -232,7 +242,7 @@ class ServerMetrics:
             self.counters["slots"] += slots
             self.counters["padded_slots"] += padded_slots
             self.wave_s.record(wave_s)
-            g = self._group(label)
+            g = self._group_locked(label)
             g.waves += 1
             g.requests += requests
             g.wave_s.record(wave_s)
@@ -244,7 +254,7 @@ class ServerMetrics:
         dispatch began."""
         with self._lock:
             self.queue_s.record(queue_s)
-            self._group(label).queue_s.record(queue_s)
+            self._group_locked(label).queue_s.record(queue_s)
             if deadline_missed:
                 self.counters["deadline_misses"] += 1
 

@@ -168,6 +168,12 @@ class CircuitBreaker:
     "serve degraded instead".
     """
 
+    _GUARDED_BY = {
+        "_state": "_lock",
+        "_failures": "_lock",
+        "_opened_at": "_lock",
+    }
+
     def __init__(
         self,
         threshold: int = 3,
@@ -228,6 +234,11 @@ class BreakerBoard:
     ``ServerMetrics.set_breaker`` so ``snapshot()["breakers"]`` mirrors the
     board.  Labels join tuple keys with ``/``.
     """
+
+    # _listener is deliberately undeclared: bind() happens once at server
+    # construction before any traffic, and firing it outside _lock is what
+    # keeps listener callbacks (metrics) from running under the board lock
+    _GUARDED_BY = {"_breakers": "_lock"}
 
     def __init__(
         self,

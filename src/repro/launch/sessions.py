@@ -469,6 +469,18 @@ class SelectionSession:
     state exactly).
     """
 
+    # the public accounting attrs (deltas_absorbed / churn_total /
+    # last_update) are documented benign-snapshot reads and stay undeclared
+    _GUARDED_BY = {
+        "_mode": "_lock",
+        "_fn": "_lock",
+        "_active": "_lock",
+        "_seen": "_lock",
+        "_prev_ids": "_lock",
+        "_seq": "_lock",
+        "_closed": "_lock",
+    }
+
     _SID_COUNTER = itertools.count()
 
     def __init__(
@@ -509,11 +521,11 @@ class SelectionSession:
 
     @property
     def mode(self) -> str | None:
-        return self._mode
+        return self._mode  # lint: ok(LOCKDISC): benign racy snapshot read for observability
 
     @property
     def closed(self) -> bool:
-        return self._closed
+        return self._closed  # lint: ok(LOCKDISC): benign racy snapshot read for observability
 
     def extend(self, features=None, indices=None):
         """Absorb one delta and re-select over the full stream.

@@ -66,7 +66,7 @@ def run(
     cursor = start_step * batch
     queue: list[int] = []
     losses = []
-    t0 = time.time()
+    t0 = time.monotonic()
     for step in range(start_step, steps):
         if selector and not queue:
             # selection round: embed a pool, pick a representative coreset
@@ -91,13 +91,13 @@ def run(
         state, metrics = step_fn(state, data.batch(idx))
         losses.append(float(metrics["loss"]))
         if (step + 1) % log_every == 0:
-            dt = time.time() - t0
+            dt = time.monotonic() - t0
             print(
                 f"step {step + 1:5d}  loss {losses[-1]:.4f}  "
                 f"gnorm {float(metrics['grad_norm']):.3f}  "
                 f"{dt / log_every:.2f}s/step"
             )
-            t0 = time.time()
+            t0 = time.monotonic()
         if ckpt_dir and (step + 1) % ckpt_every == 0:
             ckpt.save(ckpt_dir, step + 1, state, {"arch": arch})
     return losses

@@ -1,0 +1,601 @@
+"""repro-lint: per-rule positive / negative / pragma fixtures, the
+framework contract (pragmas, baseline, unknown rules), the jaxpr-audit
+library, and the real-tree gates.
+
+Fixture tests run the rules in-process against temp trees (``run_lint``
+accepts any root; rooted rules skip themselves there).  The mutation
+check additionally drives the real CLI in a subprocess — seed one
+violation of each rule into a temp tree and assert ``python -m
+tools.lint`` fails with that RULE-ID — so the exit-code contract the
+Makefile relies on is itself pinned.
+"""
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))
+
+from tools.lint import run_lint  # noqa: E402
+from tools.lint.framework import (  # noqa: E402
+    RULES,
+    SourceFile,
+    Violation,
+    load_baseline,
+    write_baseline,
+)
+
+
+def _write(root: pathlib.Path, rel: str, body: str) -> None:
+    path = root / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(body))
+
+
+def _run(root, rules):
+    report = run_lint(root=root, rule_ids=rules, baseline_path=None)
+    return report.fresh
+
+
+def _ids(violations):
+    return sorted({v.rule for v in violations})
+
+
+# -- seeded-violation / clean / pragma fixtures, one set per rule -------------
+
+# (rule, violating file, clean file) — the two bodies are as close as the
+# rule allows, so each fixture isolates exactly the banned construct
+FIXTURES = {
+    "BITSTAB": (
+        "src/repro/core/functions/fx.py",
+        """
+        def gains(self, state):
+            return self.sim @ state.mask
+        """,
+        """
+        def gains(self, state):
+            return (self.sim * state.mask[None, :]).sum(axis=-1)
+
+        def evaluate(self, state):
+            return self.sim @ state.mask  # objective f(): exempt by design
+        """,
+    ),
+    "NEGMASK": (
+        "src/repro/core/functions/fx.py",
+        """
+        class Rogue:
+            def gains_at(self, state, idx):
+                return state.gains[idx]
+        """,
+        """
+        class SetFunction:
+            pass
+
+        class Fine(SetFunction):
+            def gains_at(self, state, idx):
+                return state.gains[idx]
+        """,
+    ),
+    "LOCKDISC": (
+        "src/repro/launch/fx.py",
+        """
+        import threading
+
+        class Server:
+            _GUARDED_BY = {"_queue": "_lock"}
+
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._queue = []
+
+            def push(self, item):
+                self._queue.append(item)
+        """,
+        """
+        import threading
+
+        class Server:
+            _GUARDED_BY = {"_queue": "_lock"}
+
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._queue = []
+
+            def push(self, item):
+                with self._lock:
+                    self._queue.append(item)
+
+            def _drain_locked(self):
+                return list(self._queue)
+        """,
+    ),
+    "TRACEPURE": (
+        "src/repro/core/fx.py",
+        """
+        import time
+
+        def gains(state):
+            time.sleep(0.1)
+            return state
+        """,
+        """
+        import jax
+
+        def gains(key):
+            return jax.random.uniform(key, (4,))
+        """,
+    ),
+    "WALLCLOCK": (
+        "src/repro/launch/fx.py",
+        """
+        import time
+
+        def step():
+            t0 = time.time()
+            return time.time() - t0
+        """,
+        """
+        import time
+
+        def step():
+            t0 = time.monotonic()
+            return time.monotonic() - t0
+        """,
+    ),
+    "SHIMS": (
+        "src/repro/launch/fx.py",
+        """
+        def run(engine, fn):
+            return engine.maximize(fn, 5)
+        """,
+        """
+        def run(engine, spec):
+            return engine.submit(spec)
+        """,
+    ),
+}
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURES))
+def test_rule_fires_on_violation(tmp_path, rule):
+    rel, bad, _ = FIXTURES[rule]
+    _write(tmp_path, rel, bad)
+    found = _run(tmp_path, [rule])
+    assert _ids(found) == [rule]
+    assert all(v.path == rel for v in found)
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURES))
+def test_rule_passes_clean_tree(tmp_path, rule):
+    rel, _, good = FIXTURES[rule]
+    _write(tmp_path, rel, good)
+    assert _run(tmp_path, [rule]) == []
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURES))
+def test_trailing_pragma_suppresses_line(tmp_path, rule):
+    rel, bad, _ = FIXTURES[rule]
+    lines = textwrap.dedent(bad).splitlines()
+    # find the line the violation fires on, then pragma exactly that line
+    _write(tmp_path, rel, bad)
+    found = _run(tmp_path, [rule])
+    for v in found:
+        lines[v.line - 1] += f"  # lint: ok({rule}): fixture justification"
+    (tmp_path / rel).write_text("\n".join(lines) + "\n")
+    assert _run(tmp_path, [rule]) == []
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURES))
+def test_file_pragma_suppresses_whole_file(tmp_path, rule):
+    rel, bad, _ = FIXTURES[rule]
+    body = f"# lint: ok({rule}): fixture-wide justification\n" + textwrap.dedent(bad)
+    _write(tmp_path, rel, body)
+    assert _run(tmp_path, [rule]) == []
+
+
+def test_pragma_without_reason_does_not_suppress(tmp_path):
+    rel, bad, _ = FIXTURES["WALLCLOCK"]
+    body = "# lint: ok(WALLCLOCK):\n" + textwrap.dedent(bad)
+    _write(tmp_path, rel, body)
+    assert _ids(_run(tmp_path, ["WALLCLOCK"])) == ["WALLCLOCK"]
+
+
+def test_pragma_for_other_rule_does_not_suppress(tmp_path):
+    rel, bad, _ = FIXTURES["WALLCLOCK"]
+    body = "# lint: ok(BITSTAB): wrong rule\n" + textwrap.dedent(bad)
+    _write(tmp_path, rel, body)
+    assert _ids(_run(tmp_path, ["WALLCLOCK"])) == ["WALLCLOCK"]
+
+
+# -- rule-specific edges ------------------------------------------------------
+
+
+def test_bitstab_flags_named_contractions(tmp_path):
+    _write(
+        tmp_path,
+        "src/repro/core/functions/fx.py",
+        """
+        import jax.numpy as jnp
+
+        def gains_at(self, state, idx):
+            return jnp.einsum("ij,j->i", self.sim, state.mask)[idx]
+
+        def update(self, state, j):
+            return jnp.dot(self.sim, state.mask)
+        """,
+    )
+    found = _run(tmp_path, ["BITSTAB"])
+    assert len(found) == 2
+    assert {"einsum" in v.message or "dot" in v.message for v in found} == {True}
+
+
+def test_negmask_flags_posthoc_assignment(tmp_path):
+    _write(
+        tmp_path,
+        "src/repro/core/functions/fx.py",
+        """
+        class SetFunction:
+            pass
+
+        class Fine(SetFunction):
+            pass
+
+        def raw(self, state, idx):
+            return state.gains[idx]
+
+        Fine.gains_at = raw
+        """,
+    )
+    found = _run(tmp_path, ["NEGMASK"])
+    assert len(found) == 1 and "post-hoc" in found[0].message
+
+
+def test_negmask_allows_masked_assignment(tmp_path):
+    _write(
+        tmp_path,
+        "src/repro/core/functions/fx.py",
+        """
+        class SetFunction:
+            pass
+
+        def _mask_negative_idxs(fn):
+            return fn
+
+        class Fine(SetFunction):
+            pass
+
+        def raw(self, state, idx):
+            return state.gains[idx]
+
+        Fine.gains_at = _mask_negative_idxs(raw)
+        """,
+    )
+    assert _run(tmp_path, ["NEGMASK"]) == []
+
+
+def test_lockdisc_flags_undeclared_lock(tmp_path):
+    _write(
+        tmp_path,
+        "src/repro/launch/fx.py",
+        """
+        import threading
+
+        class Bare:
+            def __init__(self):
+                self._cv = threading.Condition()
+        """,
+    )
+    found = _run(tmp_path, ["LOCKDISC"])
+    assert len(found) == 1 and "_GUARDED_BY" in found[0].message
+
+
+def test_lockdisc_two_lock_protocol(tmp_path):
+    """The async_serve shape: holding the WRONG lock is still a violation."""
+    _write(
+        tmp_path,
+        "src/repro/launch/fx.py",
+        """
+        import threading
+
+        class Server:
+            _GUARDED_BY = {"_futures": "_cv"}
+
+            def __init__(self):
+                self._cv = threading.Condition()
+                self._dispatch = threading.Lock()
+                self._futures = {}
+
+            def bad(self, rid):
+                with self._dispatch:
+                    return self._futures.pop(rid)
+        """,
+    )
+    found = _run(tmp_path, ["LOCKDISC"])
+    assert len(found) == 1 and "_futures" in found[0].message
+
+
+def test_tracepure_allows_jax_random_aliases(tmp_path):
+    _write(
+        tmp_path,
+        "src/repro/core/fx.py",
+        """
+        import jax
+        from jax import random
+
+        def gains(key):
+            return random.uniform(key, (4,)) + jax.random.normal(key, (4,))
+        """,
+    )
+    assert _run(tmp_path, ["TRACEPURE"]) == []
+
+
+def test_tracepure_flags_np_random(tmp_path):
+    _write(
+        tmp_path,
+        "src/repro/core/fx.py",
+        """
+        import numpy as np
+
+        def gains(state):
+            return state + np.random.uniform()
+        """,
+    )
+    assert _ids(_run(tmp_path, ["TRACEPURE"])) == ["TRACEPURE"]
+
+
+def test_wallclock_flags_from_import(tmp_path):
+    _write(
+        tmp_path,
+        "src/repro/launch/fx.py",
+        """
+        from time import time
+
+        def step():
+            return time()
+        """,
+    )
+    assert _ids(_run(tmp_path, ["WALLCLOCK"])) == ["WALLCLOCK"]
+
+
+def test_wallclock_dryrun_regression_fixture(tmp_path):
+    """The satellite catch, fossilized: dryrun's old compile/lower timing
+    pattern must keep firing (and its monotonic rewrite must not)."""
+    _write(
+        tmp_path,
+        "src/repro/launch/dryrun_fx.py",
+        """
+        import time
+
+        def _compile_once(jitted, args):
+            t0 = time.time()
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            return compiled, t_lower, t_compile
+        """,
+    )
+    found = _run(tmp_path, ["WALLCLOCK"])
+    assert len(found) == 3
+
+
+def test_shims_legacy_submit_kwargs(tmp_path):
+    _write(
+        tmp_path,
+        "src/repro/launch/fx.py",
+        """
+        def run(server, fn):
+            return server.submit(fn, budget=5, optimizer="NaiveGreedy")
+        """,
+    )
+    assert _ids(_run(tmp_path, ["SHIMS"])) == ["SHIMS"]
+
+
+# -- framework contract -------------------------------------------------------
+
+
+def test_unknown_rule_rejected(tmp_path):
+    with pytest.raises(SystemExit):
+        run_lint(root=tmp_path, rule_ids=["NOPE"], baseline_path=None)
+
+
+def test_rooted_rules_skip_under_custom_root(tmp_path):
+    report = run_lint(root=tmp_path, baseline_path=None)
+    assert set(report.skipped_rules) == {"MATRIX", "JAXPR"}
+    assert not any(RULES[r].rooted for r in report.ran_rules)
+
+
+def test_baseline_partitions_known_violations(tmp_path):
+    rel, bad, _ = FIXTURES["WALLCLOCK"]
+    _write(tmp_path, rel, bad)
+    fresh = _run(tmp_path, ["WALLCLOCK"])
+    assert fresh
+    baseline = tmp_path / "baseline.json"
+    write_baseline(baseline, fresh)
+    report = run_lint(
+        root=tmp_path, rule_ids=["WALLCLOCK"], baseline_path=baseline
+    )
+    assert report.fresh == [] and len(report.baselined) == len(fresh)
+    assert not report.failed
+    assert load_baseline(baseline) == {v.key() for v in fresh}
+
+
+def test_baseline_key_is_line_insensitive():
+    a = Violation("R", "p.py", 10, "msg")
+    b = Violation("R", "p.py", 99, "msg")
+    assert a.key() == b.key()
+
+
+def test_committed_baseline_is_empty():
+    """ISSUE contract: the baseline exists for transitions, and ships
+    empty — launch/ and kernels/ violations were fixed, not parked."""
+    committed = load_baseline(ROOT / "tools" / "lint" / "baseline.json")
+    assert committed == set()
+
+
+def test_sourcefile_pragma_scopes(tmp_path):
+    p = tmp_path / "f.py"
+    p.write_text(
+        "# lint: ok(FILEWIDE): whole file\n"
+        "x = 1  # lint: ok(LINEONLY): just this line\n"
+        "y = 2\n"
+    )
+    sf = SourceFile(p, tmp_path)
+    assert sf.suppressed("FILEWIDE", 3)
+    assert sf.suppressed("LINEONLY", 2)
+    assert not sf.suppressed("LINEONLY", 3)
+
+
+# -- mutation check: the CLI contract, one seeded violation per rule ----------
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURES))
+def test_cli_fails_on_seeded_violation(tmp_path, rule):
+    rel, bad, _ = FIXTURES[rule]
+    _write(tmp_path, rel, bad)
+    proc = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "tools.lint",
+            "--root",
+            str(tmp_path),
+            "--rules",
+            rule,
+            "--baseline",
+            "none",
+        ],
+        cwd=ROOT,
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+    assert proc.returncode == 1, proc.stderr
+    assert rule in proc.stderr and "FAIL" in proc.stderr
+
+
+def test_cli_exit_zero_on_clean_tree(tmp_path):
+    rel, _, good = FIXTURES["WALLCLOCK"]
+    _write(tmp_path, rel, good)
+    proc = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "tools.lint",
+            "--root",
+            str(tmp_path),
+            "--rules",
+            "WALLCLOCK",
+            "--baseline",
+            "none",
+        ],
+        cwd=ROOT,
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+    assert proc.returncode == 0, proc.stderr
+
+
+# -- jaxpr audit library ------------------------------------------------------
+
+
+def test_jaxpr_audit_flags_square_intermediate():
+    import jax
+    import jax.numpy as jnp
+
+    from tools.lint.jaxpr_audit import square_intermediates
+
+    n = 64
+    closed = jax.make_jaxpr(lambda x: (x[:, None] * x[None, :]).sum())(
+        jnp.ones(n)
+    )
+    problems = square_intermediates(closed.jaxpr, n, tile=1)
+    assert problems and "(n, n)" in problems[0]
+
+
+def test_jaxpr_audit_flags_dot_general():
+    import jax
+    import jax.numpy as jnp
+
+    from tools.lint.jaxpr_audit import dot_generals
+
+    closed = jax.make_jaxpr(lambda a, b: a @ b)(
+        jnp.ones((4, 4)), jnp.ones((4, 4))
+    )
+    assert dot_generals(closed.jaxpr)
+
+
+def test_jaxpr_audit_flags_host_callback():
+    import jax
+    import jax.numpy as jnp
+
+    from tools.lint.jaxpr_audit import host_callbacks
+
+    closed = jax.make_jaxpr(
+        lambda x: jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct((), jnp.float32), x
+        )
+    )(jnp.float32(1.0))
+    assert host_callbacks(closed.jaxpr)
+
+
+def test_jaxpr_audit_walks_nested_scan_bodies():
+    import jax
+    import jax.numpy as jnp
+
+    from tools.lint.jaxpr_audit import dot_generals
+
+    def scanned(a, b):
+        def body(c, _):
+            return c @ b, ()
+
+        out, _ = jax.lax.scan(body, a, None, length=3)
+        return out
+
+    closed = jax.make_jaxpr(scanned)(jnp.ones((4, 4)), jnp.ones((4, 4)))
+    assert dot_generals(closed.jaxpr)  # the @ lives inside the scan body
+
+
+def test_jaxpr_audit_manifest_case_clean_small():
+    """One manifest cell traced end-to-end at a small n: the audit itself
+    (not just the helpers) reports clean."""
+    from tools.lint.jaxpr_audit import audit_case, default_manifest
+
+    cases = {c.name: c for c in default_manifest(n=2048)}
+    assert audit_case(cases["flmf-dot-full_sweep"]) == []
+    assert audit_case(cases["gcmf-knn-full_sweep"]) == []
+
+
+def test_jaxpr_audit_full_manifest_at_issue_scale():
+    """The acceptance re-proof: every matrix-free source x metric x
+    optimizer cell in the manifest holds the no-(n,n) ceiling, no-callback
+    and no-dot_general invariants at n = 50_000."""
+    from tools.lint.jaxpr_audit import (
+        N_AUDIT,
+        audit_case,
+        default_manifest,
+    )
+
+    assert N_AUDIT == 50_000
+    cases = default_manifest()
+    assert len(cases) >= 11
+    for case in cases:
+        assert audit_case(case) == [], case.name
+
+
+# -- the real tree ------------------------------------------------------------
+
+
+def test_real_tree_is_lint_clean():
+    """Every AST rule, against the actual repo, with the committed
+    (empty) baseline: zero fresh violations.  This is the same gate
+    ``make lint`` runs pre-merge — a red here means a real regression."""
+    report = run_lint(
+        rule_ids=["BITSTAB", "NEGMASK", "LOCKDISC", "TRACEPURE", "WALLCLOCK", "SHIMS"]
+    )
+    assert report.fresh == [], [v.render() for v in report.fresh]

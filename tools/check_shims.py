@@ -1,91 +1,28 @@
 """Gate: no internal caller uses the deprecated entry-point shims.
 
-The legacy entry points — ``maximize``, ``batched_maximize``,
-``BatchedEngine.maximize``, and the ``SelectionServer.submit(fn, budget,
-...)`` form — are DeprecationWarning shims over the typed front door
-(``SelectionSpec`` / ``solve()``, see docs/api.md).  They exist for users,
-not for us: library code, benchmarks, examples and tools must run on the
-spec API, otherwise the shims never become deletable and the deprecation
-drifts into permanence.
-
-This script AST-scans those trees and fails on:
-
-- any call named ``maximize`` or ``batched_maximize`` (bare, attribute, or
-  method — catches ``engine.maximize(...)`` too);
-- any ``*.submit(...)`` call in the legacy shape: two or more positional
-  arguments, or serving keywords (``budget`` / ``optimizer`` /
-  ``stopIfZeroGain`` / ``stopIfNegativeGain`` / ``screen_k``) — a
-  single-argument ``submit(spec)`` / executor ``submit(fn)`` is fine.
-
-Tests are deliberately NOT scanned: the shim regression tests call the
-legacy forms on purpose.  Run via ``make shims-check`` (part of
-``make verify``).
+Thin alias over the SHIMS lint rule (``tools/lint/ast_rules.py``) so the
+historical ``make shims-check`` entry point keeps working — the scan
+logic, output format, and exit-code contract now live in the lint driver
+(``python -m tools.lint``, see docs/linting.md).  Tests are deliberately
+NOT scanned: the shim regression tests call the legacy forms on purpose.
 """
 from __future__ import annotations
 
-import ast
 import pathlib
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
-SCAN_TREES = ("src/repro", "benchmarks", "examples", "tools")
-
-LEGACY_NAMES = {"maximize", "batched_maximize"}
-LEGACY_SUBMIT_KWARGS = {
-    "budget",
-    "optimizer",
-    "stopIfZeroGain",
-    "stopIfNegativeGain",
-    "screen_k",
-}
-
-
-def _call_name(node: ast.Call) -> str | None:
-    f = node.func
-    if isinstance(f, ast.Name):
-        return f.id
-    if isinstance(f, ast.Attribute):
-        return f.attr
-    return None
-
-
-def _violations(path: pathlib.Path) -> list[str]:
-    tree = ast.parse(path.read_text(), filename=str(path))
-    out = []
-    rel = path.relative_to(ROOT)
-    for node in ast.walk(tree):
-        if not isinstance(node, ast.Call):
-            continue
-        name = _call_name(node)
-        if name in LEGACY_NAMES:
-            out.append(
-                f"{rel}:{node.lineno}: call to deprecated shim {name!r} — "
-                "route through solve(SelectionSpec(...)) / BatchedEngine.run"
-            )
-        elif name == "submit" and isinstance(node.func, ast.Attribute):
-            kwargs = {k.arg for k in node.keywords if k.arg}
-            if len(node.args) >= 2 or kwargs & LEGACY_SUBMIT_KWARGS:
-                out.append(
-                    f"{rel}:{node.lineno}: legacy submit(fn, budget, ...) "
-                    "form — submit a SelectionSpec instead"
-                )
-    return out
+if str(ROOT) not in sys.path:  # script runs with sys.path[0] = tools/
+    sys.path.insert(0, str(ROOT))
 
 
 def main() -> int:
-    failures: list[str] = []
-    n_files = 0
-    for tree in SCAN_TREES:
-        for path in sorted((ROOT / tree).rglob("*.py")):
-            n_files += 1
-            failures.extend(_violations(path))
-    print(f"shims-check: scanned {n_files} files under {', '.join(SCAN_TREES)}")
-    if failures:
-        for f in failures:
-            print(f"FAIL {f}", file=sys.stderr)
-        return 1
-    print("no internal caller uses the deprecated entry points")
-    return 0
+    from tools.lint.__main__ import main as lint_main
+
+    rc = lint_main(["--rules", "SHIMS"])
+    if rc == 0:
+        print("no internal caller uses the deprecated entry points")
+    return rc
 
 
 if __name__ == "__main__":

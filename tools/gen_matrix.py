@@ -26,11 +26,16 @@ import sys
 import numpy as np
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
+for _p in (str(ROOT), str(ROOT / "src")):  # script runs with sys.path[0] = tools/
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 README = ROOT / "README.md"
 BEGIN = "<!-- BEGIN GENERATED: function-backend-matrix (tools/gen_matrix.py) -->"
 END = "<!-- END GENERATED: function-backend-matrix -->"
 OPT_BEGIN = "<!-- BEGIN GENERATED: optimizer-registry (tools/gen_matrix.py) -->"
 OPT_END = "<!-- END GENERATED: optimizer-registry -->"
+LINT_BEGIN = "<!-- BEGIN GENERATED: lint-rules (tools/gen_matrix.py) -->"
+LINT_END = "<!-- END GENERATED: lint-rules -->"
 
 _N = 8  # tiny probe instances
 
@@ -212,6 +217,29 @@ def build_optimizer_table() -> str:
     return "\n".join(rows)
 
 
+def build_lint_table() -> str:
+    """The lint-rules table, probed from the LIVE ``tools.lint`` registry."""
+    from tools.lint import all_rules
+
+    rows = [
+        "| Rule | Engine | Scope | Invariant |",
+        "|---|---|---|---|",
+    ]
+    for rule in all_rules():
+        rows.append(
+            f"| `{rule.id}` | {rule.engine} | {rule.scope} | {rule.summary} |"
+        )
+    rows.append("")
+    rows.append(
+        "Probed from the `tools.lint` rule registry (`make lint`, part of "
+        "`make verify`).  Suppress a finding with "
+        "`# lint: ok(RULE-ID): reason` — trailing on a line for that line, "
+        "on a comment-only line for the whole file; each rule's invariant, "
+        "provenance, and suppression guidance is in docs/linting.md."
+    )
+    return "\n".join(rows)
+
+
 def _splice(text: str, begin: str, end: str, table: str) -> str:
     try:
         head, rest = text.split(begin, 1)
@@ -226,6 +254,14 @@ def render(readme_text: str, table: str, opt_table: str) -> str:
     return _splice(out, OPT_BEGIN, OPT_END, opt_table)
 
 
+def render_all(readme_text: str) -> str:
+    """README text with every generated region rebuilt from the live
+    registries (what ``--write`` writes and ``--check`` / the MATRIX lint
+    rule compare against)."""
+    out = render(readme_text, build_table(), build_optimizer_table())
+    return _splice(out, LINT_BEGIN, LINT_END, build_lint_table())
+
+
 def main(argv: list[str]) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     mode = ap.add_mutually_exclusive_group()
@@ -235,10 +271,8 @@ def main(argv: list[str]) -> int:
     )
     a = ap.parse_args(argv)
 
-    table = build_table()
-    opt_table = build_optimizer_table()
     current = README.read_text()
-    updated = render(current, table, opt_table)
+    updated = render_all(current)
     if a.write:
         README.write_text(updated)
         print("README.md matrix regenerated")
@@ -253,9 +287,11 @@ def main(argv: list[str]) -> int:
             return 1
         print("README.md matrix matches the registries")
         return 0
-    print(table)
+    print(build_table())
     print()
-    print(opt_table)
+    print(build_optimizer_table())
+    print()
+    print(build_lint_table())
     return 0
 
 

@@ -1,0 +1,52 @@
+"""repro-lint: static analysis enforcing the repo's bit-stability,
+lock-discipline, and trace-purity invariants.
+
+Run it with ``make lint`` or ``python -m tools.lint``; see
+``tools/lint/framework.py`` for the registry / pragma / baseline contract,
+``docs/linting.md`` for the rule reference.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+# The package is imported both as ``tools.lint`` (from the repo root) and by
+# scripts whose sys.path[0] is tools/; rules additionally import the library
+# under src/.  Pin both roots defensively so every entry point agrees.
+_ROOT = pathlib.Path(__file__).resolve().parents[2]
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from tools.lint.framework import (  # noqa: E402
+    RULES,
+    LintReport,
+    Rule,
+    Violation,
+    all_rules,
+    register_rule,
+    run_lint,
+)
+
+_REGISTERED = False
+
+
+def _ensure_registered() -> None:
+    """Import every rule module exactly once (registration side effect)."""
+    global _REGISTERED
+    if _REGISTERED:
+        return
+    _REGISTERED = True
+    from tools.lint import ast_rules  # noqa: F401
+    from tools.lint import jaxpr_audit  # noqa: F401
+
+
+__all__ = [
+    "RULES",
+    "LintReport",
+    "Rule",
+    "Violation",
+    "all_rules",
+    "register_rule",
+    "run_lint",
+]

@@ -1,0 +1,90 @@
+"""CLI driver: ``python -m tools.lint`` (= ``make lint``).
+
+    python -m tools.lint                      # all rules, committed baseline
+    python -m tools.lint --rules BITSTAB,LOCKDISC
+    python -m tools.lint --list               # rule table
+    python -m tools.lint --root /tmp/tree --rules WALLCLOCK --baseline none
+    python -m tools.lint --write-baseline     # record current violations
+
+Exit status: 0 when every non-baselined violation count is zero, 1
+otherwise.  Rules marked *rooted* (jaxpr audit, registry drift) only run
+against the real repo tree and are skipped under a custom ``--root``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from tools.lint.framework import (
+    DEFAULT_BASELINE,
+    ROOT,
+    run_lint,
+    write_baseline,
+)
+
+
+def _list_rules() -> int:
+    from tools.lint import all_rules
+
+    for rule in all_rules():
+        print(f"{rule.id:<10} [{rule.engine}] {rule.scope}")
+        print(f"{'':<10} {rule.summary}")
+        print(f"{'':<10} provenance: {rule.provenance}")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m tools.lint", description=__doc__)
+    ap.add_argument("--rules", default=None, help="comma-separated rule ids")
+    ap.add_argument("--list", action="store_true", help="print the rule table")
+    ap.add_argument("--root", default=None, help="tree to scan (default: repo)")
+    ap.add_argument(
+        "--baseline",
+        default=str(DEFAULT_BASELINE),
+        help="baseline json path, or 'none' to disable",
+    )
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="record every current violation into the baseline and exit 0",
+    )
+    a = ap.parse_args(argv)
+    if a.list:
+        return _list_rules()
+
+    rule_ids = [r.strip() for r in a.rules.split(",")] if a.rules else None
+    baseline = None if a.baseline.lower() == "none" else a.baseline
+    t0 = time.monotonic()
+    report = run_lint(root=a.root, rule_ids=rule_ids, baseline_path=baseline)
+
+    if a.write_baseline:
+        if baseline is None:
+            raise SystemExit("--write-baseline needs a baseline path")
+        write_baseline(
+            __import__("pathlib").Path(baseline),
+            report.fresh + report.baselined,
+        )
+        print(
+            f"lint: baseline rewritten with "
+            f"{len(report.fresh) + len(report.baselined)} entries"
+        )
+        return 0
+
+    for v in report.fresh:
+        print(f"FAIL {v.render()}", file=sys.stderr)
+    for v in report.baselined:
+        print(f"baselined {v.render()}")
+    if report.skipped_rules:
+        print(f"skipped (custom --root): {', '.join(report.skipped_rules)}")
+    root = a.root or ROOT
+    print(
+        f"lint: {len(report.ran_rules)} rules over {report.n_files} files "
+        f"({root}) in {time.monotonic() - t0:.1f}s — "
+        f"{len(report.fresh)} violations, {len(report.baselined)} baselined"
+    )
+    return 1 if report.failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

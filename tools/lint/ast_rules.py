@@ -1,0 +1,645 @@
+"""AST rules over the library source trees.
+
+Each rule fossilizes a hard-won fix from an earlier PR (provenance in the
+registration); see docs/linting.md for the full reference and suppression
+syntax.  All rules operate purely on parsed source — no imports, no
+execution — so they run against fixture trees in tests via ``--root``.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint.framework import LintContext, Violation, register_rule
+
+# ---------------------------------------------------------------------------
+# shared helpers
+
+
+def _call_name(node: ast.Call) -> str | None:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def _attr_root(node: ast.expr) -> str | None:
+    """The leftmost Name of an attribute chain (``np`` in ``np.random.x``)."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _module_aliases(tree: ast.Module, modules: set[str]) -> dict[str, str]:
+    """Names this file binds to any of ``modules`` via ``import`` — e.g.
+    ``{"time": "time", "t": "time"}`` for ``import time as t``."""
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                top = alias.name.split(".")[0]
+                if top in modules:
+                    out[alias.asname or top] = top
+    return out
+
+
+def _from_imports(tree: ast.Module, modules: set[str]) -> dict[str, str]:
+    """Names bound via ``from <module> import x [as y]`` — ``{y: module.x}``."""
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module:
+            top = node.module.split(".")[0]
+            if top in modules:
+                for alias in node.names:
+                    out[alias.asname or alias.name] = f"{top}.{alias.name}"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# BITSTAB — reduce-form contractions only, on every gains path
+
+
+_BITSTAB_TREES = (
+    "src/repro/core/functions",
+    "src/repro/core/info",
+    "src/repro/core/sources.py",
+    "src/repro/kernels/ref.py",
+)
+# beyond *gains* itself: the memoized-statistic update and the
+# SimilaritySource streaming contract are marginal-path too — a matmul there
+# re-introduces the same shape-dependent reduction order
+_BITSTAB_EXTRA = {"update", "col", "col_sums", "diag", "masked_rowmax"}
+_CONTRACTIONS = {"dot", "matmul", "einsum", "tensordot", "vdot"}
+
+
+def _gains_path(name: str) -> bool:
+    return "gains" in name or name in _BITSTAB_EXTRA
+
+
+@register_rule(
+    "BITSTAB",
+    engine="ast",
+    scope="core/functions, core/info, core/sources.py, kernels/ref.py",
+    summary=(
+        "no `@` / `jnp.dot` / `jnp.matmul` / `jnp.einsum` inside gains / "
+        "gains_at / marginal-path methods — reduce-form contractions only"
+    ),
+    provenance=(
+        "PR 2/3: XLA matvec reduction trees are shape- and batch-dependent, "
+        "so `@` in a gains path broke served-vs-sequential bit-identity; "
+        "every family was rewritten to `(A * m).sum(axis)` reduce form"
+    ),
+)
+def check_bitstab(ctx: LintContext) -> list[Violation]:
+    out: list[Violation] = []
+    for sf in ctx.files(*_BITSTAB_TREES):
+        seen: set[tuple[int, int]] = set()
+        for fn in ast.walk(sf.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not _gains_path(fn.name):
+                continue
+            for node in ast.walk(fn):
+                bad = None
+                if isinstance(node, ast.BinOp) and isinstance(
+                    node.op, ast.MatMult
+                ):
+                    bad = "`@` (matmul)"
+                elif (
+                    isinstance(node, ast.Call)
+                    and _call_name(node) in _CONTRACTIONS
+                ):
+                    bad = f"`{_call_name(node)}()`"
+                if bad is None:
+                    continue
+                key = (node.lineno, node.col_offset)
+                if key in seen:
+                    continue
+                seen.add(key)
+                out.append(
+                    Violation(
+                        "BITSTAB",
+                        sf.rel,
+                        node.lineno,
+                        f"{bad} in gains-path function {fn.name!r}: use the "
+                        "reduce form `(A * m).sum(axis)` — XLA contraction "
+                        "order is shape/batch dependent and breaks the "
+                        "bit-identity contract",
+                    )
+                )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# NEGMASK — dense gains_at overrides must route the masking hook
+
+
+_NEGMASK_TREES = ("src/repro/core", "src/repro/kernels")
+_HOOK_BASE = "SetFunction"
+_HOOK_FN = "_mask_negative_idxs"
+
+
+def _base_names(cls: ast.ClassDef) -> list[str]:
+    names = []
+    for b in cls.bases:
+        if isinstance(b, ast.Name):
+            names.append(b.id)
+        elif isinstance(b, ast.Attribute):
+            names.append(b.attr)
+    return names
+
+
+@register_rule(
+    "NEGMASK",
+    engine="ast",
+    scope="core/, kernels/",
+    summary=(
+        "every `gains_at` override must route the SetFunction "
+        "`__init_subclass__` NEG-INF masking hook (no hook-bypassing "
+        "classes or post-hoc assignments)"
+    ),
+    provenance=(
+        "PR 8: dense gains_at is a plain gather, so idx = -1 silently read "
+        "the LAST row and a padded order buffer could select a ghost of the "
+        "last candidate; the `__init_subclass__` hook NEG-INF-masks every "
+        "override exactly once"
+    ),
+)
+def check_negmask(ctx: LintContext) -> list[Violation]:
+    out: list[Violation] = []
+    files = ctx.files(*_NEGMASK_TREES)
+
+    # pass 1: the class graph across the scanned tree
+    bases: dict[str, list[str]] = {}
+    for sf in files:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ClassDef):
+                bases.setdefault(node.name, _base_names(node))
+
+    def descends(name: str, seen: frozenset[str] = frozenset()) -> bool:
+        if name == _HOOK_BASE:
+            return True
+        if name in seen:
+            return False
+        return any(
+            descends(b, seen | {name}) for b in bases.get(name, ())
+        )
+
+    # pass 2: overrides and post-hoc assignments
+    for sf in files:
+        class_stack: list[ast.ClassDef] = []
+
+        def visit(node, in_class: ast.ClassDef | None):
+            if isinstance(node, ast.ClassDef):
+                for child in node.body:
+                    visit(child, node)
+                return
+            if (
+                isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and node.name == "gains_at"
+                and in_class is not None
+                and not descends(in_class.name)
+            ):
+                out.append(
+                    Violation(
+                        "NEGMASK",
+                        sf.rel,
+                        node.lineno,
+                        f"class {in_class.name!r} overrides gains_at but "
+                        "does not descend from SetFunction — the "
+                        "__init_subclass__ NEG-INF masking hook will not "
+                        "wrap it and idx < 0 wraps pythonically",
+                    )
+                )
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if (
+                        isinstance(tgt, ast.Attribute)
+                        and tgt.attr == "gains_at"
+                        and not (
+                            isinstance(node.value, ast.Call)
+                            and _call_name(node.value) == _HOOK_FN
+                        )
+                    ):
+                        out.append(
+                            Violation(
+                                "NEGMASK",
+                                sf.rel,
+                                node.lineno,
+                                "post-hoc `<cls>.gains_at = ...` assignment "
+                                "bypasses the __init_subclass__ masking "
+                                "hook; define gains_at in a SetFunction "
+                                "subclass body (or wrap the value in "
+                                "_mask_negative_idxs)",
+                            )
+                        )
+            for child in ast.iter_child_nodes(node):
+                visit(child, in_class if not isinstance(node, ast.ClassDef) else None)
+
+        for top in sf.tree.body:
+            visit(top, None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# LOCKDISC — declared lock ownership, enforced
+
+
+_LOCKDISC_TREES = ("src/repro/launch",)
+_LOCK_FACTORIES = {"Lock", "RLock", "Condition"}
+_LOCKDISC_EXEMPT = {"__init__", "__post_init__", "__del__"}
+
+
+def _guarded_map(cls: ast.ClassDef):
+    """(map, lineno) from a literal ``_GUARDED_BY = {...}`` in the class
+    body, or (None, None).  Raises ValueError on a non-literal map."""
+    for node in cls.body:
+        if isinstance(node, ast.Assign) and any(
+            isinstance(t, ast.Name) and t.id == "_GUARDED_BY"
+            for t in node.targets
+        ):
+            value = ast.literal_eval(node.value)  # may raise ValueError
+            if not (
+                isinstance(value, dict)
+                and all(
+                    isinstance(k, str) and isinstance(v, str)
+                    for k, v in value.items()
+                )
+            ):
+                raise ValueError("_GUARDED_BY must be a {attr: lock} dict")
+            return value, node.lineno
+    return None, None
+
+
+def _self_lock_assignments(cls: ast.ClassDef) -> list[tuple[str, int]]:
+    """``self.<x> = threading.Lock()/RLock()/Condition()`` sites."""
+    out = []
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not (
+            isinstance(node.value, ast.Call)
+            and _call_name(node.value) in _LOCK_FACTORIES
+        ):
+            continue
+        for tgt in node.targets:
+            if (
+                isinstance(tgt, ast.Attribute)
+                and isinstance(tgt.value, ast.Name)
+                and tgt.value.id == "self"
+            ):
+                out.append((tgt.attr, node.lineno))
+    return out
+
+
+@register_rule(
+    "LOCKDISC",
+    engine="ast",
+    scope="launch/",
+    summary=(
+        "lock-bearing classes declare `_GUARDED_BY = {attr: lock}` and "
+        "guarded attributes are only touched inside `with self.<lock>` "
+        "(methods named `*_locked` assert the caller holds it)"
+    ),
+    provenance=(
+        "PR 6/9: async_serve's two-lock protocol (`_cv` guards queues + "
+        "futures ONLY; dispatch runs outside it) fixed head-of-line "
+        "blocking and a close() race that stranded futures — the protocol "
+        "is now machine-checked, not a docstring"
+    ),
+)
+def check_lockdisc(ctx: LintContext) -> list[Violation]:
+    out: list[Violation] = []
+    for sf in ctx.files(*_LOCKDISC_TREES):
+        for cls in ast.walk(sf.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            try:
+                guarded, _ = _guarded_map(cls)
+            except ValueError as e:
+                out.append(
+                    Violation(
+                        "LOCKDISC",
+                        sf.rel,
+                        cls.lineno,
+                        f"class {cls.name!r}: _GUARDED_BY is not a literal "
+                        f"{{attr: lock}} dict ({e})",
+                    )
+                )
+                continue
+            locks_made = _self_lock_assignments(cls)
+            if guarded is None:
+                if locks_made:
+                    attr, lineno = locks_made[0]
+                    out.append(
+                        Violation(
+                            "LOCKDISC",
+                            sf.rel,
+                            lineno,
+                            f"class {cls.name!r} creates a lock "
+                            f"(self.{attr}) but declares no _GUARDED_BY "
+                            "map — declare which attributes the lock "
+                            "guards",
+                        )
+                    )
+                continue
+            lock_names = set(guarded.values())
+            for meth in cls.body:
+                if not isinstance(
+                    meth, (ast.FunctionDef, ast.AsyncFunctionDef)
+                ):
+                    continue
+                if meth.name in _LOCKDISC_EXEMPT or meth.name.endswith(
+                    "_locked"
+                ):
+                    continue
+                _check_method(out, sf, cls, meth, guarded, lock_names)
+    return out
+
+
+def _check_method(out, sf, cls, meth, guarded, lock_names):
+    def visit(node, held: frozenset[str]):
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            acquired = set()
+            for item in node.items:
+                ce = item.context_expr
+                visit(ce, held)  # the lock expr itself runs unguarded
+                if item.optional_vars is not None:
+                    visit(item.optional_vars, held)
+                if (
+                    isinstance(ce, ast.Attribute)
+                    and isinstance(ce.value, ast.Name)
+                    and ce.value.id == "self"
+                    and ce.attr in lock_names
+                ):
+                    acquired.add(ce.attr)
+            inner = held | acquired
+            for stmt in node.body:
+                visit(stmt, inner)
+            return
+        if (
+            isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"
+            and node.attr in guarded
+            and guarded[node.attr] not in held
+        ):
+            out.append(
+                Violation(
+                    "LOCKDISC",
+                    sf.rel,
+                    node.lineno,
+                    f"{cls.name}.{meth.name} touches self.{node.attr} "
+                    f"outside `with self.{guarded[node.attr]}` (declared "
+                    f"in _GUARDED_BY); hold the lock, or suffix the "
+                    "method `_locked` if the caller holds it",
+                )
+            )
+        for child in ast.iter_child_nodes(node):
+            visit(child, held)
+
+    for stmt in meth.body:
+        visit(stmt, frozenset())
+
+
+# ---------------------------------------------------------------------------
+# TRACEPURE — no host-side impurity in traced-code trees
+
+
+_TRACEPURE_TREES = ("src/repro/core", "src/repro/kernels")
+_IMPURE_MODULES = {"time", "random", "threading"}
+_NUMPY_MODULES = {"numpy"}
+
+
+@register_rule(
+    "TRACEPURE",
+    engine="ast",
+    scope="core/, kernels/",
+    summary=(
+        "no `time.*` / `random.*` / `np.random.*` / `threading.*` calls in "
+        "code reachable from jit traces (jax.random is fine — it is "
+        "functional)"
+    ),
+    provenance=(
+        "PR 9: faults.check no-ops inside jax traces (trace_state_clean) "
+        "because host-side effects fired during tracing would be baked "
+        "into the jit cache — firing order, timing and randomness must "
+        "never depend on cache state"
+    ),
+)
+def check_tracepure(ctx: LintContext) -> list[Violation]:
+    out: list[Violation] = []
+    for sf in ctx.files(*_TRACEPURE_TREES):
+        aliases = _module_aliases(sf.tree, _IMPURE_MODULES)
+        np_aliases = _module_aliases(sf.tree, _NUMPY_MODULES)
+        from_names = _from_imports(sf.tree, _IMPURE_MODULES)
+        # `from numpy import random [as r]` binds the same hazard
+        for name, origin in _from_imports(sf.tree, _NUMPY_MODULES).items():
+            if origin == "numpy.random":
+                aliases[name] = "numpy.random"
+        if not aliases and not np_aliases and not from_names:
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Name) and f.id in from_names:
+                    out.append(
+                        Violation(
+                            "TRACEPURE",
+                            sf.rel,
+                            node.lineno,
+                            f"call to {from_names[f.id]} in a traced-code "
+                            "tree: host-side impurity would be baked into "
+                            "jit caches (use jax.random / hoist to launch/)",
+                        )
+                    )
+                    continue
+                root = _attr_root(f) if isinstance(f, ast.Attribute) else None
+                if root in aliases:
+                    out.append(
+                        Violation(
+                            "TRACEPURE",
+                            sf.rel,
+                            node.lineno,
+                            f"call into {aliases[root]!r} in a traced-code "
+                            "tree: host-side impurity would be baked into "
+                            "jit caches (use jax.random / hoist to launch/)",
+                        )
+                    )
+                    continue
+            if (
+                isinstance(node, ast.Attribute)
+                and node.attr == "random"
+                and isinstance(node.value, ast.Name)
+                and node.value.id in np_aliases
+            ):
+                out.append(
+                    Violation(
+                        "TRACEPURE",
+                        sf.rel,
+                        node.lineno,
+                        "np.random in a traced-code tree: stateful host "
+                        "RNG would make traced values depend on call "
+                        "order (use jax.random keys)",
+                    )
+                )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# WALLCLOCK — monotonic clocks for durations
+
+
+_WALLCLOCK_TREES = ("src/repro", "benchmarks", "tools", "examples")
+
+
+@register_rule(
+    "WALLCLOCK",
+    engine="ast",
+    scope="src/repro, benchmarks, tools, examples",
+    summary=(
+        "`time.time()` is banned — durations must use `time.monotonic()` / "
+        "`time.perf_counter()` (pragma the rare epoch-timestamp need)"
+    ),
+    provenance=(
+        "PR 10: dryrun.py timed compile/lower phases with time.time(), "
+        "which jumps under NTP slew — every latency figure in the serving "
+        "stack (queue_s / wave_s / backoff / breaker cooldowns) is "
+        "monotonic; this keeps it that way"
+    ),
+)
+def check_wallclock(ctx: LintContext) -> list[Violation]:
+    out: list[Violation] = []
+    for sf in ctx.files(*_WALLCLOCK_TREES):
+        aliases = _module_aliases(sf.tree, {"time"})
+        from_names = {
+            name
+            for name, origin in _from_imports(sf.tree, {"time"}).items()
+            if origin == "time.time"
+        }
+        if not aliases and not from_names:
+            continue
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            hit = (
+                isinstance(f, ast.Name) and f.id in from_names
+            ) or (
+                isinstance(f, ast.Attribute)
+                and f.attr == "time"
+                and isinstance(f.value, ast.Name)
+                and f.value.id in aliases
+            )
+            if hit:
+                out.append(
+                    Violation(
+                        "WALLCLOCK",
+                        sf.rel,
+                        node.lineno,
+                        "time.time() jumps under clock slew — use "
+                        "time.monotonic() for durations (pragma with a "
+                        "reason if you truly need an epoch timestamp)",
+                    )
+                )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SHIMS — no internal caller uses the deprecated entry points
+
+
+_SHIMS_TREES = ("src/repro", "benchmarks", "examples", "tools")
+_LEGACY_NAMES = {"maximize", "batched_maximize"}
+_LEGACY_SUBMIT_KWARGS = {
+    "budget",
+    "optimizer",
+    "stopIfZeroGain",
+    "stopIfNegativeGain",
+    "screen_k",
+}
+
+
+@register_rule(
+    "SHIMS",
+    engine="ast",
+    scope="src/repro, benchmarks, examples, tools",
+    summary=(
+        "no internal caller uses the deprecated entry points "
+        "(`maximize` / `batched_maximize` / legacy `submit(fn, budget, "
+        "...)`) — everything routes through SelectionSpec / solve()"
+    ),
+    provenance=(
+        "PR 5: the legacy entry points became DeprecationWarning shims "
+        "over the typed front door; internal use would make them "
+        "permanent (formerly tools/check_shims.py, now a registered rule)"
+    ),
+)
+def check_shims(ctx: LintContext) -> list[Violation]:
+    out: list[Violation] = []
+    for sf in ctx.files(*_SHIMS_TREES):
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _call_name(node)
+            if name in _LEGACY_NAMES:
+                out.append(
+                    Violation(
+                        "SHIMS",
+                        sf.rel,
+                        node.lineno,
+                        f"call to deprecated shim {name!r} — route through "
+                        "solve(SelectionSpec(...)) / BatchedEngine.run",
+                    )
+                )
+            elif name == "submit" and isinstance(node.func, ast.Attribute):
+                kwargs = {k.arg for k in node.keywords if k.arg}
+                if len(node.args) >= 2 or kwargs & _LEGACY_SUBMIT_KWARGS:
+                    out.append(
+                        Violation(
+                            "SHIMS",
+                            sf.rel,
+                            node.lineno,
+                            "legacy submit(fn, budget, ...) form — submit "
+                            "a SelectionSpec instead",
+                        )
+                    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MATRIX — the README's generated tables match the live registries
+
+
+@register_rule(
+    "MATRIX",
+    engine="registry",
+    scope="README.md vs the live registries",
+    summary=(
+        "the README's generated tables (function x backend matrix, "
+        "optimizer registry, lint rules) match the live registries "
+        "(`tools/gen_matrix.py --check` as a registered rule)"
+    ),
+    provenance=(
+        "PR 3/5: a hand-maintained coverage matrix goes stale the moment a "
+        "registration lands; the tables are generated from the live "
+        "plug-in points and drift fails the gate"
+    ),
+    rooted=True,
+)
+def check_matrix(ctx: LintContext) -> list[Violation]:
+    from tools import gen_matrix
+
+    current = gen_matrix.README.read_text()
+    if current != gen_matrix.render_all(current):
+        return [
+            Violation(
+                "MATRIX",
+                "README.md",
+                1,
+                "generated tables are stale — run "
+                "`PYTHONPATH=src python tools/gen_matrix.py --write`",
+            )
+        ]
+    return []

@@ -1,0 +1,258 @@
+"""repro-lint: the rule registry, pragma suppression, and baseline machinery.
+
+The repo's headline guarantee — one ``SelectionSpec`` is bit-identical
+(ids / gains / n_evals) across sequential, batched, sharded, served and
+async execution — rests on invariants that used to live only in prose
+(CHANGES.md NOTEs, docstrings).  This package turns each of them into a
+registered lint rule so a regression fails ``make lint`` (part of
+``make verify``) instead of silently corrupting selections:
+
+- AST rules scan the source trees named in their scope (see
+  ``tools/lint/ast_rules.py``);
+- the jaxpr auditor traces representative matrix-free programs and checks
+  structural invariants of the emitted jaxprs
+  (``tools/lint/jaxpr_audit.py``);
+- registry rules re-check generated artifacts against the live plug-in
+  registries (the README coverage matrix).
+
+Suppression — ``# lint: ok(RULE-ID): reason`` — comes in two scopes:
+
+- **trailing** (the pragma shares a line with code): suppresses that rule
+  on that line only;
+- **file-scoped** (the pragma is a comment-only line): suppresses that rule
+  for the whole file.
+
+A reason is mandatory; a pragma without one does not parse and suppresses
+nothing.
+
+The baseline (``tools/lint/baseline.json``) is a burn-down list: violations
+recorded there are reported but do not fail the run, so a new rule can land
+before every historical violation is fixed.  New violations always fail.
+The committed baseline is empty — keep it that way; it exists for
+transitions, not as a parking lot.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import re
+from typing import Callable, Iterable
+
+ROOT = pathlib.Path(__file__).resolve().parents[2]
+DEFAULT_BASELINE = pathlib.Path(__file__).resolve().parent / "baseline.json"
+
+_PRAGMA = re.compile(r"#\s*lint:\s*ok\(([A-Za-z0-9_\-]+)\)\s*:\s*(\S.*?)\s*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One rule finding.  ``path`` is root-relative (posix); jaxpr-audit
+    findings use ``<jaxpr:case-name>`` pseudo-paths (no file to point at)."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def key(self) -> str:
+        """Baseline identity: line numbers are deliberately excluded so an
+        unrelated edit above a baselined violation does not churn the file."""
+        return f"{self.rule}::{self.path}::{self.message}"
+
+    def render(self) -> str:
+        return f"{self.rule} {self.path}:{self.line}: {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """A registered check.  ``check(ctx)`` returns raw violations; the
+    framework applies pragma suppression and the baseline afterwards."""
+
+    id: str
+    engine: str  # "ast" | "jaxpr" | "registry"
+    scope: str  # human-readable tree description (docs + --list)
+    summary: str  # one-line invariant (the README rules table)
+    provenance: str  # which PR's hard-won fix this rule fossilizes
+    check: Callable[["LintContext"], list[Violation]]
+    rooted: bool = False  # True: only meaningful against the real repo tree
+
+
+RULES: dict[str, Rule] = {}
+
+
+def register_rule(
+    rule_id: str,
+    *,
+    engine: str,
+    scope: str,
+    summary: str,
+    provenance: str,
+    rooted: bool = False,
+):
+    """Decorator registering ``fn(ctx) -> list[Violation]`` as a rule."""
+
+    def deco(fn):
+        if rule_id in RULES:
+            raise ValueError(f"duplicate lint rule id {rule_id!r}")
+        RULES[rule_id] = Rule(
+            id=rule_id,
+            engine=engine,
+            scope=scope,
+            summary=summary,
+            provenance=provenance,
+            check=fn,
+            rooted=rooted,
+        )
+        return fn
+
+    return deco
+
+
+def all_rules() -> list[Rule]:
+    """Registration-ordered rule list (imports the rule modules)."""
+    from tools.lint import _ensure_registered
+
+    _ensure_registered()
+    return list(RULES.values())
+
+
+class SourceFile:
+    """One parsed python file plus its pragma index."""
+
+    def __init__(self, path: pathlib.Path, root: pathlib.Path):
+        self.path = path
+        self.rel = path.relative_to(root).as_posix()
+        self.text = path.read_text()
+        self.tree = ast.parse(self.text, filename=str(path))
+        self.file_pragmas: set[str] = set()
+        self.line_pragmas: dict[int, set[str]] = {}
+        for lineno, raw in enumerate(self.text.splitlines(), 1):
+            m = _PRAGMA.search(raw)
+            if not m:
+                continue
+            rule = m.group(1)
+            if raw.strip().startswith("#"):
+                self.file_pragmas.add(rule)  # comment-only line: whole file
+            else:
+                self.line_pragmas.setdefault(lineno, set()).add(rule)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        return rule in self.file_pragmas or rule in self.line_pragmas.get(
+            line, set()
+        )
+
+
+class LintContext:
+    """Parsed-file cache shared by every rule in a run."""
+
+    def __init__(self, root: pathlib.Path):
+        self.root = pathlib.Path(root).resolve()
+        self._cache: dict[pathlib.Path, SourceFile] = {}
+        self._by_rel: dict[str, SourceFile] = {}
+
+    def files(self, *trees: str) -> list[SourceFile]:
+        """Every ``*.py`` under the given root-relative trees (a tree may
+        also name a single file).  Missing trees yield nothing, so the same
+        rules run unchanged against fixture trees in tests."""
+        out: list[SourceFile] = []
+        for tree in trees:
+            base = self.root / tree
+            if base.is_file():
+                paths: Iterable[pathlib.Path] = [base]
+            elif base.is_dir():
+                paths = sorted(base.rglob("*.py"))
+            else:
+                continue
+            for path in paths:
+                sf = self._cache.get(path)
+                if sf is None:
+                    sf = self._cache[path] = SourceFile(path, self.root)
+                    self._by_rel[sf.rel] = sf
+                out.append(sf)
+        return out
+
+    def lookup(self, rel: str) -> SourceFile | None:
+        return self._by_rel.get(rel)
+
+    @property
+    def n_files(self) -> int:
+        return len(self._cache)
+
+
+@dataclasses.dataclass
+class LintReport:
+    fresh: list[Violation]
+    baselined: list[Violation]
+    skipped_rules: list[str]  # rooted rules skipped under a custom --root
+    ran_rules: list[str]
+    n_files: int
+
+    @property
+    def failed(self) -> bool:
+        return bool(self.fresh)
+
+
+def load_baseline(path: pathlib.Path | None) -> set[str]:
+    if path is None or not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    if not isinstance(data, list) or not all(isinstance(k, str) for k in data):
+        raise SystemExit(f"{path}: baseline must be a JSON list of keys")
+    return set(data)
+
+
+def write_baseline(path: pathlib.Path, violations: list[Violation]) -> None:
+    keys = sorted({v.key() for v in violations})
+    path.write_text(json.dumps(keys, indent=2) + "\n")
+
+
+def run_lint(
+    root: pathlib.Path | str | None = None,
+    rule_ids: list[str] | None = None,
+    baseline_path: pathlib.Path | str | None = DEFAULT_BASELINE,
+) -> LintReport:
+    """Run the selected rules (default: all) against ``root`` (default: the
+    repo).  Returns the report; the CLI in ``__main__`` owns printing and
+    exit codes, so tests can call this in-process."""
+    from tools.lint import _ensure_registered
+
+    _ensure_registered()
+    root = pathlib.Path(root).resolve() if root is not None else ROOT
+    ctx = LintContext(root)
+    at_root = root == ROOT
+    if rule_ids is None:
+        selected = list(RULES.values())
+    else:
+        unknown = [r for r in rule_ids if r not in RULES]
+        if unknown:
+            raise SystemExit(
+                f"unknown lint rule(s) {unknown}; known: {sorted(RULES)}"
+            )
+        selected = [RULES[r] for r in rule_ids]
+
+    baseline = load_baseline(
+        pathlib.Path(baseline_path) if baseline_path is not None else None
+    )
+    fresh: list[Violation] = []
+    baselined: list[Violation] = []
+    skipped: list[str] = []
+    ran: list[str] = []
+    for rule in selected:
+        if rule.rooted and not at_root:
+            skipped.append(rule.id)
+            continue
+        ran.append(rule.id)
+        for v in rule.check(ctx):
+            sf = ctx.lookup(v.path)
+            if sf is not None and sf.suppressed(v.rule, v.line):
+                continue
+            (baselined if v.key() in baseline else fresh).append(v)
+    return LintReport(
+        fresh=fresh,
+        baselined=baselined,
+        skipped_rules=skipped,
+        ran_rules=ran,
+        n_files=ctx.n_files,
+    )
